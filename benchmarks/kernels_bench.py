@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode
+(Python semantics — correctness, not speed), so the honest numbers are:
+(a) wall time of the XLA reference op (what the CPU fallback costs) and
+(b) the kernel's arithmetic model on the v5e target (MXU-bound bound).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+V5E_FLOPS = 197.0e12
+
+
+def _wall(fn, *args, reps=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench() -> List[Row]:
+    from repro.kernels import ref
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # gemm: 512^3 f32
+    a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    mm = jax.jit(ref.matmul)
+    us = _wall(mm, a, b)
+    flops = 2 * 512**3
+    rows.append(("kern.gemm512.ref_us", round(us, 1),
+                 f"v5e_mxu_bound_us={flops / V5E_FLOPS * 1e6:.2f}"))
+
+    # trsm 512x512 on 256 rhs
+    l = np.tril(rng.standard_normal((512, 512)).astype(np.float32) / 512)
+    np.fill_diagonal(l, 1.0)
+    bb = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    ts = jax.jit(lambda aa, cc: ref.trsm(aa, cc))
+    us = _wall(ts, jnp.asarray(l), bb)
+    rows.append(("kern.trsm512.ref_us", round(us, 1),
+                 f"v5e_bound_us={512 * 512 * 256 / V5E_FLOPS * 1e6:.2f}"))
+
+    # flash attention 1x8x1024x64 causal
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), jnp.float32)
+    at = jax.jit(lambda *xs: ref.attention(*xs, causal=True))
+    us = _wall(at, q, k, v)
+    aflops = 4 * 1 * 8 * 1024 * 1024 * 64 / 2
+    rows.append(("kern.attn1k.ref_us", round(us, 1),
+                 f"v5e_bound_us={aflops / V5E_FLOPS * 1e6:.2f}"))
+
+    # interpret-mode correctness spot check counts as the kernel row
+    from repro.kernels.gemm import gemm as pallas_gemm
+    out = pallas_gemm(a[:256, :256], b[:256, :256], bm=128, bk=128,
+                      bn=128, interpret=True)
+    err = float(jnp.max(jnp.abs(out - a[:256, :256] @ b[:256, :256])))
+    rows.append(("kern.gemm.pallas_interpret_maxerr", round(err, 6),
+                 "correctness via interpret mode"))
+    return rows

@@ -1,0 +1,80 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+prints one row per (arch x shape x mesh) cell with the three terms,
+dominant bottleneck and roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+ART_DIR = os.environ.get("DRYRUN_ART", "experiments/dryrun")
+
+
+def load_records(art_dir: str = ART_DIR) -> list:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def report(art_dir: str = ART_DIR) -> List[Row]:
+    rows: List[Row] = []
+    recs = load_records(art_dir)
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs)
+    rows.append(("roofline.cells_ok", n_ok, f"skip={n_skip} err={n_err}"))
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        name = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        dom = rl["dominant"]
+        rows.append((f"rl.{name}.frac", rl["roofline_fraction"],
+                     f"dom={dom} tc={rl['t_compute_s']:.4f} "
+                     f"tm={rl['t_memory_s']:.4f} "
+                     f"tx={rl['t_collective_s']:.4f}"))
+    return rows
+
+
+def markdown_table(art_dir: str = ART_DIR) -> str:
+    recs = [r for r in load_records(art_dir)]
+    lines = ["| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s)"
+             " | dominant | useful | roofline frac | fits HBM |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                         " — | — | — | skipped (quadratic attn @500k) |"
+                         " — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                         f" ERROR {r.get('error', '')[:60]} |" + " |" * 6)
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        tot = sum(mem.get(k, 0) for k in ("argument_size_in_bytes",
+                                          "temp_size_in_bytes",
+                                          "output_size_in_bytes"))
+        fits = "yes" if tot and tot / 1e9 < 16 else f"NO ({tot/1e9:.0f}G)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['t_compute_s']:.4f} | {rl['t_memory_s']:.4f} "
+            f"| {rl['t_collective_s']:.4f} | {rl['dominant']} "
+            f"| {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.3f} | {fits} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,60 @@
+"""Serving-state placement benchmark: the paper's Table 3/5 accounting
+applied to LM decode state (DESIGN.md §4).
+
+Measures, per policy, the real bytes moved between the host and device
+tiers while generating with a small LM, plus a GH200-modeled cost of
+that movement for a production-sized cache (qwen2.5-32b at 32k context,
+batch 128 — the decode_32k cell's cache).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def bench() -> List[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.memtier import GH200
+    from repro.models import get_config
+    from repro.models.registry import Model
+    from repro.train import Server, ServeConfig
+
+    cfg = get_config("mamba2_1_3b").reduced()
+    model = Model.from_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 16),
+                                0, cfg.vocab)
+    rows: List[Row] = []
+    moved = {}
+    for policy in ("dfu", "memcopy", "pinned"):
+        srv = Server(model, params,
+                     ServeConfig(max_len=80, offload_policy=policy,
+                                 cache_dtype=jnp.float32))
+        srv.generate(prompt, 32)
+        s = srv.stats
+        moved[policy] = s.bytes_host_to_dev + s.bytes_dev_to_host
+        rows.append((f"serve.{policy}.moved_MB",
+                     round(moved[policy] / 1e6, 2),
+                     f"migrations={s.migrations} reuses={s.cache_reuses}"))
+    rows.append(("serve.memcopy_vs_dfu_traffic",
+                 round(moved["memcopy"] / max(1, moved["dfu"]), 1),
+                 "per-token roundtrips vs one first-use migration"))
+
+    # production-scale projection: qwen2.5-32b decode_32k cache
+    big = get_config("qwen2_5_32b")
+    cache_bytes = (big.n_layers * 2 * big.n_kv_heads * big.head_dim
+                   * 32768 * 128 * 2)          # bf16, batch 128
+    link = GH200.link_bw
+    tokens = 1024
+    t_dfu = cache_bytes / GH200.effective_migrate_bw()
+    t_memcopy = 2 * cache_bytes * tokens / link
+    rows.append(("serve.proj32k.cache_GB", round(cache_bytes / 1e9, 1),
+                 "qwen2.5-32b kv cache @32k x128"))
+    rows.append(("serve.proj32k.dfu_move_s", round(t_dfu, 2),
+                 "one first-use migration"))
+    rows.append(("serve.proj32k.memcopy_move_s", round(t_memcopy, 1),
+                 f"2 transfers/token x {tokens} tokens"))
+    return rows

@@ -1,0 +1,220 @@
+"""One benchmark per paper table. Each function returns CSV-ready rows:
+(name, value, derived/paper-reference). Model numbers come from the
+calibrated GH200 memtier replay; where the paper printed a measured
+value, it is carried alongside for direct comparison.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+# ----------------------------------------------------------------------- #
+# Table 1: STREAM bandwidths (spec constants echoed + key ratios)          #
+# ----------------------------------------------------------------------- #
+def table1_stream() -> List[Row]:
+    from repro.memtier import GH200
+    g = GH200
+    rows = [
+        ("t1.cpu_lpddr_GBs", g.cpu_local_bw / 1e9, "paper=418.2"),
+        ("t1.cpu_hbm_GBs", g.cpu_remote_bw / 1e9, "paper=141.9"),
+        ("t1.gpu_hbm_GBs", g.gpu_local_bw / 1e9, "paper=3679.5"),
+        ("t1.gpu_lpddr_GBs", g.gpu_remote_bw / 1e9, "paper=610.4"),
+        ("t1.gpu_vs_cpu_hbm_ratio", g.gpu_local_bw / g.cpu_remote_bw,
+         "locality matters: ~26x"),
+    ]
+    return rows
+
+
+# ----------------------------------------------------------------------- #
+# Table 3: MuST 50-node policy comparison                                  #
+# ----------------------------------------------------------------------- #
+MUST_NONBLAS_S = 238.0     # paper: 2318.4 total - 2080 zgemm+ztrsm
+PARSEC_NONBLAS_S = 145.0   # paper: 415.1 total - 270.1 dgemm
+
+
+def _must_reports():
+    from repro.apps import lsms
+    from repro.memtier import GH200, replay_trace
+    trace = lsms.production_trace()
+    return replay_trace(trace, spec=GH200,
+                        policies=("cpu", "memcopy", "counter", "dfu"))
+
+
+def table3_must() -> List[Row]:
+    reps = _must_reports()
+    paper_total = {"cpu": 2318.4, "memcopy": 1098.0, "counter": 858.0,
+                   "dfu": 824.0}
+    rows = []
+    for p, r in reps.items():
+        total = r.total_s + MUST_NONBLAS_S
+        rows.append((f"t3.{p}.total_s", round(total, 1),
+                     f"paper={paper_total[p]}"))
+        rows.append((f"t3.{p}.movement_s", round(r.movement_s, 1),
+                     {"memcopy": "paper=291.7", "dfu": "paper=4.8"}.get(
+                         p, "")))
+    rows.append(("t3.dfu_speedup_vs_cpu",
+                 round((reps["cpu"].total_s + MUST_NONBLAS_S)
+                       / (reps["dfu"].total_s + MUST_NONBLAS_S), 2),
+                 "paper=2.8x"))
+    rows.append(("t3.dfu_mean_reuse", round(reps["dfu"].mean_reuse, 0),
+                 "paper~780 (per-matrix; ours counts block-level calls)"))
+    return rows
+
+
+# ----------------------------------------------------------------------- #
+# Table 4 / Figure 3: strong scaling 25..200 nodes                         #
+# ----------------------------------------------------------------------- #
+def table4_scaling() -> List[Row]:
+    from repro.apps import lsms
+    from repro.memtier import GH200, replay_trace
+    paper = {25: (4598.1, 1550.9), 50: (2318.4, 823.8),
+             75: (1842.6, 623.1), 100: (1192.2, 446.8),
+             150: (947.0, 357.5), 200: (None, 253.3)}
+    rows = []
+    for nodes, (p_cpu, p_dfu) in paper.items():
+        atoms = max(1, 5600 // nodes)
+        # replay a few atoms and scale linearly (atom solves independent)
+        probe = min(atoms, 8)
+        trace = lsms.production_trace(atoms_per_node=probe)
+        reps = replay_trace(trace, spec=GH200, policies=("cpu", "dfu"))
+        scale = atoms / probe
+        nonblas = MUST_NONBLAS_S * (50.0 / nodes)
+        cpu = reps["cpu"].total_s * scale + nonblas
+        dfu = reps["dfu"].total_s * scale + nonblas
+        rows.append((f"t4.n{nodes}.cpu_s", round(cpu, 1),
+                     f"paper={p_cpu}"))
+        rows.append((f"t4.n{nodes}.dfu_s", round(dfu, 1),
+                     f"paper={p_dfu}"))
+        if p_cpu:
+            rows.append((f"t4.n{nodes}.speedup", round(cpu / dfu, 2),
+                         f"paper={round(p_cpu / p_dfu, 2)}"))
+    return rows
+
+
+# ----------------------------------------------------------------------- #
+# Table 5: PARSEC single-node policy comparison                            #
+# ----------------------------------------------------------------------- #
+def table5_parsec() -> List[Row]:
+    from repro.apps import dft
+    from repro.memtier import GH200, replay_trace
+    trace = dft.production_trace()
+    reps = replay_trace(trace, spec=GH200,
+                        policies=("cpu", "memcopy", "counter", "dfu"))
+    paper_total = {"cpu": 415.1, "memcopy": 425.7, "counter": 470.0,
+                   "dfu": 220.3}
+    rows = []
+    for p, r in reps.items():
+        total = r.total_s + PARSEC_NONBLAS_S
+        rows.append((f"t5.{p}.total_s", round(total, 1),
+                     f"paper={paper_total[p]}"))
+    rows.append(("t5.memcopy.movement_s",
+                 round(reps["memcopy"].movement_s, 1), "paper=220.7"))
+    rows.append(("t5.dfu.movement_s",
+                 round(reps["dfu"].movement_s, 2), "paper=1.3"))
+    rows.append(("t5.dfu.dgemm_s",
+                 round(reps["dfu"].blas_device_s
+                       + reps["dfu"].blas_host_s, 1), "paper=29.1"))
+    rows.append(("t5.dfu_speedup_vs_cpu",
+                 round((reps["cpu"].total_s + PARSEC_NONBLAS_S)
+                       / (reps["dfu"].total_s + PARSEC_NONBLAS_S), 2),
+                 "paper=1.9x"))
+    return rows
+
+
+# ----------------------------------------------------------------------- #
+# Table 6: access-counter migration behaviour                              #
+# ----------------------------------------------------------------------- #
+def table6_counter() -> List[Row]:
+    from repro.core.trace import Trace
+    from repro.memtier import GH200, MemTierSimulator
+    cases = {
+        "1000^3": ((1000, 1000, 1000), ("device", "device", "device")),
+        "5000^3": ((5000, 5000, 5000), ("device", "device", "host")),
+        "20000^3": ((20000, 20000, 20000), ("device", "host", "host")),
+        "skinny": ((32, 2400, 93536), ("device", "host", "host")),
+    }
+    rows = []
+    for name, ((m, n, k), want) in cases.items():
+        t = Trace()
+        a = t.new_buffer(m * k * 8, "A")
+        b = t.new_buffer(k * n * 8, "B")
+        c = t.new_buffer(m * n * 8, "C")
+        for _ in range(5):
+            t.gemm("d", m, n, k, a, b, c)
+        sim = MemTierSimulator(GH200, policy="counter", threshold=0,
+                               seed=1)
+        sim.run(t)
+        got = tuple(sim.residency(x) for x in (a, b, c))
+        rows.append((f"t6.{name}.match_paper", float(got == want),
+                     f"A,B,C -> {','.join(got)} (paper: {','.join(want)})"))
+    return rows
+
+
+# ----------------------------------------------------------------------- #
+# Table 7: page-size impact                                                #
+# ----------------------------------------------------------------------- #
+def table7_pagesize() -> List[Row]:
+    """CPU dgemm on remote (HBM) memory under 4K vs 64K pages.
+
+    The model charges remote traffic at the measured bandwidths with the
+    64K penalty; compute-bound cases clip at chip FLOPs. Absolute paper
+    milliseconds carried for reference.
+    """
+    from repro.memtier import GH200, GH200_4K
+    rows = []
+    # passes = remote re-streaming factor of blocked dgemm: the square
+    # case re-reads tiles ~8x (small cache share per core); the skinny
+    # case streams the big panel once (each element reused M=32 times
+    # from cache within a pass)
+    workloads = {
+        "2000^3": (2.0 * 2000**3, 3 * 2000 * 2000 * 8, 8.0),
+        "skinny": (2.0 * 32 * 2400 * 93536, (32 * 93536 + 93536 * 2400
+                                             + 32 * 2400) * 8, 1.0),
+    }
+    for name, (flops, nbytes, passes) in workloads.items():
+        for spec, tag in ((GH200_4K, "4K"), (GH200, "64K")):
+            chip_flops = spec.cpu_flops / 2  # Table 7 is one 72c chip
+            remote = spec.cpu_remote_bw
+            if spec.page_size >= 64 * 1024:
+                remote /= spec.cpu_remote_64k_penalty
+            # blocked dgemm re-streams operands ~`passes` times remotely
+            t = max(flops / (chip_flops * 0.85),
+                    passes * nbytes / remote) * 1e3
+            paper = {("2000^3", "4K"): 5.3, ("2000^3", "64K"): 10.0,
+                     ("skinny", "4K"): 15.5, ("skinny", "64K"): 23.2}[
+                         (name, tag)]
+            rows.append((f"t7.cpu_hbm.{name}.{tag}_ms", round(t, 2),
+                         f"paper={paper}"))
+    return rows
+
+
+# ----------------------------------------------------------------------- #
+# Table 8: page-alignment impact on device kernels                         #
+# ----------------------------------------------------------------------- #
+def table8_alignment() -> List[Row]:
+    from repro.core.trace import Trace
+    from repro.memtier import GH200, MemTierSimulator
+    # Table 8 is an isolated cublasDgemm microbench: clean square shapes
+    # run at full cuBLAS efficiency (unlike the LU-stream calibration)
+    spec = GH200.with_(gpu_eff=(("gemm", 1.0),))
+    rows = []
+    for name, (m, n, k), paper_un, paper_al in (
+            ("2000^3", (2000, 2000, 2000), 0.39, 0.29),
+            ("skinny", (32, 2400, 93536), 0.94, 0.64)):
+        for aligned, paper in ((False, paper_un), (True, paper_al)):
+            t = Trace()
+            a = t.new_buffer(m * k * 8, "A")
+            b = t.new_buffer(k * n * 8, "B")
+            c = t.new_buffer(m * n * 8, "C")
+            t.gemm("d", m, n, k, a, b, c)
+            t.gemm("d", m, n, k, a, b, c)   # steady state (resident)
+            sim = MemTierSimulator(spec, policy="dfu", threshold=0,
+                                   aligned_alloc=aligned)
+            rep = sim.run(t)
+            t_ms = (rep.blas_device_s / 2) * 1e3   # steady-state per call
+            tag = "aligned" if aligned else "unaligned"
+            rows.append((f"t8.{name}.{tag}_ms", round(t_ms, 3),
+                         f"paper={paper}"))
+    return rows

@@ -1,0 +1,9 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+OUT = "experiments/perf"
+run_cell("qwen2_5_32b", "prefill_32k", False, out_dir=OUT, tag="A1_lastonly")
+run_cell("qwen2_5_32b", "train_4k", False, out_dir=OUT, tag="B2_vpce")
+run_cell("qwen2_5_32b", "train_4k", False, overrides={"pad_heads_to": 48}, out_dir=OUT, tag="B12_pad48_vpce")
+run_cell("granite_moe_1b_a400m", "train_4k", False, overrides={"attn_chunk_q": 512}, out_dir=OUT, tag="C1_chunk512")
+print("ITER1 DONE")

@@ -1,0 +1,11 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+OUT = "experiments/perf"
+# C2: granite with sort-based MoE dispatch (now default)
+run_cell("granite_moe_1b_a400m", "train_4k", False, out_dir=OUT, tag="C2_sortdisp")
+# A2: prefill with padded heads
+run_cell("qwen2_5_32b", "prefill_32k", False, overrides={"pad_heads_to": 48}, out_dir=OUT, tag="A2_pad48")
+# B3: pad48 + full remat (attack the memory term)
+run_cell("qwen2_5_32b", "train_4k", False, overrides={"pad_heads_to": 48}, remat="full", out_dir=OUT, tag="B3_pad48_full")
+print("ITER2 DONE")

@@ -1,0 +1,16 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+OUT = "experiments/perf"
+# A3: prefill pad48 + fresh-kv + chunked attention
+run_cell("qwen2_5_32b", "prefill_32k", False,
+         overrides={"pad_heads_to": 48, "prefill_fresh_kv": True,
+                    "attn_chunk_q": 2048}, out_dir=OUT, tag="A3_freshkv_chunk")
+# B4: pad48 + n_micro=8 (capacity fix without remat traffic)
+run_cell("qwen2_5_32b", "train_4k", False, overrides={"pad_heads_to": 48},
+         n_micro=8, out_dir=OUT, tag="B4_pad48_micro8")
+# B5: pad48 + chunked attention in train (flop+logit-traffic saving)
+run_cell("qwen2_5_32b", "train_4k", False,
+         overrides={"pad_heads_to": 48, "attn_chunk_q": 1024},
+         out_dir=OUT, tag="B5_pad48_chunk")
+print("ITER3 DONE")

@@ -1,0 +1,12 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+OUT = "experiments/perf"
+# sorted dispatch (now default) on the other MoE/hybrid cells
+run_cell("moonshot_v1_16b_a3b", "train_4k", False, out_dir=OUT, tag="D1_sortdisp")
+run_cell("jamba_1_5_large_398b", "train_4k", False, out_dir=OUT, tag="D2_sortdisp")
+run_cell("moonshot_v1_16b_a3b", "prefill_32k", False, out_dir=OUT, tag="D3_sortdisp")
+# ZeRO-1 optimizer sharding: capacity effect on the paper-rep cell
+run_cell("qwen2_5_32b", "train_4k", False, overrides={"pad_heads_to": 48},
+         zero=True, out_dir=OUT, tag="B6_pad48_zero")
+print("ITER4 DONE")

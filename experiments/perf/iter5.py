@@ -1,0 +1,7 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+OUT = "experiments/perf"
+run_cell("moonshot_v1_16b_a3b", "train_4k", False, moe_impl="a2a",
+         out_dir=OUT, tag="D4_a2a")
+print("ITER5 DONE")

@@ -1,0 +1,30 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import axis_env_for, build_cell
+from repro.models.registry import Model, get_config
+from repro.models.sharding import axis_env
+
+cfg0 = get_config("granite_moe_1b_a400m")
+mesh = make_production_mesh()
+def probe(tagged_cfg, label):
+    cfg, tag = tagged_cfg, label
+    model = Model.from_config(cfg)
+    with mesh, axis_env(axis_env_for(mesh)):
+        cell = build_cell(model, tag, "train_4k", mesh, unroll=True)
+        compiled = jax.jit(cell.fn, out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums).lower(*cell.args).compile()
+        c = compiled.cost_analysis()
+        print(f"{tag:24s} flops={c.get('flops',0):.3e} bytes={c.get('bytes accessed',0):.3e} trans={c.get('transcendentals',0):.3e}")
+        return c.get('flops', 0)
+
+base = probe(dataclasses.replace(cfg0, n_layers=1), "L1_base")
+f2 = probe(dataclasses.replace(cfg0, n_layers=2), "L2_base")
+print(f"per-layer slope: {f2-base:.3e}")
+# isolate: expert count 32 -> 4 (same top_k? top_k 8>4 invalid; use top_k 2, E 4)
+probe(dataclasses.replace(cfg0, n_layers=2, n_experts=4, top_k=2), "L2_tinymoe")
+# isolate: capacity factor 1.25 -> 0.25
+probe(dataclasses.replace(cfg0, n_layers=2, capacity_factor=0.25), "L2_lowcap")
+# isolate: chunked attention
+probe(dataclasses.replace(cfg0, n_layers=2, attn_chunk_q=512), "L2_chunk")

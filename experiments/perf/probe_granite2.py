@@ -1,0 +1,22 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import axis_env_for, build_cell
+from repro.models.registry import Model, get_config
+from repro.models.sharding import axis_env
+
+cfg0 = get_config("granite_moe_1b_a400m")
+mesh = make_production_mesh()
+def probe(cfg, tag):
+    model = Model.from_config(cfg)
+    with mesh, axis_env(axis_env_for(mesh)):
+        cell = build_cell(model, tag, "train_4k", mesh, unroll=True)
+        compiled = jax.jit(cell.fn, out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums).lower(*cell.args).compile()
+        c = compiled.cost_analysis()
+        print(f"{tag:24s} flops={c.get('flops',0):.3e} bytes={c.get('bytes accessed',0):.3e}")
+
+probe(dataclasses.replace(cfg0, n_layers=2, d_ff_expert=8), "L2_tinyff")   # dispatch only
+probe(dataclasses.replace(cfg0, n_layers=2, top_k=1), "L2_top1")           # k-scaling
+probe(dataclasses.replace(cfg0, n_layers=2, n_experts=8, top_k=8), "L2_e8k8")  # E-scaling

@@ -1,0 +1,11 @@
+"""Application proxies: the paper's two evaluation codes.
+
+``lsms`` (MuST) and ``dft`` (PARSEC) each provide (a) a *runnable* CPU
+mini-app whose BLAS stream flows through the interception layer, and (b)
+a *trace generator* reproducing the production-scale BLAS call structure
+(sizes, counts, buffer-reuse topology) for the memtier replay that backs
+the paper-table benchmarks.
+"""
+from repro.apps import dft, lsms
+
+__all__ = ["lsms", "dft"]

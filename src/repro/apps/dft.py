@@ -1,0 +1,107 @@
+"""PARSEC proxy (paper §4.3).
+
+PARSEC does real-space DFT: Chebyshev-filtered subspace iteration over a
+finite-difference Hamiltonian on ~93k grid points. The ScaLAPACK layer
+reduces to *extremely tall-skinny* dgemms — the paper's canonical shape
+is ``transA='T', M=32, N=2400, K=93536``: a 24 MB block of the wavefront
+against the 1.8 GB wavefunction panel, an operand mix that defeats both
+per-call Mem-Copy (Table 5: 220 s of cudaMemcpy) and the hardware
+access counter (Table 6: the 1.8 GB panel never migrates).
+
+``production_trace`` reproduces that stream for the Table 5 replay;
+``run_mini`` runs a real (downscaled) subspace iteration through the
+interception layer, with a Rayleigh-Ritz step whose eigenvalues are
+verifiable against dense numpy.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.trace import Trace
+
+# Production shape (paper §4.3 / Table 6 row 4)
+PROD = dict(ngrid=93536, nstates=2400, nblock=32, scf=2, filt_per_scf=9)
+
+
+def production_trace(ngrid: int = PROD["ngrid"],
+                     nstates: int = PROD["nstates"],
+                     nblock: int = PROD["nblock"],
+                     scf: int = PROD["scf"],
+                     filt_per_scf: int = PROD["filt_per_scf"]) -> Trace:
+    """Single-node PARSEC BLAS stream (Table 5 workload).
+
+    Per filter sweep, each of the nstates/nblock wavefront blocks hits
+    the resident wavefunction panel: dgemm^T (nblock x nstates x ngrid).
+    The panel buffer (1.8 GB) is reused by every call — the ~570x reuse
+    the paper measures — while block operands rotate through a small
+    working set.
+    """
+    t = Trace()
+    el = 8
+    psi = t.new_buffer(ngrid * nstates * el, "psi_panel")      # 1.8 GB
+    nblocks = max(1, nstates // nblock)
+    work = [t.new_buffer(ngrid * nblock * el, f"hpsi_blk{i}")  # 24 MB
+            for i in range(nblocks)]
+    outs = [t.new_buffer(nblock * nstates * el, f"s_blk{i}")   # 0.6 MB
+            for i in range(nblocks)]
+    for _ in range(scf):
+        for _f in range(filt_per_scf):
+            # one filter+Rayleigh-Ritz sweep touches every wavefront
+            # block against the resident panel
+            for blk in range(nblocks):
+                for _r in range(46):   # orthogonalization sub-iterations
+                    # S_blk = Hpsi_blk^T @ Psi  (M=32, N=2400, K=93536)
+                    t.gemm("d", nblock, nstates, ngrid,
+                           work[blk], psi, outs[blk])
+    return t
+
+
+# ----------------------------------------------------------------------- #
+# runnable mini-app                                                        #
+# ----------------------------------------------------------------------- #
+def run_mini(ngrid: int = 2048, nstates: int = 48, cheb_order: int = 10,
+             scf: int = 8, seed: int = 0) -> Dict[str, float]:
+    """Downscaled Chebyshev-filtered subspace iteration (CheFSI).
+
+    H = 1-D Laplacian + random potential (real spectrum). The filter
+    window [lo, hi] brackets the UNWANTED upper spectrum and adapts each
+    pass from the Ritz values, as in PARSEC. Verifies the converged Ritz
+    values against dense eigh.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    # finite-difference H: tridiagonal Laplacian + potential
+    pot = 0.5 * rng.standard_normal(ngrid)
+    h = (np.diag(2.0 + pot) + np.diag(-np.ones(ngrid - 1), 1)
+         + np.diag(-np.ones(ngrid - 1), -1))
+    hj = jnp.asarray(h)
+
+    psi = jnp.asarray(rng.standard_normal((ngrid, nstates)))
+    psi, _ = jnp.linalg.qr(psi)
+    hi = float(2.0 + np.max(pot) + 2.0) + 0.5    # Gershgorin upper bound
+
+    def rayleigh_ritz(p):
+        hpsi = jnp.matmul(hj, p)                  # (ngrid, nstates)
+        s = jnp.einsum("gi,gj->ij", p, hpsi)      # skinny^T x panel
+        evals, vecs = jnp.linalg.eigh((s + s.T) / 2.0)
+        return jnp.matmul(p, vecs), evals
+
+    psi, ritz = rayleigh_ritz(psi)                # bootstrap the window
+    for _ in range(scf):
+        lo = min(float(ritz[-1]) + 0.2, hi - 1.0)  # damp above block
+        c, e = (hi + lo) / 2.0, (hi - lo) / 2.0
+        t0 = psi
+        t1 = (jnp.matmul(hj, psi) - c * psi) / e
+        for _k in range(cheb_order - 1):
+            t0, t1 = t1, 2.0 * (jnp.matmul(hj, t1) - c * t1) / e - t0
+        psi, _ = jnp.linalg.qr(t1)
+        psi, ritz = rayleigh_ritz(psi)
+    exact = np.linalg.eigvalsh(h)[:nstates]
+    err = float(np.max(np.abs(np.asarray(ritz)[:nstates // 2]
+                              - exact[:nstates // 2])))
+    return {"ritz_min": float(ritz[0]), "exact_min": float(exact[0]),
+            "max_err_low_half": err}

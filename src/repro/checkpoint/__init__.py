@@ -1,0 +1,4 @@
+"""Checkpoint substrate."""
+from repro.checkpoint.store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

@@ -1,0 +1,20 @@
+"""SCILIB-Accel core: the paper's contribution as a composable JAX module.
+
+Public surface:
+
+* :mod:`repro.core.blas` — level-3 BLAS routines (dlsym-mode API).
+* :mod:`repro.core.intercept` — ``install``/``uninstall``/``offload``:
+  automatic interception of ``jnp.dot/matmul/einsum`` (DBI-mode).
+* :mod:`repro.core.lapack` — blocked LU/Cholesky drivers on that BLAS.
+* :mod:`repro.core.runtime` — the placement runtime + statistics.
+* :mod:`repro.core.policy` — Mem-Copy / counter / Device-First-Use /
+  pinned / cpu data-movement policies.
+"""
+from repro.core import blas, lapack
+from repro.core.intercept import install, offload, uninstall
+from repro.core.policy import host_array
+from repro.core.runtime import OffloadRuntime, active
+from repro.core.trace import BlasCall, Trace
+
+__all__ = ["blas", "lapack", "install", "offload", "uninstall",
+           "OffloadRuntime", "active", "BlasCall", "Trace", "host_array"]

@@ -1,0 +1,341 @@
+"""Level-3 BLAS surface in JAX (paper §3: "all level-3 BLAS routines").
+
+This is the dlsym-mode API: applications (or the interceptor) call these
+functions directly; each routes through the active ``OffloadRuntime`` for
+the offload decision, data placement and statistics, then executes
+jit-compiled arithmetic. Real BLAS semantics are honoured: ``uplo``
+triangles are the only parts of symmetric/triangular operands referenced,
+``beta`` scaling, unit diagonals, side selection, and conjugate
+transposes.
+
+Precision prefix follows dtype: s/d/c/z for f32/f64/c64/c128 (bf16 maps
+to the s-path on TPU). Leading batch dimensions select the batched
+variants (cublas*Batched analogues) with the same placement logic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import runtime as rt
+
+__all__ = ["gemm", "symm", "hemm", "syrk", "herk", "syr2k", "her2k",
+           "trmm", "trsm", "routine_name"]
+
+
+def routine_name(base: str, dtype) -> str:
+    dt = jnp.dtype(dtype)
+    prefix = {"float32": "s", "float64": "d", "complex64": "c",
+              "complex128": "z", "bfloat16": "s", "float16": "s"}.get(
+                  dt.name, "s")
+    return prefix + base
+
+
+def _op(x: jax.Array, trans: str) -> jax.Array:
+    if trans == "N":
+        return x
+    xt = jnp.swapaxes(x, -1, -2)
+    return jnp.conj(xt) if trans == "C" else xt
+
+
+def _tri_mask(n: int, uplo: str, dtype=bool) -> jax.Array:
+    r = jnp.arange(n)
+    mask = r[:, None] >= r[None, :] if uplo == "L" else r[:, None] <= r[None, :]
+    return mask
+
+
+def _tri_ref(a: jax.Array, uplo: str, diag: str = "N") -> jax.Array:
+    """The triangle of A that BLAS actually references."""
+    n = a.shape[-1]
+    t = jnp.tril(a) if uplo == "L" else jnp.triu(a)
+    if diag == "U":
+        eye = jnp.eye(n, dtype=a.dtype)
+        t = t - t * eye + eye  # force unit diagonal
+    return t
+
+
+def _sym_full(a: jax.Array, uplo: str, conj: bool = False) -> jax.Array:
+    """Materialize the full symmetric/hermitian matrix from one triangle."""
+    n = a.shape[-1]
+    tri = jnp.tril(a, -1) if uplo == "L" else jnp.triu(a, 1)
+    other = jnp.swapaxes(tri, -1, -2)
+    diag = jnp.diagonal(a, axis1=-2, axis2=-1)
+    if conj:
+        other = jnp.conj(other)
+        diag = jnp.real(diag).astype(a.dtype)  # hermitian diag is real
+    dmat = jnp.eye(n, dtype=a.dtype) * diag[..., :, None]
+    return tri + other + dmat
+
+
+def _batch_of(*arrays) -> int:
+    b = 1
+    for a in arrays:
+        if a is not None and a.ndim > 2:
+            b = int(functools.reduce(lambda x, y: x * y, a.shape[:-2], 1))
+    return b
+
+
+# ----------------------------------------------------------------------- #
+# jitted arithmetic (shape-cached by jax)                                  #
+# ----------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("trans_a", "trans_b", "has_c"))
+def _gemm_kernel(a, b, c, alpha, beta, *, trans_a, trans_b, has_c):
+    from repro.kernels import ops as kops
+    acc = kops.matmul(_op(a, trans_a), _op(b, trans_b))
+    out = alpha.astype(acc.dtype) * acc
+    if has_c:
+        out = out + beta.astype(acc.dtype) * c
+    return out.astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("side", "uplo", "conj", "has_c"))
+def _symm_kernel(a, b, c, alpha, beta, *, side, uplo, conj, has_c):
+    from repro.kernels import ops as kops
+    full = _sym_full(a, uplo, conj=conj)
+    acc = kops.matmul(full, b) if side == "L" else kops.matmul(b, full)
+    out = alpha.astype(acc.dtype) * acc
+    if has_c:
+        out = out + beta.astype(acc.dtype) * c
+    return out.astype(b.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("uplo", "trans", "conj", "has_c"))
+def _syrk_kernel(a, c, alpha, beta, *, uplo, trans, conj, has_c):
+    from repro.kernels import ops as kops
+    opa = _op(a, trans)
+    at = jnp.swapaxes(opa, -1, -2)
+    if conj:
+        at = jnp.conj(at)
+    acc = kops.matmul(opa, at)
+    upd = alpha.astype(acc.dtype) * acc
+    n = upd.shape[-1]
+    mask = _tri_mask(n, uplo)
+    if has_c:
+        tri = jnp.where(mask, upd + beta.astype(acc.dtype) * c, c)
+    else:
+        tri = jnp.where(mask, upd, jnp.zeros_like(upd))
+    return tri.astype(a.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("uplo", "trans", "conj", "has_c"))
+def _syr2k_kernel(a, b, c, alpha, beta, *, uplo, trans, conj, has_c):
+    from repro.kernels import ops as kops
+    opa, opb = _op(a, trans), _op(b, trans)
+    bt, at = jnp.swapaxes(opb, -1, -2), jnp.swapaxes(opa, -1, -2)
+    if conj:
+        # her2k: C := alpha A B^H + conj(alpha) B A^H + beta C
+        bt, at = jnp.conj(bt), jnp.conj(at)
+        al = alpha.astype(opa.dtype)
+        upd = al * kops.matmul(opa, bt) + jnp.conj(al) * kops.matmul(opb, at)
+    else:
+        acc = kops.matmul(opa, bt) + kops.matmul(opb, at)
+        upd = alpha.astype(acc.dtype) * acc
+    n = upd.shape[-1]
+    mask = _tri_mask(n, uplo)
+    if has_c:
+        tri = jnp.where(mask, upd + beta.astype(acc.dtype) * c, c)
+    else:
+        tri = jnp.where(mask, upd, jnp.zeros_like(upd))
+    return tri.astype(a.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("side", "uplo", "trans", "diag"))
+def _trmm_kernel(a, b, alpha, *, side, uplo, trans, diag):
+    from repro.kernels import ops as kops
+    tri = _tri_ref(a, uplo, diag)
+    tri = _op(tri, trans)
+    out = kops.matmul(tri, b) if side == "L" else kops.matmul(b, tri)
+    return (alpha.astype(out.dtype) * out).astype(b.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("side", "uplo", "trans", "diag"))
+def _trsm_kernel(a, b, alpha, *, side, uplo, trans, diag):
+    from repro.kernels import ops as kops
+    rhs = alpha.astype(b.dtype) * b
+    return kops.trsm(a, rhs, side=side, uplo=uplo, trans=trans,
+                     diag=diag).astype(b.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# public routines                                                          #
+# ----------------------------------------------------------------------- #
+def _dispatch(routine, m, n, k, operands, compute, batch=1):
+    runtime = rt.active()
+    if runtime is None:
+        return compute(*[x for _, x, _, _ in operands])
+    return runtime.blas_call(routine, m, n, k, operands, compute,
+                             batch=batch)
+
+
+def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
+         alpha=1.0, beta=0.0, trans_a: str = "N",
+         trans_b: str = "N") -> jax.Array:
+    """C := alpha op(A) op(B) + beta C (the paper's headline routine)."""
+    opm = a.shape[-2] if trans_a == "N" else a.shape[-1]
+    opk = a.shape[-1] if trans_a == "N" else a.shape[-2]
+    opn = b.shape[-1] if trans_b == "N" else b.shape[-2]
+    batch = _batch_of(a, b, c)
+    alpha_ = jnp.asarray(alpha, dtype=a.dtype)
+    beta_ = jnp.asarray(beta, dtype=a.dtype)
+    has_c = c is not None
+    c_in = c if has_c else jnp.zeros((), dtype=a.dtype)
+
+    def compute(a_, b_, c_=c_in):
+        return _gemm_kernel(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
+                            trans_b=trans_b, has_c=has_c)
+
+    ops = [("A", a, float(opn), False), ("B", b, float(opm), False)]
+    if has_c:
+        ops.append(("C", c, 1.0, True))
+
+        def compute(a_, b_, c_):
+            return _gemm_kernel(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
+                                trans_b=trans_b, has_c=True)
+
+    return _dispatch(routine_name("gemm", a.dtype), opm, opn, opk,
+                     ops, compute, batch)
+
+
+def symm(a, b, c=None, *, side="L", uplo="L", alpha=1.0, beta=0.0):
+    """C := alpha A B + beta C with A symmetric (one triangle referenced)."""
+    return _symm_like(a, b, c, side=side, uplo=uplo, alpha=alpha,
+                      beta=beta, conj=False, base="symm")
+
+
+def hemm(a, b, c=None, *, side="L", uplo="L", alpha=1.0, beta=0.0):
+    return _symm_like(a, b, c, side=side, uplo=uplo, alpha=alpha,
+                      beta=beta, conj=True, base="hemm")
+
+
+def _symm_like(a, b, c, *, side, uplo, alpha, beta, conj, base):
+    m, n = b.shape[-2], b.shape[-1]
+    batch = _batch_of(a, b, c)
+    alpha_ = jnp.asarray(alpha, dtype=b.dtype)
+    beta_ = jnp.asarray(beta, dtype=b.dtype)
+    has_c = c is not None
+    ops = [("A", a, float(n if side == "L" else m), False),
+           ("B", b, float(a.shape[-1]), False)]
+    if has_c:
+        ops.append(("C", c, 1.0, True))
+
+        def compute(a_, b_, c_):
+            return _symm_kernel(a_, b_, c_, alpha_, beta_, side=side,
+                                uplo=uplo, conj=conj, has_c=True)
+    else:
+        def compute(a_, b_):
+            return _symm_kernel(a_, b_, jnp.zeros((), b.dtype), alpha_,
+                                beta_, side=side, uplo=uplo, conj=conj,
+                                has_c=False)
+
+    return _dispatch(routine_name(base, b.dtype), a.shape[-1], n, 0,
+                     ops, compute, batch)
+
+
+def syrk(a, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
+    """C := alpha op(A) op(A)^T + beta C, triangle ``uplo`` only."""
+    return _syrk_like(a, c, uplo=uplo, trans=trans, alpha=alpha, beta=beta,
+                      conj=False, base="syrk")
+
+
+def herk(a, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
+    return _syrk_like(a, c, uplo=uplo, trans=trans, alpha=alpha, beta=beta,
+                      conj=True, base="herk")
+
+
+def _syrk_like(a, c, *, uplo, trans, alpha, beta, conj, base):
+    n = a.shape[-2] if trans == "N" else a.shape[-1]
+    k = a.shape[-1] if trans == "N" else a.shape[-2]
+    batch = _batch_of(a, c)
+    alpha_ = jnp.asarray(alpha, dtype=a.dtype)
+    beta_ = jnp.asarray(beta, dtype=a.dtype)
+    has_c = c is not None
+    ops = [("A", a, float(n), False)]
+    if has_c:
+        ops.append(("C", c, 1.0, True))
+
+        def compute(a_, c_):
+            return _syrk_kernel(a_, c_, alpha_, beta_, uplo=uplo,
+                                trans=trans, conj=conj, has_c=True)
+    else:
+        def compute(a_):
+            return _syrk_kernel(a_, jnp.zeros((), a.dtype), alpha_, beta_,
+                                uplo=uplo, trans=trans, conj=conj,
+                                has_c=False)
+
+    return _dispatch(routine_name(base, a.dtype), n, n, k, ops, compute,
+                     batch)
+
+
+def syr2k(a, b, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
+    return _syr2k_like(a, b, c, uplo=uplo, trans=trans, alpha=alpha,
+                       beta=beta, conj=False, base="syr2k")
+
+
+def her2k(a, b, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
+    return _syr2k_like(a, b, c, uplo=uplo, trans=trans, alpha=alpha,
+                       beta=beta, conj=True, base="her2k")
+
+
+def _syr2k_like(a, b, c, *, uplo, trans, alpha, beta, conj, base):
+    n = a.shape[-2] if trans == "N" else a.shape[-1]
+    k = a.shape[-1] if trans == "N" else a.shape[-2]
+    batch = _batch_of(a, b, c)
+    alpha_ = jnp.asarray(alpha, dtype=a.dtype)
+    beta_ = jnp.asarray(beta, dtype=a.dtype)
+    has_c = c is not None
+    ops = [("A", a, float(n), False), ("B", b, float(n), False)]
+    if has_c:
+        ops.append(("C", c, 1.0, True))
+
+        def compute(a_, b_, c_):
+            return _syr2k_kernel(a_, b_, c_, alpha_, beta_, uplo=uplo,
+                                 trans=trans, conj=conj, has_c=True)
+    else:
+        def compute(a_, b_):
+            return _syr2k_kernel(a_, b_, jnp.zeros((), a.dtype), alpha_,
+                                 beta_, uplo=uplo, trans=trans, conj=conj,
+                                 has_c=False)
+
+    return _dispatch(routine_name(base, a.dtype), n, n, k, ops, compute,
+                     batch)
+
+
+def trmm(a, b, *, side="L", uplo="L", trans="N", diag="N", alpha=1.0):
+    """B := alpha op(A) B (or B op(A)), A triangular."""
+    m, n = b.shape[-2], b.shape[-1]
+    batch = _batch_of(a, b)
+    alpha_ = jnp.asarray(alpha, dtype=b.dtype)
+
+    def compute(a_, b_):
+        return _trmm_kernel(a_, b_, alpha_, side=side, uplo=uplo,
+                            trans=trans, diag=diag)
+
+    tri_n = a.shape[-1]
+    ops = [("A", a, float(n if side == "L" else m), False),
+           ("B", b, float(tri_n), True)]
+    return _dispatch(routine_name("trmm", b.dtype), tri_n, n if side == "L"
+                     else m, 0, ops, compute, batch)
+
+
+def trsm(a, b, *, side="L", uplo="L", trans="N", diag="N", alpha=1.0):
+    """Solve op(A) X = alpha B (or X op(A) = alpha B), A triangular."""
+    m, n = b.shape[-2], b.shape[-1]
+    batch = _batch_of(a, b)
+    alpha_ = jnp.asarray(alpha, dtype=b.dtype)
+
+    def compute(a_, b_):
+        return _trsm_kernel(a_, b_, alpha_, side=side, uplo=uplo,
+                            trans=trans, diag=diag)
+
+    tri_n = a.shape[-1]
+    ops = [("A", a, float(n if side == "L" else m), False),
+           ("B", b, float(tri_n), True)]
+    return _dispatch(routine_name("trsm", b.dtype), tri_n,
+                     n if side == "L" else m, 0, ops, compute, batch)

@@ -1,0 +1,167 @@
+"""Symbol interception — the DBI / LD_PRELOAD analogue (paper §3.1).
+
+The paper patches BLAS symbols in an *unmodified CPU binary* with a
+trampoline that runs the offload wrapper. The JAX ecosystem's equivalent
+entry points are the public matmul symbols: ``jnp.dot``, ``jnp.matmul``,
+``jnp.einsum`` (NumPy-style application code calls these, not
+``repro.core.blas``). :func:`install` rebinds them to trampolines that
+route level-3-shaped calls through the offload runtime and fall through to
+the original for everything else — no caller changes, no re-"linking".
+
+Two usage modes mirror the paper's two library builds:
+
+* **DBI mode** (``install()``): patch the public symbols; works for any
+  caller importing ``jax.numpy`` — the analogue of ``scilib-dbi.so``.
+* **dlsym mode**: call ``repro.core.blas`` directly — the analogue of
+  ``scilib-dl.so``'s same-name wrappers (profiler-friendly, explicit).
+
+Inside jit traces the trampolines pass straight through to the original
+functions: placement is a runtime concept; traced code gets its offload
+decision statically from the ops layer.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blas
+from repro.core import runtime as rt
+
+_ORIG: Dict[str, callable] = {}
+
+
+def _is_eager_array(x) -> bool:
+    return isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer)
+
+
+def _blasable(*arrays) -> bool:
+    if rt.active() is None:
+        return False
+    for x in arrays:
+        if not _is_eager_array(x):
+            return False
+        if not (jnp.issubdtype(x.dtype, jnp.floating)
+                or jnp.issubdtype(x.dtype, jnp.complexfloating)):
+            return False
+    return True
+
+
+# --------------------------------------------------------------------- #
+# trampolines                                                            #
+# --------------------------------------------------------------------- #
+def _matmul(a, b, **kw):
+    if _blasable(a, b) and not kw and a.ndim >= 2 and b.ndim >= 2:
+        return blas.gemm(a, b)
+    if rt.active() is not None:
+        rt.active().stats.uninstrumented_calls += 1
+    return _ORIG["matmul"](a, b, **kw)
+
+
+def _dot(a, b, **kw):
+    if _blasable(a, b) and not kw and a.ndim == 2 and b.ndim == 2:
+        return blas.gemm(a, b)
+    if rt.active() is not None:
+        rt.active().stats.uninstrumented_calls += 1
+    return _ORIG["dot"](a, b, **kw)
+
+
+_GEMM_PATTERNS = None
+
+
+def _build_patterns():
+    """Einsum specs that are exactly a (possibly transposed) gemm."""
+    global _GEMM_PATTERNS
+    if _GEMM_PATTERNS is not None:
+        return _GEMM_PATTERNS
+    pats = {}
+    for ta in ("N", "T"):
+        for tb in ("N", "T"):
+            lhs_a = "ij" if ta == "N" else "ji"
+            lhs_b = "jk" if tb == "N" else "kj"
+            pats[f"{lhs_a},{lhs_b}->ik"] = (ta, tb)
+    _GEMM_PATTERNS = pats
+    return pats
+
+
+def _canon_spec(spec: str):
+    """Rename indices canonically: first lhs operand's indices become
+    i/j (in order of appearance across the full spec)."""
+    spec = spec.replace(" ", "")
+    if "->" not in spec or spec.count(",") != 1:
+        return None
+    lhs, out = spec.split("->")
+    a, b = lhs.split(",")
+    if len(a) != 2 or len(b) != 2 or len(out) != 2:
+        return None
+    # map: contraction index = the one shared between a and b
+    shared = set(a) & set(b)
+    if len(shared) != 1:
+        return None
+    j = shared.pop()
+    rest_a = [c for c in a if c != j]
+    rest_b = [c for c in b if c != j]
+    if len(rest_a) != 1 or len(rest_b) != 1:
+        return None
+    i, k = rest_a[0], rest_b[0]
+    if set(out) != {i, k} or out[0] != i:
+        return None
+    ren = {i: "i", j: "j", k: "k"}
+    return "".join(ren[c] for c in a) + "," + \
+        "".join(ren[c] for c in b) + "->ik"
+
+
+def _einsum(spec, *operands, **kw):
+    if (isinstance(spec, str) and len(operands) == 2
+            and _blasable(*operands) and not kw):
+        canon = _canon_spec(spec)
+        pats = _build_patterns()
+        if canon in pats:
+            ta, tb = pats[canon]
+            return blas.gemm(operands[0], operands[1],
+                             trans_a=ta, trans_b=tb)
+    if rt.active() is not None:
+        rt.active().stats.uninstrumented_calls += 1
+    return _ORIG["einsum"](spec, *operands, **kw)
+
+
+# --------------------------------------------------------------------- #
+# install / uninstall                                                    #
+# --------------------------------------------------------------------- #
+def install(policy: str = "dfu", threshold: Optional[float] = None,
+            record_trace: bool = True) -> rt.OffloadRuntime:
+    """Activate the runtime and patch the public symbols (.init_array)."""
+    runtime = rt.install(policy=policy, threshold=threshold,
+                         record_trace=record_trace)
+    if not _ORIG:
+        _ORIG["matmul"] = jnp.matmul
+        _ORIG["dot"] = jnp.dot
+        _ORIG["einsum"] = jnp.einsum
+        jnp.matmul = _matmul
+        jnp.dot = _dot
+        jnp.einsum = _einsum
+    return runtime
+
+
+def uninstall():
+    """Restore symbols and return final stats (.fini_array)."""
+    if _ORIG:
+        jnp.matmul = _ORIG.pop("matmul")
+        jnp.dot = _ORIG.pop("dot")
+        jnp.einsum = _ORIG.pop("einsum")
+    return rt.uninstall()
+
+
+@contextlib.contextmanager
+def offload(policy: str = "dfu", threshold: Optional[float] = None,
+            record_trace: bool = True):
+    """``with offload("dfu"): ...`` — scoped automatic BLAS offload."""
+    runtime = install(policy=policy, threshold=threshold,
+                      record_trace=record_trace)
+    try:
+        yield runtime
+    finally:
+        uninstall()

@@ -1,0 +1,199 @@
+"""Data-movement policies (paper §3.2) over real JAX memory kinds.
+
+The JAX adaptation of the paper's three strategies plus two controls.
+"Host tier" is ``memory_kind="pinned_host"``; "device tier" is
+``memory_kind="device"`` — on a real TPU these are host DRAM and HBM; on
+the CPU backend of this container they are distinct XLA memory spaces, so
+every ``device_put`` below is a *real* transfer, not a simulation.
+
+Buffer identity follows the source array object (the JAX analogue of the
+paper's virtual-address identity): placement is cached per buffer, so a
+matrix moved by Device First-Use stays device-resident for all later calls
+that pass the same array — that cache *is* the page table remap of Fig. 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+HOST_KIND = "pinned_host"
+DEVICE_KIND = "device"
+
+
+def _put(x: jax.Array, kind: str) -> jax.Array:
+    """Re-home a buffer to a memory tier (the move_pages() analogue)."""
+    sharding = x.sharding.with_memory_kind(kind)
+    return jax.device_put(x, sharding)
+
+
+def memory_kind_of(x: jax.Array) -> str:
+    try:
+        return x.sharding.memory_kind or DEVICE_KIND
+    except Exception:  # pragma: no cover - non-array leaves
+        return DEVICE_KIND
+
+
+def host_array(x) -> jax.Array:
+    """The malloc() analogue: materialize an array on the HOST tier.
+
+    Application inputs in the paper are CPU-first-touched; use this for
+    inputs so the offload policies have real movement to manage."""
+    import jax.numpy as jnp
+    x = jnp.asarray(x)
+    return _put(x, HOST_KIND)
+
+
+@dataclasses.dataclass
+class Placement:
+    """Outcome of placing one operand for one call."""
+
+    array: jax.Array
+    moved_bytes: int = 0
+    cache_hit: bool = False
+
+
+class PolicyBase:
+    """Interface: how operands reach the device tier and results return."""
+
+    name = "base"
+    #: whether outputs of offloaded calls are copied back to the host tier
+    copy_back = False
+    #: whether placements persist across calls (the reuse mechanism)
+    persistent = True
+
+    def place_operand(self, runtime, x: jax.Array) -> Placement:
+        raise NotImplementedError
+
+    def place_output(self, runtime, y: jax.Array) -> Placement:
+        """Offloaded compute produces device-tier outputs; policies decide
+        whether they stay (DFU) or bounce back to host (Mem-Copy)."""
+        if self.copy_back:
+            nbytes = y.nbytes
+            return Placement(_put(y, HOST_KIND), moved_bytes=nbytes)
+        return Placement(y)
+
+
+class MemCopyPolicy(PolicyBase):
+    """Strategy 1 (§3.2.1): stage in and out around *every* call."""
+
+    name = "memcopy"
+    copy_back = True
+    persistent = False
+
+    def place_operand(self, runtime, x):
+        if memory_kind_of(x) == DEVICE_KIND:
+            # even Mem-Copy tools skip the copy when data is already there
+            return Placement(x, cache_hit=True)
+        return Placement(_put(x, DEVICE_KIND), moved_bytes=x.nbytes)
+
+
+class DeviceFirstUsePolicy(PolicyBase):
+    """Strategy 3 (§3.2.3): the paper's contribution.
+
+    First device use migrates the buffer to the device tier and registers
+    the placement; every later use of the same buffer is a cache hit with
+    zero movement. Outputs are born device-resident and registered, so
+    chained calls (``C = A·B`` then ``E = D·C``) never touch the link.
+    """
+
+    name = "dfu"
+    copy_back = False
+    persistent = True
+
+    def place_operand(self, runtime, x):
+        cached = runtime.lookup_placement(x)
+        if cached is not None:
+            return Placement(cached, cache_hit=True)
+        if memory_kind_of(x) == DEVICE_KIND:
+            runtime.register_placement(x, x)
+            return Placement(x, cache_hit=False)
+        moved = _put(x, DEVICE_KIND)
+        runtime.register_placement(x, moved)
+        return Placement(moved, moved_bytes=x.nbytes)
+
+    def place_output(self, runtime, y):
+        runtime.register_placement(y, y)
+        return Placement(y)
+
+
+class CounterPolicy(PolicyBase):
+    """Strategy 2 (§3.2.2): model of the hardware access-counter migration.
+
+    Reproduces the size- and reuse-biased behaviour measured in Table 6
+    (rules R1-R4 of ``repro.memtier.simulator``): some operands never
+    migrate and are streamed from the host tier on every call — which is
+    why this policy loses to DFU in the paper's application tests.
+    """
+
+    name = "counter"
+    copy_back = False
+    persistent = True
+
+    reuse_min = 100.0
+    byte_budget = 3.4e9
+    c_small = 16e6
+
+    def place_operand(self, runtime, x, *, reads_per_elem: float = 1.0,
+                      written: bool = False, ai: float = 0.0,
+                      budget_used: int = 0) -> Placement:
+        cached = runtime.lookup_placement(x)
+        if cached is not None:
+            return Placement(cached, cache_hit=True)
+        if memory_kind_of(x) == DEVICE_KIND:
+            runtime.register_placement(x, x)
+            return Placement(x)
+        if written:
+            ok = x.nbytes <= self.c_small and ai >= 30.0
+        else:
+            ok = (reads_per_elem >= self.reuse_min
+                  and budget_used + x.nbytes <= self.byte_budget)
+        if not ok:
+            return Placement(x)         # stays host: remote-streamed reads
+        moved = _put(x, DEVICE_KIND)
+        runtime.register_placement(x, moved)
+        return Placement(moved, moved_bytes=x.nbytes)
+
+
+class PinnedDevicePolicy(PolicyBase):
+    """``numactl -m 1`` control: everything lives on the device tier."""
+
+    name = "pinned"
+    copy_back = False
+
+    def place_operand(self, runtime, x):
+        cached = runtime.lookup_placement(x)
+        if cached is not None:
+            return Placement(cached, cache_hit=True)
+        if memory_kind_of(x) == DEVICE_KIND:
+            runtime.register_placement(x, x)
+            return Placement(x)
+        moved = _put(x, DEVICE_KIND)
+        runtime.register_placement(x, moved)
+        return Placement(moved, moved_bytes=x.nbytes)
+
+
+class CpuOnlyPolicy(PolicyBase):
+    """Baseline: never offload (the paper's NVPL CPU runs)."""
+
+    name = "cpu"
+    copy_back = False
+    persistent = False
+
+    def place_operand(self, runtime, x):
+        return Placement(x)
+
+
+POLICY_CLASSES = {
+    p.name: p for p in (MemCopyPolicy, CounterPolicy, DeviceFirstUsePolicy,
+                        PinnedDevicePolicy, CpuOnlyPolicy)
+}
+
+
+def make_policy(name: str) -> PolicyBase:
+    try:
+        return POLICY_CLASSES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; choose from {sorted(POLICY_CLASSES)}")

@@ -1,0 +1,315 @@
+"""SCILIB-Accel offload runtime: the JAX re-implementation of paper §3.
+
+One ``OffloadRuntime`` owns
+
+* the **placement registry** — buffer identity -> device-tier placement.
+  This is the JAX analogue of the remapped page table (Fig. 2): the caller
+  keeps its handle, the physical home changes once, later uses are free.
+* the **offload decision** (threshold logic of §3.3),
+* the **statistics** the paper's ``.fini_array`` hook prints (per-routine
+  call/offload counts, bytes moved, wall time, reuse counts),
+* a **BLAS trace** so any run can be replayed through the memtier
+  simulator under calibrated GH200/TPU constants (Tables 3/5 methodology).
+
+The runtime is deliberately synchronous and eager: it manages *placement*,
+while the arithmetic itself is jit-compiled per shape by the ops layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import weakref
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import threshold as thr
+from repro.core.policy import (
+    DEVICE_KIND,
+    HOST_KIND,
+    CounterPolicy,
+    Placement,
+    PolicyBase,
+    make_policy,
+    memory_kind_of,
+)
+from repro.core.trace import Trace
+
+
+@dataclasses.dataclass
+class RoutineStats:
+    calls: int = 0
+    offloaded: int = 0
+    on_host: int = 0
+    seconds: float = 0.0
+    flops: float = 0.0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    # bytes streamed from the host tier without persisting (the coherent
+    # remote-read path of GH200; a transient copy on this container)
+    transient_bytes: int = 0
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    per_routine: Dict[str, RoutineStats] = dataclasses.field(
+        default_factory=dict)
+    uninstrumented_calls: int = 0
+
+    def routine(self, name: str) -> RoutineStats:
+        return self.per_routine.setdefault(name, RoutineStats())
+
+    @property
+    def total_moved_bytes(self) -> int:
+        return sum(r.bytes_in + r.bytes_out
+                   for r in self.per_routine.values())
+
+    def reuse_ratio(self) -> float:
+        hits = sum(r.cache_hits for r in self.per_routine.values())
+        miss = sum(r.cache_misses for r in self.per_routine.values())
+        return hits / max(1, miss)
+
+    def report(self) -> str:
+        lines = ["scilib-accel runtime report",
+                 f"{'routine':<10}{'calls':>8}{'offload':>9}{'host':>7}"
+                 f"{'sec':>10}{'GB moved':>10}{'reuse':>8}"]
+        for name, r in sorted(self.per_routine.items()):
+            gb = (r.bytes_in + r.bytes_out) / 1e9
+            reuse = r.cache_hits / max(1, r.cache_misses)
+            lines.append(f"{name:<10}{r.calls:>8}{r.offloaded:>9}"
+                         f"{r.on_host:>7}{r.seconds:>10.3f}{gb:>10.3f}"
+                         f"{reuse:>8.1f}")
+        lines.append(f"uninstrumented calls: {self.uninstrumented_calls}")
+        return "\n".join(lines)
+
+
+class OffloadRuntime:
+    """Placement + dispatch brain behind the intercepted BLAS surface."""
+
+    def __init__(self, *, policy: str = "dfu",
+                 threshold: Optional[float] = None,
+                 record_trace: bool = True):
+        policy = os.environ.get("SCILIB_POLICY", policy)
+        self.policy: PolicyBase = make_policy(policy)
+        self.threshold = thr.threshold_from_env(
+            thr.DEFAULT_THRESHOLD if threshold is None else threshold)
+        self.stats = RuntimeStats()
+        self.trace: Optional[Trace] = Trace() if record_trace else None
+        self.debug = int(os.environ.get("SCILIB_DEBUG", "0") or 0)
+        # placement registry: id(src) -> (weakref(src), placed_array)
+        self._placements: Dict[int, Tuple[weakref.ref, jax.Array]] = {}
+        # trace-buffer ids: id(arr) -> trace buffer id
+        self._trace_ids: Dict[int, Tuple[weakref.ref, int]] = {}
+        self._reuse_by_buffer: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # placement registry                                                  #
+    # ------------------------------------------------------------------ #
+    def lookup_placement(self, x: jax.Array) -> Optional[jax.Array]:
+        ent = self._placements.get(id(x))
+        if ent is None:
+            return None
+        ref, placed = ent
+        if ref() is None:       # stale id collision after GC
+            del self._placements[id(x)]
+            return None
+        return placed
+
+    def register_placement(self, src: jax.Array, placed: jax.Array) -> None:
+        key = id(src)
+
+        def _drop(_ref, key=key, self=self):
+            self._placements.pop(key, None)
+
+        self._placements[key] = (weakref.ref(src, _drop), placed)
+
+    def resident_bytes(self) -> int:
+        return sum(p.nbytes for _, p in self._placements.values())
+
+    # ------------------------------------------------------------------ #
+    # trace buffer identity                                               #
+    # ------------------------------------------------------------------ #
+    def _trace_id(self, x: jax.Array, name: str = "") -> int:
+        if self.trace is None:
+            return -1
+        ent = self._trace_ids.get(id(x))
+        if ent is not None and ent[0]() is not None:
+            return ent[1]
+        bid = self.trace.new_buffer(x.nbytes, name)
+        key = id(x)
+
+        def _drop(_ref, key=key, self=self):
+            self._trace_ids.pop(key, None)
+
+        self._trace_ids[key] = (weakref.ref(x, _drop), bid)
+        return bid
+
+    def alias_trace_id(self, src: jax.Array, dst: jax.Array) -> None:
+        """Source and its device placement are the same logical buffer."""
+        if self.trace is None or id(dst) in self._trace_ids:
+            return
+        ent = self._trace_ids.get(id(src))
+        if ent is None:
+            return
+        key = id(dst)
+
+        def _drop(_ref, key=key, self=self):
+            self._trace_ids.pop(key, None)
+
+        self._trace_ids[key] = (weakref.ref(dst, _drop), ent[1])
+
+    # ------------------------------------------------------------------ #
+    # the intercepted-call entry point                                    #
+    # ------------------------------------------------------------------ #
+    def blas_call(self, routine: str, m: int, n: int, k: int,
+                  operands: Sequence[Tuple[str, jax.Array, float, bool]],
+                  compute: Callable[..., jax.Array],
+                  batch: int = 1) -> jax.Array:
+        """Run one level-3 BLAS call under the active policy.
+
+        ``operands``: (role, array, device_reads_per_elem, written) — the
+        same metadata the memtier access-counter model consumes.
+        ``compute``: jit-compiled arithmetic taking the placed operand
+        arrays in order.
+        """
+        st = self.stats.routine(routine)
+        st.calls += 1
+        arrays = [op[1] for op in operands]
+
+        if any(isinstance(a, jax.core.Tracer) for a in arrays):
+            # Inside jit/grad tracing there is no runtime placement to do;
+            # the offload decision is static and the compute fn embeds it.
+            return compute(*arrays)
+
+        offload, nav = thr.should_offload(routine, m, n, k,
+                                          threshold=self.threshold,
+                                          batch=batch)
+        if self.policy.name == "cpu":
+            offload = False
+
+        t0 = time.perf_counter()
+        if not offload:
+            out = compute(*self._harmonize(arrays, st))
+            out.block_until_ready()
+            st.on_host += 1
+        else:
+            placed, budget_used = [], 0
+            ai = self._arith_intensity(routine, m, n, k, arrays, batch)
+            for (role, x, reads, written) in operands:
+                if isinstance(self.policy, CounterPolicy):
+                    p = self.policy.place_operand(
+                        self, x, reads_per_elem=reads, written=written,
+                        ai=ai, budget_used=budget_used)
+                else:
+                    p = self.policy.place_operand(self, x)
+                budget_used += p.moved_bytes
+                st.bytes_in += p.moved_bytes
+                st.cache_hits += int(p.cache_hit)
+                st.cache_misses += int(not p.cache_hit)
+                if p.cache_hit:
+                    self._count_reuse(x)
+                if p.moved_bytes or p.cache_hit:
+                    self.alias_trace_id(x, p.array)
+                placed.append(p.array)
+            out = compute(*self._harmonize(placed, st))
+            out_p = self.policy.place_output(self, out)
+            st.bytes_out += out_p.moved_bytes
+            out = out_p.array
+            out.block_until_ready()
+            st.offloaded += 1
+        st.seconds += time.perf_counter() - t0
+        self._record_trace(routine, m, n, k, operands, out, batch)
+        if self.debug >= 2:
+            print(f"[scilib] {routine} m={m} n={n} k={k} navg={nav:.0f} "
+                  f"{'offload' if offload else 'host'}")
+        return out
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _harmonize(arrays, st) -> list:
+        """Execution-space harmonization: XLA cannot mix memory spaces in
+        one op, so operands a policy left host-resident are streamed in
+        transiently (GH200's coherent remote read, made explicit). The
+        placement registry is untouched — residency stays host."""
+        from repro.core.policy import DEVICE_KIND, _put
+        out = []
+        for a in arrays:
+            if memory_kind_of(a) != DEVICE_KIND:
+                st.transient_bytes += a.nbytes
+                a = _put(a, DEVICE_KIND)
+            out.append(a)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _count_reuse(self, x: jax.Array) -> None:
+        ent = self._trace_ids.get(id(x))
+        if ent is not None:
+            bid = ent[1]
+            self._reuse_by_buffer[bid] = self._reuse_by_buffer.get(bid, 0) + 1
+
+    def mean_buffer_reuse(self) -> float:
+        if not self._reuse_by_buffer:
+            return 0.0
+        return sum(self._reuse_by_buffer.values()) / len(self._reuse_by_buffer)
+
+    @staticmethod
+    def _arith_intensity(routine, m, n, k, arrays, batch) -> float:
+        nbytes = sum(a.nbytes for a in arrays)
+        flops = {"gemm": 2.0 * m * n * k,
+                 "trsm": 1.0 * m * m * n,
+                 "trmm": 1.0 * m * m * n,
+                 "syrk": 1.0 * n * n * k,
+                 "herk": 1.0 * n * n * k,
+                 "symm": 2.0 * m * m * n,
+                 "hemm": 2.0 * m * m * n,
+                 "syr2k": 2.0 * n * n * k,
+                 "her2k": 2.0 * n * n * k}.get(routine.lstrip("sdcz"), 0.0)
+        return batch * flops / max(1, nbytes)
+
+    def _record_trace(self, routine, m, n, k, operands, out, batch) -> None:
+        if self.trace is None:
+            return
+        ops = []
+        for (role, x, reads, written) in operands:
+            bid = self._trace_id(x, role)
+            ops.append((role, bid, x.nbytes // max(1, batch), reads, written))
+        # the output aliases the written operand's logical buffer
+        for (role, x, reads, written) in operands:
+            if written:
+                self.alias_trace_id(x, out)
+                break
+        else:
+            self._trace_id(out, "OUT")
+        from repro.core.trace import BlasCall
+        self.trace.calls.append(BlasCall(
+            routine=routine, m=m, n=n, k=k, batch=batch,
+            operands=tuple(ops)))
+
+
+# --------------------------------------------------------------------- #
+# module-level active runtime (what LD_PRELOAD init/fini manage in C)    #
+# --------------------------------------------------------------------- #
+_ACTIVE: Optional[OffloadRuntime] = None
+
+
+def install(policy: str = "dfu", threshold: Optional[float] = None,
+            record_trace: bool = True) -> OffloadRuntime:
+    """`.init_array` analogue: create and activate the global runtime."""
+    global _ACTIVE
+    _ACTIVE = OffloadRuntime(policy=policy, threshold=threshold,
+                             record_trace=record_trace)
+    return _ACTIVE
+
+
+def uninstall() -> Optional[RuntimeStats]:
+    """`.fini_array` analogue: deactivate and return final statistics."""
+    global _ACTIVE
+    rt, _ACTIVE = _ACTIVE, None
+    return rt.stats if rt else None
+
+
+def active() -> Optional[OffloadRuntime]:
+    return _ACTIVE

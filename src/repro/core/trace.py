@@ -1,0 +1,181 @@
+"""BLAS call traces (paper §3: what the interceptor sees).
+
+A trace is the sequence of level-3 BLAS invocations an application makes,
+with operand identities (so reuse is visible) but no array payloads. The
+interception layer records traces; the memtier simulator replays them under
+different data-movement policies with calibrated hardware constants — the
+methodology behind Tables 3 and 5 of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterator, List, Optional, Tuple
+
+# FLOP multipliers: complex arithmetic costs 4 real mul + 4 real add per
+# complex multiply-add -> 4x the real FLOP count at equal dimensions.
+_COMPLEX = {"c": 4.0, "z": 4.0, "s": 1.0, "d": 1.0}
+_ELEM = {"s": 4, "d": 8, "c": 8, "z": 16}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlasCall:
+    """One level-3 BLAS invocation.
+
+    ``operands`` maps role -> (buffer_id, bytes, reads_per_elem, written):
+    the per-element device read multiplicity drives the access-counter
+    model, ``written`` marks output operands (matrix C, or B for trsm/trmm).
+    """
+
+    routine: str                     # e.g. "zgemm", "dtrsm"
+    m: int
+    n: int
+    k: int                           # 0 where not applicable
+    operands: Tuple[Tuple[str, int, int, float, bool], ...]
+    # each: (role, buffer_id, nbytes, reads_per_elem, written)
+    batch: int = 1
+
+    # ------------------------------------------------------------------ #
+    @property
+    def precision(self) -> str:
+        return self.routine[0]
+
+    @property
+    def flops(self) -> float:
+        """Real-FLOP count (paper's convention for speedup accounting)."""
+        mult = _COMPLEX[self.precision] * self.batch
+        base = self.routine[1:]
+        m, n, k = self.m, self.n, self.k
+        if base == "gemm":
+            return mult * 2.0 * m * n * k
+        if base in ("trsm", "trmm"):
+            return mult * 1.0 * m * m * n  # side='L'; side='R' callers swap
+        if base in ("syrk", "herk"):
+            return mult * 1.0 * n * n * k
+        if base in ("syr2k", "her2k"):
+            return mult * 2.0 * n * n * k
+        if base in ("symm", "hemm"):
+            return mult * 2.0 * m * m * n
+        if base == "getf2":       # unblocked panel LU (rank-1 updates)
+            return mult * 1.0 * m * n * n
+        raise ValueError(f"unknown routine {self.routine}")
+
+    @property
+    def bytes_touched(self) -> int:
+        return self.batch * sum(nb for _, _, nb, _, _ in self.operands)
+
+    @property
+    def n_avg(self) -> float:
+        """Routine-dependent mean dimension (paper §3.3)."""
+        m, n, k = max(1, self.m), max(1, self.n), max(1, self.k)
+        base = self.routine[1:]
+        if base == "gemm":
+            return float((m * n * k) ** (1.0 / 3.0))
+        if base in ("trsm", "trmm", "symm", "hemm"):
+            return float((m * m * n) ** (1.0 / 3.0))
+        if base in ("syrk", "herk", "syr2k", "her2k"):
+            return float((n * n * k) ** (1.0 / 3.0))
+        return float((m * n * max(k, 1)) ** (1.0 / 3.0))
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class Trace:
+    """Append-only BLAS trace with named buffer registry."""
+
+    def __init__(self) -> None:
+        self.calls: List[BlasCall] = []
+        self.buffer_sizes: Dict[int, int] = {}
+        self.buffer_names: Dict[int, str] = {}
+        self._next_buf = 1
+
+    # ------------------------------------------------------------------ #
+    def new_buffer(self, nbytes: int, name: str = "") -> int:
+        bid = self._next_buf
+        self._next_buf += 1
+        self.buffer_sizes[bid] = int(nbytes)
+        self.buffer_names[bid] = name or f"buf{bid}"
+        return bid
+
+    def gemm(self, prec: str, m: int, n: int, k: int,
+             a: int, b: int, c: int, batch: int = 1) -> None:
+        el = _ELEM[prec]
+        self.calls.append(BlasCall(
+            routine=f"{prec}gemm", m=m, n=n, k=k, batch=batch,
+            operands=(
+                ("A", a, m * k * el, float(n), False),
+                ("B", b, k * n * el, float(m), False),
+                ("C", c, m * n * el, 1.0, True),
+            )))
+
+    def trsm(self, prec: str, m: int, n: int,
+             a: int, b: int, batch: int = 1) -> None:
+        el = _ELEM[prec]
+        self.calls.append(BlasCall(
+            routine=f"{prec}trsm", m=m, n=n, k=0, batch=batch,
+            operands=(
+                ("A", a, m * m * el, float(n), False),
+                ("B", b, m * n * el, float(m), True),
+            )))
+
+    def syrk(self, prec: str, n: int, k: int,
+             a: int, c: int, batch: int = 1) -> None:
+        el = _ELEM[prec]
+        self.calls.append(BlasCall(
+            routine=f"{prec}syrk", m=n, n=n, k=k, batch=batch,
+            operands=(
+                ("A", a, n * k * el, float(n), False),
+                ("C", c, n * n * el, 1.0, True),
+            )))
+
+    def panel(self, prec: str, m: int, nb: int, a: int) -> None:
+        """Unblocked LU panel factorization (getf2) — host-only work."""
+        el = _ELEM[prec]
+        self.calls.append(BlasCall(
+            routine=f"{prec}getf2", m=m, n=nb, k=0,
+            operands=(("P", a, m * nb * el, float(nb), True),)))
+
+    def symm(self, prec: str, m: int, n: int,
+             a: int, b: int, c: int, batch: int = 1) -> None:
+        el = _ELEM[prec]
+        self.calls.append(BlasCall(
+            routine=f"{prec}symm", m=m, n=n, k=0, batch=batch,
+            operands=(
+                ("A", a, m * m * el, float(n), False),
+                ("B", b, m * n * el, float(m), False),
+                ("C", c, m * n * el, 1.0, True),
+            )))
+
+    # ------------------------------------------------------------------ #
+    def __iter__(self) -> Iterator[BlasCall]:
+        return iter(self.calls)
+
+    def __len__(self) -> int:
+        return len(self.calls)
+
+    @property
+    def total_flops(self) -> float:
+        return sum(c.flops for c in self.calls)
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({
+                "buffers": {str(k): [v, self.buffer_names[k]]
+                            for k, v in self.buffer_sizes.items()},
+                "calls": [c.to_json() for c in self.calls],
+            }, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            raw = json.load(f)
+        t = cls()
+        for k, (size, name) in raw["buffers"].items():
+            t.buffer_sizes[int(k)] = size
+            t.buffer_names[int(k)] = name
+            t._next_buf = max(t._next_buf, int(k) + 1)
+        for c in raw["calls"]:
+            c["operands"] = tuple(tuple(o) for o in c["operands"])
+            t.calls.append(BlasCall(**c))
+        return t

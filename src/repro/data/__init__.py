@@ -1,0 +1,4 @@
+"""Data substrate."""
+from repro.data.pipeline import DataConfig, TokenPipeline
+
+__all__ = ["DataConfig", "TokenPipeline"]

@@ -1,0 +1,78 @@
+"""Deterministic, shardable, exactly-resumable token pipeline.
+
+The batch for (step, shard) is a pure function of the seed — no iterator
+state exists, so checkpoint/restart only needs the step counter, restarts
+are bit-exact, elastic re-sharding is free (a new mesh just changes the
+shard->host mapping of the same pure function), and stragglers can't skew
+the data order. This is the fault-tolerance-first design used by the
+large training systems this framework targets; a file-backed corpus
+plugs in through the same (step, shard) -> tokens interface.
+
+Synthetic text is Zipf-distributed token ids with document boundaries
+(EOS every ~doc_len tokens), enough structure for a ~100M-param example
+run to show a real loss curve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    doc_len: int = 512
+    zipf_a: float = 1.2
+    eos_id: int = 0
+
+
+class TokenPipeline:
+    """(step, shard) -> {"tokens", "labels"} with shard = data-slice id."""
+
+    def __init__(self, cfg: DataConfig, num_shards: int = 1):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.num_shards = num_shards
+        self.shard_batch = cfg.global_batch // num_shards
+        # Zipf CDF once (numpy; host-side)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        w = ranks ** (-cfg.zipf_a)
+        self._cdf = jnp.asarray(np.cumsum(w) / w.sum(), jnp.float32)
+
+    # ------------------------------------------------------------------ #
+    def batch(self, step: int, shard: int = 0) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(cfg.seed),
+            np.uint32(step) * np.uint32(self.num_shards) + np.uint32(shard))
+        shape = (self.shard_batch, cfg.seq_len + 1)
+        u = jax.random.uniform(key, shape)
+        toks = jnp.searchsorted(self._cdf, u).astype(jnp.int32)
+        toks = jnp.clip(toks, 0, cfg.vocab - 1)
+        # document boundaries: eos roughly every doc_len positions
+        kb = jax.random.fold_in(key, 7)
+        eos_mask = jax.random.uniform(kb, shape) < (1.0 / cfg.doc_len)
+        toks = jnp.where(eos_mask, cfg.eos_id, toks)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def global_batch(self, step: int) -> Dict[str, jax.Array]:
+        """All shards concatenated (single-host testing convenience)."""
+        parts = [self.batch(step, s) for s in range(self.num_shards)]
+        return {k: jnp.concatenate([p[k] for p in parts], axis=0)
+                for k in parts[0]}
+
+    # ------------------------------------------------------------------ #
+    def iter_from(self, step: int, shard: int = 0
+                  ) -> Iterator[Dict[str, jax.Array]]:
+        """Resume-from-step iterator (what restart uses)."""
+        s = step
+        while True:
+            yield self.batch(s, shard)
+            s += 1

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+``gemm``/``trsm``/``syrk`` are the level-3 BLAS bodies SCILIB-Accel
+offloads; ``attention`` is the LM-framework hot spot. ``ops`` is the
+dispatch wrapper (Pallas on TPU, XLA reference elsewhere); ``ref`` holds
+the pure-jnp oracles every kernel is tested against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

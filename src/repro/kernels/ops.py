@@ -1,0 +1,130 @@
+"""Dispatch layer: Pallas kernels on TPU, XLA reference elsewhere.
+
+``matmul``/``trsm``/``attention`` are what the BLAS surface and the model
+stack call. Backend selection:
+
+* TPU backend -> Pallas kernels (compiled), except dtypes the MXU lacks.
+* CPU backend -> XLA reference by default (the Pallas kernels are TPU
+  programs; they execute on CPU only under ``interpret=True``, which is
+  for correctness tests, not speed). Set ``SCILIB_PALLAS=1`` to force the
+  interpreted kernels everywhere (used by the test suite).
+
+Precision mapping for the TPU target (DESIGN.md): BLAS ``s/c`` run native
+(f32/c64 — complex decomposes onto real MXU gemms); ``d/z`` have no MXU
+equivalent and stay on the XLA path (host BLAS in the offload picture).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.gemm import gemm as pallas_gemm
+from repro.kernels.syrk import syrk as pallas_syrk
+from repro.kernels.trsm import trsm as pallas_trsm
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def use_pallas() -> bool:
+    env = os.environ.get("SCILIB_PALLAS", "")
+    if env == "1":
+        return True
+    if env == "0":
+        return False
+    return _backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return _backend() != "tpu"
+
+
+def _mxu_dtype(dtype) -> bool:
+    return jnp.dtype(dtype) in (jnp.dtype(jnp.float32),
+                                jnp.dtype(jnp.bfloat16),
+                                jnp.dtype(jnp.float16),
+                                jnp.dtype(jnp.float64))
+    # f64 allowed only under interpret (CPU); the TPU check is below.
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B. Complex decomposes into real Pallas GEMMs (zgemm on the
+    MXU via its real/imaginary planes — 4M algorithm)."""
+    if not use_pallas():
+        return ref.matmul(a, b)
+    interp = _interpret()
+    if jnp.issubdtype(a.dtype, jnp.complexfloating):
+        ar, ai = jnp.real(a), jnp.imag(a)
+        br, bi = jnp.real(b), jnp.imag(b)
+        f = functools.partial(_mm2d, interpret=interp)
+        rr = _batched(f, ar, br)
+        ii = _batched(f, ai, bi)
+        ri = _batched(f, ar, bi)
+        ir = _batched(f, ai, br)
+        return jax.lax.complex(rr - ii, ri + ir).astype(a.dtype)
+    if a.dtype == jnp.float64 and not interp:
+        return ref.matmul(a, b)      # no f64 MXU path
+    return _batched(functools.partial(_mm2d, interpret=interp), a, b)
+
+
+def _mm2d(a, b, interpret):
+    return pallas_gemm(a, b, interpret=interpret)
+
+
+def _batched(f, a, b):
+    if a.ndim == 2 and b.ndim == 2:
+        return f(a, b)
+    # normalize leading batch dims then vmap the 2-D kernel
+    bshape = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    a = jnp.broadcast_to(a, bshape + a.shape[-2:])
+    b = jnp.broadcast_to(b, bshape + b.shape[-2:])
+    af = a.reshape((-1,) + a.shape[-2:])
+    bf = b.reshape((-1,) + b.shape[-2:])
+    out = jax.vmap(f)(af, bf)
+    return out.reshape(bshape + out.shape[-2:])
+
+
+def trsm(a: jax.Array, b: jax.Array, *, side: str = "L", uplo: str = "L",
+         trans: str = "N", diag: str = "N") -> jax.Array:
+    if not use_pallas() or jnp.issubdtype(a.dtype, jnp.complexfloating):
+        # complex substitution needs complex VPU ops: XLA path (DESIGN.md)
+        return ref.trsm(a, b, side=side, uplo=uplo, trans=trans, diag=diag)
+    return pallas_trsm(a, b, side=side, uplo=uplo, trans=trans, diag=diag,
+                       interpret=_interpret())
+
+
+def syrk(a: jax.Array, *, uplo: str = "L", trans: str = "N") -> jax.Array:
+    if not use_pallas() or jnp.issubdtype(a.dtype, jnp.complexfloating):
+        return ref.syrk(a, uplo=uplo, trans=trans)
+    return pallas_syrk(a, uplo=uplo, trans=trans, interpret=_interpret())
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+              kv_len=None, chunk_q=0):
+    """Attention entry point for the model stack. The flash kernel handles
+    prefill/train (Tq > 8, fully-live cache); decode rows and partial
+    caches fall back to the XLA path. ``chunk_q`` selects the causal
+    query-chunked XLA formulation (flash-style flop/memory saving that
+    also compiles for the CPU dry-run)."""
+    tq = q.shape[-2]
+    if (use_pallas() and tq == 1 and kv_len is not None and causal
+            and window == 0):
+        return decode_attention(q, k, v, kv_len, softcap=softcap,
+                                scale=scale, interpret=_interpret())
+    if use_pallas() and tq >= 8 and kv_len is None:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               interpret=_interpret())
+    if (chunk_q and causal and window == 0 and kv_len is None
+            and tq > chunk_q and tq % chunk_q == 0):
+        return ref.attention_chunked(q, k, v, chunk_q=chunk_q,
+                                     softcap=softcap, scale=scale)
+    return ref.attention(q, k, v, causal=causal, window=window,
+                         softcap=softcap, scale=scale, kv_len=kv_len)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods x 256
+chips as (pod=2, data=16, model=16) — the ``pod`` axis composes with
+``data`` for batch sharding and carries the (slower, compressible)
+inter-pod gradient reduction. Defined as functions so importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS
+before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 8, model: int = 2):
+    """Small mesh over however many (fake) devices a test session has."""
+    data = n_devices // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,182 @@
+"""Parameter/batch/cache sharding rules for the production meshes.
+
+Megatron-style tensor parallelism on the ``model`` axis: column-parallel
+QKV/gate/up projections, row-parallel O/down projections (one psum per
+block), vocab-parallel embedding, expert-parallel MoE weights, and
+head-sharded SSD state. Batch spans ``data`` (and ``pod`` when present).
+Optimizer state inherits the parameter rules; ``zero=True`` additionally
+shards the largest dim of every moment tensor over ``data`` (ZeRO-1).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+# ----------------------------------------------------------------------- #
+# parameter rules                                                          #
+# ----------------------------------------------------------------------- #
+_COL = ("wq", "wk", "wv", "wg", "wu", "w1", "in_proj")     # d -> sharded out
+_ROW = ("wo", "wd", "w2", "out_proj")                      # sharded in -> d
+_VEC_MODEL = ("bq", "bk", "bv", "b1", "a_log", "dt_bias", "d_skip",
+              "norm_w", "conv_b")
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_spec(path, leaf, cfg: ModelConfig) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    nd = leaf.ndim
+    in_moe = "moe" in names
+    in_conv = name.startswith("conv_w")
+
+    def lead(spec_tail):
+        """Pad with None for stacked leading dims (layer groups, experts)."""
+        pad = nd - len(spec_tail)
+        return P(*([None] * pad + list(spec_tail)))
+
+    if name == "table":                       # (V, d): vocab-parallel
+        return P("model", None)
+    if name == "unembed":                     # (d, V)
+        return P(None, "model")
+    if name == "pos_dec":
+        return P(None, None)
+    if name == "router":                      # replicated: tiny + hot
+        return lead([None, None])
+    if in_moe and name in ("wg", "wu"):       # (..., E, d, ffe): EP
+        return lead(["model", None, None])
+    if in_moe and name == "wd":               # (..., E, ffe, d): EP
+        return lead(["model", None, None])
+    if in_conv:                               # (..., k, conv_dim)
+        return lead([None, "model"])
+    if name in _COL and nd >= 2:
+        return lead([None, "model"])
+    if name in _ROW and nd >= 2:
+        return lead(["model", None])
+    if name in _VEC_MODEL and nd >= 1:
+        return lead(["model"])
+    return P(*([None] * nd))                  # norms, biases: replicated
+
+
+def sanitize(spec: P, shape, mesh: Mesh, *, fallbacks: dict = None) -> P:
+    """Drop (or re-home) spec dims the shape cannot divide evenly.
+
+    ``fallbacks`` maps dim index -> alternative dim index: if the spec'd
+    axis does not divide dim i but divides dim j, the axis moves there
+    (e.g. KV-head sharding falling back to head_dim when Hkv < mesh)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    fallbacks = fallbacks or {}
+
+    def axsize(ax):
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[ax]
+
+    for i in range(len(dims)):
+        ax = dims[i]
+        if ax is None:
+            continue
+        if shape[i] % axsize(ax) != 0:
+            j = fallbacks.get(i)
+            if (j is not None and dims[j] is None
+                    and shape[j] % axsize(ax) == 0):
+                dims[j] = ax
+            dims[i] = None
+    return P(*dims)
+
+
+def param_shardings(params: Any, mesh: Mesh, cfg: ModelConfig):
+    def one(path, leaf):
+        spec = sanitize(param_spec(path, leaf, cfg), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_shardings(opt_state: Any, mesh: Mesh, cfg: ModelConfig, *,
+                  zero: bool = False):
+    """Moments follow the params; ZeRO-1 also slices over ``data``."""
+
+    def one(path, leaf):
+        spec = sanitize(param_spec(path, leaf, cfg), leaf.shape, mesh)
+        if zero and leaf.ndim >= 2:
+            dims = list(spec)
+            dims += [None] * (leaf.ndim - len(dims))
+            # shard the largest still-unsharded dim over data
+            free = [i for i, d in enumerate(dims) if d is None]
+            if free:
+                big = max(free, key=lambda i: leaf.shape[i])
+                if leaf.shape[big] % mesh.shape["data"] == 0:
+                    dims[big] = "data"
+            spec = P(*dims)
+        return NamedSharding(mesh, spec)
+
+    # step counter and other scalars: replicated
+    def dispatch(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return one(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(dispatch, opt_state)
+
+
+# ----------------------------------------------------------------------- #
+# batch / cache rules                                                      #
+# ----------------------------------------------------------------------- #
+def batch_spec(mesh) -> P:
+    ba = batch_axes(mesh)
+    return P(ba if len(ba) > 1 else ba[0])
+
+
+def batch_shardings(batch_shapes: dict, mesh: Mesh):
+    """tokens/labels: (B, T) -> batch over data(+pod); stub embeddings:
+    (B, S, d) likewise — the leading dim is always the global batch."""
+    ba = batch_axes(mesh)
+    lead = ba[0] if len(ba) == 1 else tuple(ba)
+
+    def one(shape_dtype):
+        nd = len(shape_dtype.shape)
+        spec = sanitize(P(*([lead] + [None] * (nd - 1))),
+                        shape_dtype.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return {k: one(v) for k, v in batch_shapes.items()}
+
+
+def cache_spec(mesh, kind: str, ndim: int, *, seq_shard: bool = False) -> P:
+    """Decode-state shardings.
+
+    kind "kv": (G, B, Hkv, S, D) — batch over data, heads over model;
+    ``seq_shard`` (long-context, batch=1) moves data-sharding to S.
+    kind "ssm": (G, B, H, S, P) state — heads over model, batch over data.
+    kind "conv": (G, B, K-1, C) — channels over model.
+    """
+    ba = batch_axes(mesh)
+    b = ba[0] if len(ba) == 1 else tuple(ba)
+    if kind == "kv":
+        if seq_shard:
+            return P(None, None, "model", "data", None)
+        return P(None, b, "model", None, None)
+    if kind == "ssm":
+        return P(None, b, "model", None, None)
+    if kind == "conv":
+        return P(None, b, None, "model")
+    raise ValueError(kind)

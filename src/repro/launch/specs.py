@@ -1,0 +1,211 @@
+"""(architecture x input-shape) cell definitions for the dry-run.
+
+``build_cell`` assembles everything a dry-run compile needs:
+
+* the step function (train_step / prefill_step / serve_step),
+* ``input_specs()`` — ShapeDtypeStruct stand-ins for every input (no
+  allocation), with NamedShardings bound to the target mesh,
+* output shardings + donation so the memory analysis reflects steady
+  state (double-buffered params would dominate otherwise).
+
+Shape suite (assignment brief): train_4k, prefill_32k, decode_32k,
+long_500k. ``long_500k`` raises ``CellSkipped`` for quadratic-attention
+architectures (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import shardings as shd
+from repro.launch.mesh import batch_axes
+from repro.models.registry import Model
+from repro.models.sharding import AxisEnv
+from repro.optim import AdamW, init_compression
+from repro.train.loop import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str           # train | prefill | decode
+    seq: int
+    global_batch: int
+    seq_shard: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1,
+                           seq_shard=True),
+}
+
+
+class CellSkipped(Exception):
+    """Raised for (arch x shape) cells excluded by DESIGN.md §5."""
+
+
+def check_cell(cfg: ModelConfig, shape: ShapeCell) -> None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        raise CellSkipped(
+            f"{cfg.name}: full attention is quadratic at 524288 ctx; "
+            "long_500k runs only for SSM/hybrid (DESIGN.md §5)")
+
+
+def axis_env_for(mesh: Mesh) -> AxisEnv:
+    return AxisEnv(batch=batch_axes(mesh), model="model",
+                   sizes=tuple(mesh.shape.items()), mesh=mesh)
+
+
+# ----------------------------------------------------------------------- #
+# ShapeDtypeStruct builders                                                #
+# ----------------------------------------------------------------------- #
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _extra_specs(model: Model, b: int, mesh) -> Dict[str, Any]:
+    cfg = model.cfg
+    ba = batch_axes(mesh)
+    lead = ba[0] if len(ba) == 1 else tuple(ba)
+    out = {}
+    if cfg.family == "encdec":
+        shp = (b, cfg.encoder_seq, cfg.d_model)
+        out["frames"] = _sds(shp, jnp.dtype(cfg.dtype), NamedSharding(
+            mesh, shd.sanitize(P(lead, None, None), shp, mesh)))
+    if cfg.family == "vlm" and cfg.patch_prefix:
+        shp = (b, cfg.patch_prefix, cfg.d_model)
+        out["patch_embeds"] = _sds(shp, jnp.dtype(cfg.dtype), NamedSharding(
+            mesh, shd.sanitize(P(lead, None, None), shp, mesh)))
+    return out
+
+
+def _cache_specs(model: Model, b: int, max_len: int, mesh,
+                 *, seq_shard: bool) -> Any:
+    cfg = model.cfg
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(b, max_len, jnp.bfloat16))
+
+    def classify(leaf):
+        if leaf.ndim == 5:
+            kind = "kv" if leaf.shape[3] == max_len else "ssm"
+            spec = shd.cache_spec(mesh, kind, 5,
+                                  seq_shard=seq_shard and kind == "kv")
+            # KV-head sharding falls back to head_dim when Hkv < axis
+            spec = shd.sanitize(spec, leaf.shape, mesh, fallbacks={2: 4})
+        elif leaf.ndim == 4:
+            spec = shd.sanitize(shd.cache_spec(mesh, "conv", 4),
+                                leaf.shape, mesh)
+        else:
+            spec = P()
+        return _sds(leaf.shape, leaf.dtype, NamedSharding(mesh, spec))
+
+    return jax.tree.map(classify, shapes)
+
+
+def param_structs(model: Model, mesh) -> Any:
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shards = shd.param_shardings(shapes, mesh, model.cfg)
+    return jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                        shapes, shards)
+
+
+# ----------------------------------------------------------------------- #
+# cells                                                                    #
+# ----------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeCell
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs (with shardings)
+    out_shardings: Any
+    donate_argnums: tuple
+
+
+def build_cell(model: Model, arch: str, shape_name: str, mesh: Mesh, *,
+               remat: str = "dots", n_micro: int = 1,
+               zero: bool = False, grad_compress: bool = False,
+               moe_impl: str = "scatter", unroll: bool = False,
+               extra_seq_shard: Optional[bool] = None) -> Cell:
+    cfg = model.cfg
+    shape = SHAPES[shape_name]
+    check_cell(cfg, shape)
+    b, t = shape.global_batch, shape.seq
+    text_t = model.text_len(t) if shape.kind == "train" else t
+    seq_shard = (shape.seq_shard if extra_seq_shard is None
+                 else extra_seq_shard)
+
+    pstructs = param_structs(model, mesh)
+    ba = batch_axes(mesh)
+    lead = ba[0] if len(ba) == 1 else tuple(ba)
+
+    def tok_sds(shape):
+        spec = shd.sanitize(P(lead, None), shape, mesh)
+        return _sds(shape, jnp.int32, NamedSharding(mesh, spec))
+
+    if shape.kind == "train":
+        opt = AdamW()
+        tcfg = TrainConfig(n_micro=n_micro, remat=remat,
+                           grad_compress=grad_compress, moe_impl=moe_impl,
+                           unroll_layers=unroll)
+        step = make_train_step(model, tcfg, opt, total_steps=10000)
+        ostructs = jax.eval_shape(opt.init, pstructs)
+        oshard = shd.opt_shardings(ostructs, mesh, cfg, zero=zero)
+        ostructs = jax.tree.map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), ostructs, oshard)
+        cstructs = jax.eval_shape(init_compression, pstructs)
+        cshard = shd.param_shardings(cstructs, mesh, cfg)
+        cstructs = jax.tree.map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), cstructs, cshard)
+        batch = {"tokens": tok_sds((b, text_t)),
+                 "labels": tok_sds((b, text_t))}
+        batch.update(_extra_specs(model, b, mesh))
+        stepno = _sds((), jnp.int32, NamedSharding(mesh, P()))
+        out_shardings = (
+            jax.tree.map(lambda x: x.sharding, pstructs),
+            jax.tree.map(lambda x: x.sharding, ostructs),
+            jax.tree.map(lambda x: x.sharding, cstructs),
+            None,
+        )
+        return Cell(arch, shape, step,
+                    (pstructs, ostructs, cstructs, batch, stepno),
+                    out_shardings, (0, 1, 2))
+
+    cache = _cache_specs(model, b, t, mesh, seq_shard=seq_shard)
+    cache_shardings = jax.tree.map(lambda x: x.sharding, cache)
+
+    if shape.kind == "prefill":
+        text = model.text_len(t)
+        extra = _extra_specs(model, b, mesh)
+
+        def prefill_step(params, tokens, cache, extra_in):
+            logits, _, cache = model.forward(
+                params, tokens, cache=cache,
+                cache_pos=jnp.zeros((), jnp.int32), moe_impl=moe_impl,
+                unroll=unroll, last_only=True, **extra_in)
+            return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), cache
+
+        args = (pstructs, tok_sds((b, text)), cache, extra)
+        out_shardings = (None, cache_shardings)
+        return Cell(arch, shape, prefill_step, args, out_shardings, (2,))
+
+    # decode: one new token against a full-length cache
+    def serve_step(params, tok, cache, pos):
+        logits, _, cache = model.forward(
+            params, tok, cache=cache, cache_pos=pos, moe_impl=moe_impl,
+            unroll=unroll)
+        return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), cache
+
+    args = (pstructs, tok_sds((b, 1)), cache,
+            _sds((), jnp.int32, NamedSharding(mesh, P())))
+    out_shardings = (None, cache_shardings)
+    return Cell(arch, shape, serve_step, args, out_shardings, (2,))

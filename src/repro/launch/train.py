@@ -1,0 +1,84 @@
+"""End-to-end training driver.
+
+CPU-sized run (the example driver):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1_5_4b \
+        --reduced --steps 50 --batch 8 --seq 128
+
+Production mesh (with real TPUs this is the full launcher; on CPU use
+DRYRUN_DEVICES and --dry-compile to validate without executing):
+    DRYRUN_DEVICES=512 PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen2_5_32b --mesh multi --dry-compile
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None,
+                    choices=[None, "single", "multi"])
+    ap.add_argument("--dry-compile", action="store_true",
+                    help="lower+compile the sharded step, do not run")
+    args = ap.parse_args()
+
+    if args.mesh and args.dry_compile:
+        os.environ.setdefault("DRYRUN_DEVICES", "512")
+        from repro.launch.dryrun import run_cell
+        rec = run_cell(args.arch, "train_4k", args.mesh == "multi",
+                       remat=args.remat, n_micro=args.n_micro,
+                       grad_compress=args.grad_compress, out_dir=None)
+        return 0 if rec["status"] == "ok" else 1
+
+    import jax.numpy as jnp
+    from repro.data import DataConfig, TokenPipeline
+    from repro.models import get_config
+    from repro.models.registry import Model
+    from repro.train import Trainer, TrainConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model.from_config(cfg)
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch))
+    extra_fn = None
+    if cfg.family == "encdec":
+        def extra_fn(step):
+            return {"frames": jnp.ones(
+                (args.batch, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.dtype))}
+    elif cfg.family == "vlm" and cfg.patch_prefix:
+        def extra_fn(step):
+            return {"patch_embeds": jnp.ones(
+                (args.batch, cfg.patch_prefix, cfg.d_model),
+                jnp.dtype(cfg.dtype))}
+
+    tcfg = TrainConfig(steps=args.steps, peak_lr=args.lr,
+                       n_micro=args.n_micro, remat=args.remat,
+                       grad_compress=args.grad_compress,
+                       ckpt_every=args.ckpt_every,
+                       moe_impl="dense" if args.reduced else "scatter")
+    trainer = Trainer(model, pipe, tcfg, ckpt_dir=args.ckpt_dir)
+    hist = trainer.fit()
+    print(f"final loss {hist[-1]['loss']:.4f} after {trainer.step} steps; "
+          f"straggler events: {trainer.straggler_events}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,4 @@
+"""Model substrate: the ten assigned architectures behind one API."""
+from repro.models.registry import ARCHS, Model, build, canon, get_config
+
+__all__ = ["ARCHS", "Model", "build", "canon", "get_config"]

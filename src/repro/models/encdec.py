@@ -1,0 +1,176 @@
+"""Whisper-tiny backbone: encoder-decoder transformer.
+
+The audio conv frontend is a STUB per the assignment brief —
+``input_specs()`` supplies precomputed mel-frame embeddings (B, S_enc, d),
+standing in for the two-conv downsampler. Everything downstream is real:
+sinusoidal-position encoder with bidirectional attention, decoder with
+causal self-attention + cross-attention, LayerNorm/GELU (pre-LN) as in
+the Whisper paper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _sinusoid(t: int, d: int) -> jax.Array:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> Params:
+    ka, kf = jax.random.split(key)
+    return {"ln1": _ln(cfg), "attn": L.init_attention(ka, cfg),
+            "ln2": _ln(cfg), "mlp": L.init_mlp(kf, cfg)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> Params:
+    ka, kx, kf = jax.random.split(key, 3)
+    return {"ln1": _ln(cfg), "attn": L.init_attention(ka, cfg),
+            "lnx": _ln(cfg), "xattn": L.init_attention(kx, cfg),
+            "ln2": _ln(cfg), "mlp": L.init_mlp(kf, cfg)}
+
+
+def _ln(cfg):
+    return {"w": jnp.ones((cfg.d_model,), jnp.float32),
+            "b": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    ke, kenc, kdec, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "pos_dec": L._dense_init(kp, (4096, cfg.d_model), scale=0.01),
+        "enc": jax.vmap(functools.partial(_init_enc_layer, cfg=cfg))(
+            enc_keys),
+        "dec": jax.vmap(functools.partial(_init_dec_layer, cfg=cfg))(
+            dec_keys),
+        "ln_enc": _ln(cfg),
+        "ln_dec": _ln(cfg),
+    }
+
+
+def _enc_layer_fwd(p, cfg, x):
+    h = L.layer_norm(x, p["ln1"]["w"], p["ln1"]["b"])
+    # bidirectional: no rope (whisper uses absolute sinusoids)
+    out, _ = L.attention_fwd(p["attn"], cfg, h,
+                             jnp.zeros((x.shape[1],), jnp.int32),
+                             causal=False)
+    x = x + out
+    h = L.layer_norm(x, p["ln2"]["w"], p["ln2"]["b"])
+    return x + L.mlp_fwd(p["mlp"], h)
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+           unroll: bool = False) -> jax.Array:
+    """frames: precomputed (B, S_enc, d) stub embeddings."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype) + _sinusoid(
+        frames.shape[1], cfg.d_model).astype(dtype)
+
+    def body(xcur, lp):
+        return _enc_layer_fwd(lp, cfg, xcur), None
+
+    if unroll:
+        n = jax.tree.leaves(params["enc"])[0].shape[0]
+        for g in range(n):
+            lp = jax.tree.map(lambda a: a[g], params["enc"])
+            x, _ = body(x, lp)
+    else:
+        x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.layer_norm(x, params["ln_enc"]["w"], params["ln_enc"]["b"])
+
+
+def _dec_layer_fwd(p, cfg, x, positions, enc, cache, cache_pos):
+    new_cache = None
+    h = L.layer_norm(x, p["ln1"]["w"], p["ln1"]["b"])
+    self_cache = cache[0] if cache is not None else None
+    out, sc = L.attention_fwd(p["attn"], cfg, h, positions,
+                              cache=self_cache, cache_pos=cache_pos)
+    x = x + out
+    h = L.layer_norm(x, p["lnx"]["w"], p["lnx"]["b"])
+    if enc is not None:        # train/prefill: compute (and store) cross KV
+        kv = L.cross_kv(p["xattn"], cfg, enc)
+    else:                      # decode: reuse cross K/V from prefill
+        kv = cache[1]
+    xout, _ = L.attention_fwd(p["xattn"], cfg, h, positions,
+                              causal=False, kv_override=kv)
+    x = x + xout
+    h = L.layer_norm(x, p["ln2"]["w"], p["ln2"]["b"])
+    x = x + L.mlp_fwd(p["mlp"], h)
+    if cache is not None:
+        new_cache = (sc, kv)
+    return x, new_cache
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            frames: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None,
+            cache: Optional[Any] = None,
+            cache_pos: Optional[jax.Array] = None,
+            unroll: bool = False,
+            last_only: bool = False,
+            ) -> Tuple[jax.Array, jax.Array, Optional[Any]]:
+    """Decoder forward. Provide ``frames`` (train/prefill) or a ``cache``
+    holding cross-KV (decode). Returns (logits, aux=0, new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if enc_out is None and frames is not None:
+        enc_out = encode(params, cfg, frames, unroll=unroll)
+    b, t = tokens.shape
+    start = cache_pos if cache_pos is not None else 0
+    positions = start + jnp.arange(t, dtype=jnp.int32)
+    x = L.embed_fwd(params["embed"], cfg, tokens, dtype)
+    x = x + jnp.take(params["pos_dec"], positions, axis=0).astype(dtype)
+
+    def body(carry, xs):
+        lp, lcache = xs
+        xn, nc = _dec_layer_fwd(lp, cfg, carry, positions, enc_out,
+                                lcache, cache_pos)
+        return xn, nc
+
+    if unroll:
+        n_layers = jax.tree.leaves(params["dec"])[0].shape[0]
+        caches_out = []
+        for g in range(n_layers):
+            lp = jax.tree.map(lambda a: a[g], params["dec"])
+            lc = (jax.tree.map(lambda a: a[g], cache)
+                  if cache is not None else None)
+            x, nc = body(x, (lp, lc))
+            caches_out.append(nc)
+        new_cache = (jax.tree.map(lambda *a: jnp.stack(a), *caches_out)
+                     if cache is not None else None)
+    elif cache is None:
+        x, _ = jax.lax.scan(
+            lambda c, lp: (body(c, (lp, None))[0], None),
+            x, params["dec"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+
+    x = L.layer_norm(x, params["ln_dec"]["w"], params["ln_dec"]["b"])
+    if last_only:
+        x = x[:, -1:]
+    logits = L.unembed_fwd(params["embed"], cfg, x)
+    return logits, jnp.zeros((), jnp.float32), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """(self KV, cross KV) per decoder layer, stacked over layers."""
+    nl, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    self_kv = (jnp.zeros((nl, batch, hkv, max_len, hd), dtype),) * 2
+    cross_kv = (jnp.zeros((nl, batch, hkv, cfg.encoder_seq, hd), dtype),) * 2
+    return (self_kv, cross_kv)

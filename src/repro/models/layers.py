@@ -1,0 +1,235 @@
+"""Shared transformer building blocks (all ten architectures).
+
+Functional style: ``init_*`` builds parameter pytrees, ``*_fwd`` applies
+them. The matmul hot spots route through :mod:`repro.kernels.ops` so the
+TPU path hits the Pallas kernels, and activations carry logical sharding
+annotations (:mod:`repro.models.sharding`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.sharding import shard
+
+Params = Dict[str, jax.Array]
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale if scale is not None else 0.02
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+# ----------------------------------------------------------------------- #
+# norms                                                                    #
+# ----------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, w: jax.Array, eps: float,
+             offset: float = 0.0) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (w.astype(jnp.float32) + offset)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# rotary position embeddings                                               #
+# ----------------------------------------------------------------------- #
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, T, D); positions: (B, T) or (T,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+        ang = ang[None, None]                      # (1,1,T,half)
+    else:
+        ang = positions.astype(jnp.float32)[:, None, :, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# attention                                                                #
+# ----------------------------------------------------------------------- #
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    hp = cfg.padded_heads    # TP-divisible head padding (zero-masked)
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    p = {
+        "wq": _dense_init(kq, (d, hp * hd)),
+        "wk": _dense_init(kk, (d, cfg.n_kv_heads * hd)),
+        "wv": _dense_init(kv, (d, cfg.n_kv_heads * hd)),
+        "wo": _dense_init(ko, (hp * hd, d),
+                          scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def attention_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, *, window: int = 0,
+                  causal: bool = True,
+                  cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  cache_pos: Optional[jax.Array] = None,
+                  kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  ) -> Tuple[jax.Array, Optional[Tuple]]:
+    """Self- (or cross-) attention with optional decode cache.
+
+    cache: (k_cache, v_cache) each (B, Hkv, S, D), written at cache_pos.
+    kv_override: precomputed (k, v) for cross-attention.
+    """
+    b, t, d = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.padded_heads, cfg.n_kv_heads
+    dt = x.dtype
+
+    q = kops.matmul(x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    q = shard(q.reshape(b, t, hq, hd).transpose(0, 2, 1, 3),
+              "batch", "model", None, None)
+
+    if kv_override is None:
+        k = kops.matmul(x, p["wk"].astype(dt))
+        v = kops.matmul(x, p["wv"].astype(dt))
+        if "bk" in p:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        k = k.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        kc, vc = cache
+        pos = cache_pos if cache_pos is not None else jnp.zeros((), jnp.int32)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, 0, pos, 0))
+        new_cache = (kc, vc)
+        if cfg.prefill_fresh_kv and t > 1 and kv_override is None:
+            # from-scratch prefill: the live keys ARE the fresh k/v; skip
+            # streaming the padded cache back (§Perf iteration A3)
+            kv_len = None
+        else:
+            k, v = kc, vc
+            kv_len = pos + t
+
+    fresh_prefill = (cache is not None and cfg.prefill_fresh_kv
+                     and t > 1 and kv_override is None)
+    chunk_q = cfg.attn_chunk_q if ((cache is None or fresh_prefill)
+                                   and causal and window == 0) else 0
+    out = kops.attention(q, k.astype(dt), v.astype(dt), causal=causal,
+                         window=window, softcap=cfg.attn_softcap,
+                         kv_len=kv_len, chunk_q=chunk_q)
+    if hq > cfg.n_heads:
+        # zero the padded heads (exact n_heads math; their wq/wo slices
+        # get zero grads). Padding lives WITHIN each KV group: head
+        # h = g*(hq/hkv) + j is real iff j < n_heads/hkv, so the GQA
+        # q->kv mapping (h // group) of real heads is unchanged.
+        group = hq // hkv
+        real_per_group = cfg.n_heads // hkv
+        mask = ((jnp.arange(hq) % group) < real_per_group).astype(
+            out.dtype)
+        out = out * mask[None, :, None, None]
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, hq * hd)
+    out = kops.matmul(out, p["wo"].astype(dt))
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def cross_kv(p: Params, cfg: ModelConfig, enc: jax.Array):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = kops.matmul(enc, p["wk"].astype(enc.dtype))
+    v = kops.matmul(enc, p["wv"].astype(enc.dtype))
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+# ----------------------------------------------------------------------- #
+# feed-forward                                                             #
+# ----------------------------------------------------------------------- #
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    if cfg.use_layernorm_gelu:       # whisper-style 2-matrix GELU MLP
+        return {"w1": _dense_init(kg, (d, ff)),
+                "b1": jnp.zeros((ff,), jnp.float32),
+                "w2": _dense_init(kd, (ff, d),
+                                  scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+                "b2": jnp.zeros((d,), jnp.float32)}
+    return {"wg": _dense_init(kg, (d, ff)),
+            "wu": _dense_init(ku, (d, ff)),
+            "wd": _dense_init(kd, (ff, d),
+                              scale=0.02 / (2 * cfg.n_layers) ** 0.5)}
+
+
+def mlp_fwd(p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if "w1" in p:
+        h = kops.matmul(x, p["w1"].astype(dt)) + p["b1"].astype(dt)
+        h = jax.nn.gelu(h)
+        return kops.matmul(h, p["w2"].astype(dt)) + p["b2"].astype(dt)
+    g = kops.matmul(x, p["wg"].astype(dt))
+    u = kops.matmul(x, p["wu"].astype(dt))
+    h = shard(jax.nn.silu(g) * u, "batch", "seq", "model")
+    return kops.matmul(h, p["wd"].astype(dt))
+
+
+# ----------------------------------------------------------------------- #
+# embeddings / unembedding                                                 #
+# ----------------------------------------------------------------------- #
+def init_embed(key, cfg: ModelConfig) -> Params:
+    ke, ku = jax.random.split(key)
+    p = {"table": _dense_init(ke, (cfg.vocab, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ku, (cfg.d_model, cfg.vocab))
+    return p
+
+
+def embed_fwd(p: Params, cfg: ModelConfig, tokens: jax.Array,
+              dtype) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return shard(x, "batch", "seq", None)
+
+
+def unembed_fwd(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = kops.matmul(x, p["table"].T.astype(dt))
+    else:
+        logits = kops.matmul(x, p["unembed"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return shard(logits, "batch", "seq", "model")

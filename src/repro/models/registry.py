@@ -1,0 +1,89 @@
+"""Architecture registry: config lookup + family-dispatched model API.
+
+``get_config(arch)`` loads ``repro.configs.<arch>.CONFIG``;
+``Model.from_config`` wraps the family's init/forward/cache functions
+behind one interface used by the training loop, the serving loop and the
+dry-run launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+ARCHS = (
+    "qwen1_5_4b",
+    "gemma2_9b",
+    "qwen2_5_32b",
+    "deepseek_7b",
+    "whisper_tiny",
+    "granite_moe_1b_a400m",
+    "moonshot_v1_16b_a3b",
+    "mamba2_1_3b",
+    "jamba_1_5_large_398b",
+    "pixtral_12b",
+)
+
+# public ids use dashes/dots; module names use underscores
+def canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.CONFIG
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig) -> "Model":
+        return cls(cfg)
+
+    # ------------------------------------------------------------------ #
+    def init(self, key) -> Dict[str, Any]:
+        if self.cfg.family == "encdec":
+            return encdec.init_model(key, self.cfg)
+        return transformer.init_model(key, self.cfg)
+
+    def forward(self, params, tokens, **kw):
+        """Returns (logits, aux_loss, new_cache)."""
+        if self.cfg.family == "encdec":
+            kw.pop("moe_impl", None)        # no MoE in the enc-dec family
+            return encdec.forward(params, self.cfg, tokens, **kw)
+        return transformer.forward(params, self.cfg, tokens, **kw)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return encdec.init_cache(self.cfg, batch, max_len, dtype)
+        return transformer.init_cache(self.cfg, batch, max_len, dtype)
+
+    # ------------------------------------------------------------------ #
+    def extra_inputs(self, batch: int, seq: int) -> Dict[str, Any]:
+        """Stub-frontend inputs (shapes only) this family requires."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return {"frames": (batch, cfg.encoder_seq, cfg.d_model)}
+        if cfg.family == "vlm" and cfg.patch_prefix:
+            return {"patch_embeds": (batch, cfg.patch_prefix, cfg.d_model)}
+        return {}
+
+    def text_len(self, seq: int) -> int:
+        """Token positions given a total sequence budget (VLM reserves a
+        patch prefix inside the budget)."""
+        if self.cfg.family == "vlm" and self.cfg.patch_prefix:
+            return seq - self.cfg.patch_prefix
+        return seq
+
+
+def build(arch: str) -> Tuple[Model, ModelConfig]:
+    cfg = get_config(arch)
+    return Model.from_config(cfg), cfg

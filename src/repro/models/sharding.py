@@ -1,0 +1,89 @@
+"""Logical-axis sharding environment for the model stack.
+
+Model code annotates activations with *logical* dims ("batch", "model",
+"seq"); the launcher binds them to physical mesh axes (single-pod:
+``data``/``model``; multi-pod: batch spans ``("pod", "data")``). Outside
+any environment (CPU smoke tests) annotations are no-ops, so the same
+model code runs unsharded on one device and SPMD on 512.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    batch: Tuple[str, ...] = ("data",)
+    model: str = "model"
+    seq: Optional[str] = None       # sequence-parallel axis, if any
+    sizes: Tuple[Tuple[str, int], ...] = ()   # mesh axis sizes
+    # concrete mesh for shard_map sub-blocks (e.g. a2a expert parallel);
+    # compare=False keeps the dataclass hashable/comparable by config
+    mesh: Optional[object] = dataclasses.field(default=None, compare=False)
+
+    def axis_size(self, name) -> int:
+        d = dict(self.sizes)
+        if isinstance(name, tuple):
+            n = 1
+            for a in name:
+                n *= d.get(a, 1)
+            return n
+        return d.get(name, 1)
+
+
+_ENV: Optional[AxisEnv] = None
+
+
+def set_env(env: Optional[AxisEnv]) -> None:
+    global _ENV
+    _ENV = env
+
+
+def get_env() -> Optional[AxisEnv]:
+    return _ENV
+
+
+@contextlib.contextmanager
+def axis_env(env: AxisEnv):
+    prev = _ENV
+    set_env(env)
+    try:
+        yield env
+    finally:
+        set_env(prev)
+
+
+def logical(*dims: Optional[str]) -> P:
+    """Translate logical dims to a PartitionSpec under the active env."""
+    env = _ENV or AxisEnv()
+    out = []
+    for d in dims:
+        if d is None:
+            out.append(None)
+        elif d == "batch":
+            out.append(env.batch if len(env.batch) > 1 else env.batch[0])
+        elif d == "model":
+            out.append(env.model)
+        elif d == "seq":
+            out.append(env.seq)
+        else:  # already-physical axis name
+            out.append(d)
+    return P(*out)
+
+
+def shard(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the env; identity when unbound.
+    Dims not divisible by their mesh axis are left unconstrained."""
+    if _ENV is None:
+        return x
+    spec = list(logical(*dims))
+    spec += [None] * (x.ndim - len(spec))
+    for i, ax in enumerate(spec):
+        if ax is not None and x.shape[i] % _ENV.axis_size(ax) != 0:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,203 @@
+"""Mamba2 SSD (state-space duality) mixer — mamba2-1.3b and jamba layers.
+
+Hardware adaptation (DESIGN.md): Mamba1's selective scan is a sequential
+GPU kernel with no MXU analogue; Mamba2's SSD formulation *is* the TPU
+port — the recurrence becomes chunked batched matmuls (intra-chunk
+attention-like quadratic term + inter-chunk state carry), which is exactly
+the arithmetic the MXU wants. We implement:
+
+* ``ssd_fwd``  — chunked SSD for train/prefill: O(T·Q) intra-chunk
+  matmuls + a ``lax.scan`` over chunk states (Q = chunk length).
+* ``ssd_step`` — O(1)/token decode: ``h = decay·h + dt·B⊗x; y = C·h``,
+  the state (B, H, S, P) is the SSM analogue of the KV cache (and the
+  object the paper's Device-First-Use runtime places for long-context
+  serving).
+
+Single B/C group (n_groups=1); depthwise causal conv over the (x, B, C)
+projections as in the reference implementation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import _dense_init, rms_norm
+from repro.models.sharding import shard
+
+Params = Dict[str, jax.Array]
+
+# Chunk length trades intra-chunk quadratic memory (nc·B·q²·H fp32) for
+# scan length; 64 keeps the masked-decay tensor ~256 MB/device at 4k seq.
+CHUNK = 64
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    d, din, s, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * s
+    ki, kc, ko, ka, kd2 = jax.random.split(key, 5)
+    return {
+        # zxbcdt projection: [z(din) | x(din) | B(s) | C(s) | dt(h)]
+        "in_proj": _dense_init(ki, (d, 2 * din + 2 * s + h)),
+        "conv_w": _dense_init(kc, (cfg.ssm_conv, conv_dim), scale=0.1),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((din,), jnp.float32),
+        "out_proj": _dense_init(ko, (din, d),
+                                scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    din, s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * s]
+    dt = zxbcdt[..., 2 * din + 2 * s:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along T. xbc: (B, T, C).
+
+    With ``state`` (B, K-1, C): decode mode — returns (out, new_state).
+    """
+    ksize = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, xbc], axis=1)    # (B, K-1+T, C)
+        new_state = window[:, -(ksize - 1):]
+        out = jnp.zeros_like(xbc)
+        t = xbc.shape[1]
+        for i in range(ksize):
+            out = out + window[:, i:i + t] * w[i].astype(xbc.dtype)
+        return jax.nn.silu(out + b.astype(xbc.dtype)), new_state
+    pad = jnp.zeros((xbc.shape[0], ksize - 1, xbc.shape[2]), xbc.dtype)
+    window = jnp.concatenate([pad, xbc], axis=1)
+    t = xbc.shape[1]
+    out = jnp.zeros_like(xbc)
+    for i in range(ksize):
+        out = out + window[:, i:i + t] * w[i].astype(xbc.dtype)
+    return jax.nn.silu(out + b.astype(xbc.dtype)), None
+
+
+def ssd_fwd(p: Params, cfg: ModelConfig, xin: jax.Array,
+            chunk: int = CHUNK, return_state: bool = False):
+    """Chunked SSD. xin: (B, T, d) -> (B, T, d).
+
+    ``return_state=True`` additionally returns (ssm_h, conv_state) after
+    the last position — the prefill path for decode serving.
+    """
+    bsz, t, _ = xin.shape
+    din, s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    dt_ = xin.dtype
+
+    zxbcdt = kops.matmul(xin, p["in_proj"].astype(dt_))
+    z, xbc, dtp = _split_proj(cfg, zxbcdt)
+    raw_xbc = xbc
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x = xbc[..., :din]
+    bmat = xbc[..., din:din + s].astype(jnp.float32)          # (B,T,S)
+    cmat = xbc[..., din + s:].astype(jnp.float32)             # (B,T,S)
+
+    dt = jax.nn.softplus(dtp.astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                  # (H,)
+    xh = x.reshape(bsz, t, h, hp).astype(jnp.float32)         # (B,T,H,P)
+    xh = shard(xh, "batch", None, "model", None)
+
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+
+    def reshape_c(v):  # (B,T,...) -> (nc, B, q, ...)
+        return v.reshape(bsz, nc, q, *v.shape[2:]).swapaxes(0, 1)
+
+    xc, bc, cc, dtc = map(reshape_c, (xh, bmat, cmat, dt))
+    da = dtc * a                                              # (nc,B,q,H)
+    cum = jnp.cumsum(da, axis=2)                              # (nc,B,q,H)
+    seg_total = cum[:, :, -1]                                 # (nc,B,H)
+
+    # intra-chunk (quadratic within chunk, like masked attention)
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (nc,B,q,q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("nbis,nbjs->nbij", cc, bc)                # (nc,B,q,q)
+    xdt = xc * dtc[..., None]                                 # (nc,B,q,H,P)
+    y_intra = jnp.einsum("nbij,nbijh,nbjhp->nbihp", cb, lmat, xdt)
+
+    # chunk summary states: S_n = sum_j exp(cum_last - cum_j) B_j (x_j dt_j)
+    decay_to_end = jnp.exp(seg_total[:, :, None] - cum)       # (nc,B,q,H)
+    states = jnp.einsum("nbjs,nbjh,nbjhp->nbhsp",
+                        bc, decay_to_end, xdt)                # (nc,B,H,S,P)
+
+    # inter-chunk scan over running state
+    def scan_body(hprev, inp):
+        st, seg = inp                                         # (B,H,S,P),(B,H)
+        hnew = hprev * jnp.exp(seg)[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, s, hp), jnp.float32)
+    h_final, hprevs = jax.lax.scan(scan_body, h0, (states, seg_total))
+    # contribution of the carried state to each position in the chunk
+    decay_in = jnp.exp(cum)                                   # (nc,B,q,H)
+    y_inter = jnp.einsum("nbis,nbih,nbhsp->nbihp",
+                         cc, decay_in, hprevs)
+
+    y = y_intra + y_inter + xc * p["d_skip"][None, None, None, :, None]
+    y = y.swapaxes(0, 1).reshape(bsz, t, din).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_w"], cfg.rms_eps)
+    out = kops.matmul(y, p["out_proj"].astype(dt_))
+    if return_state:
+        ksz = cfg.ssm_conv
+        conv_state = raw_xbc[:, -(ksz - 1):, :]
+        return out, (h_final, conv_state)
+    return out
+
+
+def ssd_step(p: Params, cfg: ModelConfig, xin: jax.Array,
+             state: Tuple[jax.Array, jax.Array]
+             ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single-token decode. xin: (B, 1, d); state = (ssm_h, conv_state)."""
+    bsz = xin.shape[0]
+    din, s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    dt_ = xin.dtype
+    ssm_h, conv_state = state
+
+    zxbcdt = kops.matmul(xin, p["in_proj"].astype(dt_))
+    z, xbc, dtp = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=conv_state)
+    x = xbc[..., :din]
+    bvec = xbc[:, 0, din:din + s].astype(jnp.float32)          # (B,S)
+    cvec = xbc[:, 0, din + s:].astype(jnp.float32)             # (B,S)
+
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32)
+                         + p["dt_bias"])                       # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = x[:, 0].reshape(bsz, h, hp).astype(jnp.float32)       # (B,H,P)
+
+    decay = jnp.exp(dt * a)                                    # (B,H)
+    upd = jnp.einsum("bs,bh,bhp->bhsp", bvec, dt, xh)
+    ssm_h = ssm_h * decay[..., None, None] + upd               # (B,H,S,P)
+    y = jnp.einsum("bs,bhsp->bhp", cvec, ssm_h)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, din).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_w"], cfg.rms_eps)
+    return kops.matmul(y, p["out_proj"].astype(dt_)), (ssm_h, conv_state)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, s, hp = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_dim = cfg.d_inner + 2 * s
+    return (jnp.zeros((batch, h, s, hp), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype))

@@ -1,0 +1,216 @@
+"""Decoder-only LM assembly (dense, MoE, SSM, hybrid, VLM families).
+
+Layers are grouped by the architecture's repeat period (1 for uniform
+stacks, 2 for gemma2's local/global alternation and every-other-layer MoE,
+8 for jamba's 7:1 mamba:attention interleave). Parameters are stacked per
+period position and the stack is driven by ``jax.lax.scan``, keeping the
+compiled HLO one-period-sized regardless of depth — essential for the
+512-device dry-runs of 40-64 layer models.
+
+The decode cache is a dict ``{period_pos: stacked_state}`` where state is
+(K, V) for attention positions and (ssm_h, conv_state) for SSD positions —
+the cache pytree is exactly what the serving layer hands to the offload
+runtime for tier placement.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def period_of(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.attn_period
+    p = 1
+    if cfg.alt_local_global:
+        p = 2
+    if cfg.n_experts and cfg.moe_every > 1:
+        p = max(p, cfg.moe_every)
+    return p
+
+
+def _init_block(key, cfg: ModelConfig, pos: int) -> Params:
+    """One block at period position ``pos``: mixer + ffn + norms."""
+    km, kf, _ = jax.random.split(key, 3)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                 "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ln2_post"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.is_attn_layer(pos):
+        p["attn"] = L.init_attention(km, cfg)
+    else:
+        p["ssm"] = S.init_ssm(km, cfg)
+    if cfg.is_moe_layer(pos):
+        p["moe"] = M.init_moe(kf, cfg)
+    else:
+        p["mlp"] = L.init_mlp(kf, cfg)
+    return p
+
+
+def _block_fwd(p: Params, cfg: ModelConfig, x, positions, pos: int, *,
+               cache=None, cache_pos=None, moe_impl="scatter"):
+    """Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps, cfg.norm_offset)
+    new_cache = None
+    if cfg.is_attn_layer(pos):
+        attn_cache = cache if cache is not None else None
+        out, new_cache = L.attention_fwd(
+            p["attn"], cfg, h, positions, window=cfg.layer_window(pos),
+            cache=attn_cache, cache_pos=cache_pos)
+    else:
+        if cache is not None and h.shape[1] == 1:
+            out, new_cache = S.ssd_step(p["ssm"], cfg, h, cache)
+        elif cache is not None:
+            # prefill into a decode cache: chunked SSD + final state
+            out, new_cache = S.ssd_fwd(p["ssm"], cfg, h, return_state=True)
+            new_cache = (new_cache[0],
+                         new_cache[1].astype(cache[1].dtype))
+        else:
+            out = S.ssd_fwd(p["ssm"], cfg, h)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["ln1_post"], cfg.rms_eps, cfg.norm_offset)
+    x = x + out
+
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps, cfg.norm_offset)
+    if cfg.is_moe_layer(pos):
+        out, aux = M.moe_fwd(p["moe"], cfg, h, impl=moe_impl)
+    else:
+        out = L.mlp_fwd(p["mlp"], h)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["ln2_post"], cfg.rms_eps, cfg.norm_offset)
+    return x + out, aux, new_cache
+
+
+# ----------------------------------------------------------------------- #
+# model init                                                               #
+# ----------------------------------------------------------------------- #
+def init_model(key, cfg: ModelConfig) -> Params:
+    period = period_of(cfg)
+    n_groups = cfg.n_layers // period
+    ke, kl, kn = jax.random.split(key, 3)
+    blocks = []
+    for pos in range(period):
+        kpos = jax.random.fold_in(kl, pos)
+        gkeys = jax.random.split(kpos, n_groups)
+        blocks.append(jax.vmap(
+            functools.partial(_init_block, cfg=cfg, pos=pos))(gkeys))
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "blocks": tuple(blocks),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------- #
+# forward                                                                  #
+# ----------------------------------------------------------------------- #
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            patch_embeds: Optional[jax.Array] = None,
+            cache: Optional[Dict[int, Any]] = None,
+            cache_pos: Optional[jax.Array] = None,
+            moe_impl: str = "scatter",
+            unroll: bool = False,
+            last_only: bool = False
+            ) -> Tuple[jax.Array, jax.Array, Optional[Dict[int, Any]]]:
+    """tokens: (B, T) -> (logits (B,T,V), aux_loss, new_cache).
+
+    VLM configs prepend ``patch_embeds`` (B, P, d) from the stub frontend;
+    logits then cover the text positions only.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    period = period_of(cfg)
+    x = L.embed_fwd(params["embed"], cfg, tokens, dtype)
+    n_patch = 0
+    if patch_embeds is not None:
+        n_patch = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(dtype), x], axis=1)
+    t = x.shape[1]
+    if positions is None:
+        start = cache_pos if cache_pos is not None else 0
+        positions = start + jnp.arange(t, dtype=jnp.int32)
+
+    def body(carry, xs):
+        xcur, aux = carry
+        gparams, gcache = xs
+        new_gcache = []
+        for pos in range(period):
+            c = gcache[pos] if gcache is not None else None
+            xcur, a, nc = _block_fwd(gparams[pos], cfg, xcur, positions,
+                                     pos, cache=c, cache_pos=cache_pos,
+                                     moe_impl=moe_impl)
+            aux = aux + a
+            new_gcache.append(nc)
+        ys = tuple(new_gcache) if gcache is not None else None
+        return (xcur, aux), ys
+
+    aux0 = jnp.zeros((), jnp.float32)
+    xs = (params["blocks"],
+          cache if cache is not None else None)
+    if unroll:
+        # python-loop over groups: used by the dry-run cost probes, where
+        # XLA's once-per-while-body cost accounting must be avoided
+        n_groups = jax.tree.leaves(params["blocks"])[0].shape[0]
+        carry = (x, aux0)
+        caches_out = []
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["blocks"])
+            gc = (jax.tree.map(lambda a: a[g], cache)
+                  if cache is not None else None)
+            carry, ys = body(carry, (gp, gc))
+            caches_out.append(ys)
+        x, aux = carry
+        new_cache = (jax.tree.map(lambda *a: jnp.stack(a), *caches_out)
+                     if cache is not None else None)
+    elif cache is None:
+        # scan without per-layer outputs
+        (x, aux), _ = jax.lax.scan(
+            lambda c, gp: (body(c, (gp, None))[0], None),
+            (x, aux0), params["blocks"])
+        new_cache = None
+    else:
+        (x, aux), new_cache = jax.lax.scan(body, (x, aux0), xs)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps, cfg.norm_offset)
+    if n_patch:
+        x = x[:, n_patch:]
+    if last_only:
+        # prefill serving only needs the next-token logits: skip the
+        # (B, T, V) unembed entirely (§Perf iteration A1)
+        x = x[:, -1:]
+    logits = L.unembed_fwd(params["embed"], cfg, x)
+    return logits, aux, new_cache
+
+
+# ----------------------------------------------------------------------- #
+# decode cache                                                             #
+# ----------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[int, Any]:
+    """Stacked-over-groups decode state for each period position."""
+    period = period_of(cfg)
+    n_groups = cfg.n_layers // period
+    cache = []
+    for pos in range(period):
+        if cfg.is_attn_layer(pos):
+            shape = (n_groups, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+            cache.append((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+        else:
+            hstate, cstate = S.init_ssm_state(cfg, batch, dtype)
+            cache.append((
+                jnp.broadcast_to(hstate, (n_groups,) + hstate.shape),
+                jnp.broadcast_to(cstate, (n_groups,) + cstate.shape)))
+    return tuple(cache)

@@ -1,0 +1,9 @@
+"""Optimizer substrate: AdamW, schedules, gradient compression."""
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_compress import (
+    compress_decompress, CompressionState, init_compression,
+)
+
+__all__ = ["AdamW", "OptState", "cosine_schedule",
+           "compress_decompress", "CompressionState", "init_compression"]

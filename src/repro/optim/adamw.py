@@ -1,0 +1,72 @@
+"""AdamW with decoupled weight decay — functional, pytree-native.
+
+Moments live in f32 regardless of parameter dtype. The optimizer state
+pytree mirrors the parameter pytree, so the same sharding rules apply to
+both (and ZeRO-style sharding over the data axis is a pure resharding of
+this state — see launch/shardings.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1.0e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: OptState, params, lr) -> tuple:
+        """Returns (new_params, new_state)."""
+        step = state.step + 1
+        # global-norm clip
+        if self.grad_clip > 0:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)

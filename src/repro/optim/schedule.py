@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``floor_frac * peak_lr``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup),
+                    0.0, 1.0)
+    floor = floor_frac * peak_lr
+    cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (collective_bytes, roofline_terms,
+                                     RooflineReport, V5E)
+
+__all__ = ["collective_bytes", "roofline_terms", "RooflineReport", "V5E"]

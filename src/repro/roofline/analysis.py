@@ -1,0 +1,152 @@
+"""Three-term roofline model from compiled HLO (no hardware needed).
+
+    compute    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory     = HLO_bytes / (chips x HBM bw)
+    collective = collective_bytes / (chips x link bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+parsed from the post-SPMD optimized HLO: every ``all-reduce`` /
+``all-gather`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op's operand sizes are summed (per-device program,
+so the sum is already per-chip traffic).
+
+Hardware constants (TPU v5e, mandated): 197 TFLOP/s bf16/chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+V5E = {
+    "peak_flops": 197.0e12,     # bf16 per chip
+    "hbm_bw": 819.0e9,          # bytes/s per chip
+    "link_bw": 50.0e9,          # bytes/s per ICI link
+    "hbm_bytes": 16 << 30,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# one shaped value, e.g. "bf16[16,4096,320]{2,1,0}"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op, by op kind.
+
+    HLO line form: ``%name = <shape> <op>(...)`` — the result shape of a
+    collective equals the payload living on the wire for AG/AR/CP; for
+    reduce-scatter the *operand* is bigger, but the ring transfers the
+    result-sized shards, so result bytes are the honest wire estimate.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for coll in _COLLECTIVES:
+            # match the op name at the call position
+            mm = re.match(r"^((?:\([^)]*\))|(?:[\w\[\]{},: ]+?))\s*"
+                          + re.escape(coll) + r"(?:-start)?\(", rhs)
+            if mm:
+                nbytes = _shape_bytes(mm.group(1))
+                out[coll] = out.get(coll, 0) + nbytes
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops: float               # 6·N·D (or 6·N_active·D)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def __post_init__(self):
+        self.t_compute = self.flops_per_chip / V5E["peak_flops"]
+        self.t_memory = self.bytes_per_chip / V5E["hbm_bw"]
+        self.t_collective = self.coll_bytes_per_chip / V5E["link_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap bound: the max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        total_hlo = self.flops_per_chip * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term bound that is useful model math:
+        (model_flops/chips/peak) / step_time."""
+        ideal = self.model_flops / self.chips / V5E["peak_flops"]
+        return ideal / self.step_time if self.step_time else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "dominant": self.dominant,
+            "useful_flops_ratio": round(self.useful_ratio, 4),
+            "roofline_fraction": round(self.roofline_fraction, 4),
+        }
+
+
+def roofline_terms(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: Optional[dict], hlo_text: str,
+                   model_flops: float,
+                   coll_bytes: Optional[float] = None) -> RooflineReport:
+    cost = cost or {}
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    if coll_bytes is None:
+        coll_bytes = float(sum(collective_bytes(hlo_text).values()))
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=nbytes,
+        coll_bytes_per_chip=coll_bytes,
+        model_flops=model_flops)

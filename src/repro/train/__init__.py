@@ -1,0 +1,6 @@
+"""Training & serving loops."""
+from repro.train.loop import Trainer, TrainConfig, make_train_step
+from repro.train.serve import Server, ServeConfig
+
+__all__ = ["Trainer", "TrainConfig", "make_train_step", "Server",
+           "ServeConfig"]

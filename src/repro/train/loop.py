@@ -1,0 +1,216 @@
+"""Training loop: microbatched, remat-aware, fault-tolerant.
+
+Production posture:
+
+* **Microbatch accumulation** via ``lax.scan`` — the global batch streams
+  through in ``n_micro`` slices, holding one microbatch of activations
+  live (the standard memory/throughput knob, also a §Perf lever).
+* **Remat** policies (none / dots / full) wrap the per-microbatch loss.
+* **Gradient compression** (int8 + error feedback) models the inter-pod
+  wire format (see optim/grad_compress.py).
+* **Fault tolerance**: atomic async checkpoints every ``ckpt_every``
+  steps; ``Trainer.fit`` resumes exactly from the latest checkpoint (the
+  data pipeline is a pure function of step, so restarts are bit-exact).
+* **Straggler watchdog**: per-step wall time vs. a running median; slow
+  steps are counted and surfaced (on a real cluster this feeds the
+  controller that re-shards around sick hosts; here it is measured and
+  logged).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointStore
+from repro.data import TokenPipeline
+from repro.models.registry import Model
+from repro.optim import (AdamW, CompressionState, compress_decompress,
+                         cosine_schedule, init_compression)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    peak_lr: float = 3.0e-4
+    warmup: int = 20
+    n_micro: int = 1
+    remat: str = "none"             # none | dots | full
+    grad_compress: bool = False
+    z_loss: float = 1.0e-4
+    log_every: int = 10
+    ckpt_every: int = 50
+    straggler_factor: float = 3.0
+    moe_impl: str = "scatter"
+    unroll_layers: bool = False     # dry-run cost probes only
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_coef: float = 0.0) -> jax.Array:
+    """Mean CE over all positions, with optional z-loss regularizer.
+
+    Vocab-parallel formulation (§Perf iteration B2): the gold logit is an
+    iota-compare masked reduction instead of ``take_along_axis``, so with
+    vocab-sharded logits XLA reduces locally and psums a (B, T) scalar
+    field — no all-gather of the (B, T, V) tensor.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold_mask = vocab_iota == labels[..., None]
+    gold = jnp.sum(jnp.where(gold_mask, logits, 0.0), axis=-1)
+    ce = jnp.mean(lse - gold)
+    if z_coef > 0:
+        ce = ce + z_coef * jnp.mean(jnp.square(lse))
+    return ce
+
+
+def _remat_wrap(fn: Callable, mode: str) -> Callable:
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if mode == "full":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(f"unknown remat mode {mode!r}")
+
+
+def make_train_step(model: Model, tcfg: TrainConfig, opt: AdamW,
+                    total_steps: Optional[int] = None):
+    """Builds the jit-able (params, opt_state, comp, batch, step) update."""
+    total = total_steps or tcfg.steps
+
+    def micro_loss(params, tokens, labels, extra):
+        logits, aux, _ = model.forward(params, tokens,
+                                       moe_impl=tcfg.moe_impl,
+                                       unroll=tcfg.unroll_layers, **extra)
+        return cross_entropy(logits, labels, tcfg.z_loss) + aux
+
+    loss_fn = _remat_wrap(micro_loss, tcfg.remat)
+
+    def train_step(params, opt_state, comp_state, batch, step):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = {k: v for k, v in batch.items()
+                 if k not in ("tokens", "labels")}
+        b = tokens.shape[0]
+        nm = tcfg.n_micro
+        assert b % nm == 0, (b, nm)
+
+        def split(x):
+            return x.reshape((nm, b // nm) + x.shape[1:])
+
+        mtok, mlab = split(tokens), split(labels)
+        mextra = {k: split(v) for k, v in extra.items()}
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc_body(carry, xs):
+            g_acc, l_acc = carry
+            tk, lb, ex = xs
+            loss, grads = jax.value_and_grad(loss_fn)(params, tk, lb, ex)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / nm, g_acc, grads)
+            return (g_acc, l_acc + loss / nm), None
+
+        (grads, loss), _ = jax.lax.scan(
+            acc_body, (zero_grads, jnp.zeros((), jnp.float32)),
+            (mtok, mlab, mextra))
+
+        if tcfg.grad_compress:
+            grads, comp_state = compress_decompress(grads, comp_state)
+
+        lr = cosine_schedule(step, peak_lr=tcfg.peak_lr,
+                             warmup=tcfg.warmup, total=total)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        return params, opt_state, comp_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Host-side orchestration: data, checkpoints, watchdog, restart."""
+
+    def __init__(self, model: Model, pipeline: TokenPipeline,
+                 tcfg: TrainConfig, *, opt: Optional[AdamW] = None,
+                 ckpt_dir: Optional[str] = None, seed: int = 0,
+                 extra_batch_fn: Optional[Callable[[int], Dict]] = None):
+        self.model = model
+        self.pipe = pipeline
+        self.tcfg = tcfg
+        self.opt = opt or AdamW()
+        self.store = CheckpointStore(ckpt_dir) if ckpt_dir else None
+        self.extra_batch_fn = extra_batch_fn
+        self._step_fn = jax.jit(make_train_step(model, tcfg, self.opt))
+        key = jax.random.PRNGKey(seed)
+        self.params = model.init(key)
+        self.opt_state = self.opt.init(self.params)
+        self.comp_state = init_compression(self.params)
+        self.step = 0
+        self.step_times = []
+        self.straggler_events = 0
+        self.history: list = []
+
+    # ------------------------------------------------------------------ #
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state,
+                "comp": self.comp_state}
+
+    def maybe_restore(self) -> bool:
+        if self.store is None or self.store.latest_step() is None:
+            return False
+        (tree, manifest) = self.store.restore(self._state_tree())
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.comp_state = tree["comp"]
+        self.step = manifest["step"]
+        return True
+
+    def _watchdog(self, dt: float) -> None:
+        self.step_times.append(dt)
+        if len(self.step_times) >= 8:
+            med = sorted(self.step_times[-50:])[
+                len(self.step_times[-50:]) // 2]
+            if dt > self.tcfg.straggler_factor * med:
+                self.straggler_events += 1
+                print(f"[watchdog] step {self.step} took {dt:.3f}s "
+                      f"(median {med:.3f}s) — straggler flagged")
+
+    # ------------------------------------------------------------------ #
+    def fit(self, steps: Optional[int] = None, verbose: bool = True):
+        steps = steps or self.tcfg.steps
+        self.maybe_restore()
+        while self.step < steps:
+            batch = self.pipe.global_batch(self.step)
+            if self.extra_batch_fn is not None:
+                batch.update(self.extra_batch_fn(self.step))
+            t0 = time.perf_counter()
+            (self.params, self.opt_state, self.comp_state,
+             metrics) = self._step_fn(self.params, self.opt_state,
+                                      self.comp_state, batch,
+                                      jnp.asarray(self.step, jnp.int32))
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self._watchdog(dt)
+            self.step += 1
+            self.history.append(metrics)
+            if verbose and self.step % self.tcfg.log_every == 0:
+                print(f"step {self.step:5d}  loss {metrics['loss']:.4f}  "
+                      f"lr {metrics['lr']:.2e}  "
+                      f"gnorm {metrics['grad_norm']:.2f}  {dt:.2f}s")
+            if (self.store is not None
+                    and self.step % self.tcfg.ckpt_every == 0):
+                self.store.save(self.step, self._state_tree(),
+                                blocking=False)
+        if self.store is not None:
+            self.store.save(self.step, self._state_tree(), blocking=True)
+        return self.history

@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — tests see the
+real single CPU device; only the dry-run subprocess gets 512."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,76 @@
+"""MuST/PARSEC proxies: physics correctness + paper-claims structure."""
+import jax
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.apps import dft, lsms
+from repro.memtier import GH200, replay_trace
+
+
+@pytest.fixture(scope="module", autouse=True)
+def x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def test_lsms_mini_physics_under_offload():
+    with core.offload("dfu", threshold=100):
+        out = lsms.run_mini(atoms=2, energies=2, scf=1, n=96, nb=32)
+    assert out["max_resid"] < 1e-10
+    assert out["n_solves"] == 4
+
+
+def test_parsec_mini_ritz_values():
+    out = dft.run_mini(ngrid=512, nstates=16, scf=8)
+    assert out["max_err_low_half"] < 1e-6
+
+
+def test_paper_claims_structure_must():
+    """DESIGN.md §8: orderings of Table 3 must reproduce."""
+    tr = lsms.production_trace(atoms_per_node=4)   # scaled replay
+    reps = replay_trace(tr, spec=GH200,
+                        policies=("cpu", "memcopy", "counter", "dfu"))
+    cpu, mc = reps["cpu"].total_s, reps["memcopy"].total_s
+    ct, dfu = reps["counter"].total_s, reps["dfu"].total_s
+    assert dfu < mc < cpu                     # Table 3 ordering
+    assert dfu <= ct * 1.05                   # DFU >= counter
+    assert cpu / dfu > 2.0                    # ~3x claim (>=2x floor)
+    assert reps["dfu"].movement_s < reps["memcopy"].movement_s / 20
+    assert reps["dfu"].mean_reuse > 100       # heavy reuse claim
+
+
+def test_paper_claims_structure_parsec():
+    tr = dft.production_trace(filt_per_scf=2)
+    reps = replay_trace(tr, spec=GH200,
+                        policies=("cpu", "memcopy", "counter", "dfu"))
+    # Table 5 orderings: memcopy no better than CPU; counter poor;
+    # DFU at least ~2x CPU on the BLAS stream
+    assert reps["memcopy"].total_s > reps["cpu"].total_s * 0.8
+    assert reps["counter"].total_s > reps["dfu"].total_s * 1.5
+    assert reps["cpu"].total_s / reps["dfu"].total_s > 2.0
+    # the movement volumes are lopsided exactly as measured
+    assert reps["dfu"].movement_s < 1.0
+    assert reps["memcopy"].movement_s > 10.0
+
+
+def test_table6_full_pattern():
+    from repro.core.trace import Trace
+    from repro.memtier import MemTierSimulator
+    want = {(1000, 1000, 1000): ("device", "device", "device"),
+            (5000, 5000, 5000): ("device", "device", "host"),
+            (20000, 20000, 20000): ("device", "host", "host"),
+            (32, 2400, 93536): ("device", "host", "host")}
+    for dims, expect in want.items():
+        m, n, k = dims
+        t = Trace()
+        a = t.new_buffer(m * k * 8, "A")
+        b = t.new_buffer(k * n * 8, "B")
+        c = t.new_buffer(m * n * 8, "C")
+        for _ in range(5):
+            t.gemm("d", m, n, k, a, b, c)
+        sim = MemTierSimulator(GH200, policy="counter", threshold=0,
+                               seed=3)
+        sim.run(t)
+        assert tuple(sim.residency(x) for x in (a, b, c)) == expect

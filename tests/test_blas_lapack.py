@@ -1,0 +1,114 @@
+"""BLAS surface semantics + LAPACK drivers vs numpy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blas, lapack
+
+RNG = np.random.default_rng(1)
+
+
+def test_gemm_alpha_beta_trans():
+    a = jnp.asarray(RNG.standard_normal((64, 48)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((64, 32)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((48, 32)), jnp.float32)
+    out = blas.gemm(a, b, c, alpha=2.0, beta=0.5, trans_a="T")
+    want = 2.0 * np.asarray(a).T @ np.asarray(b) + 0.5 * np.asarray(c)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_batched():
+    a = jnp.asarray(RNG.standard_normal((3, 32, 16)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((3, 16, 24)), jnp.float32)
+    out = blas.gemm(a, b)
+    np.testing.assert_allclose(out, np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_symm_references_one_triangle():
+    a_full = RNG.standard_normal((32, 32)).astype(np.float32)
+    a_garbage_upper = np.tril(a_full) + np.triu(
+        RNG.standard_normal((32, 32)).astype(np.float32), 1)
+    b = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    out = blas.symm(jnp.asarray(a_garbage_upper), b, uplo="L")
+    sym = np.tril(a_garbage_upper) + np.tril(a_garbage_upper, -1).T
+    np.testing.assert_allclose(out, sym @ np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_syrk_beta_triangle_semantics():
+    a = jnp.asarray(RNG.standard_normal((24, 48)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((24, 24)), jnp.float32)
+    out = blas.syrk(a, c, uplo="L", alpha=1.0, beta=2.0)
+    want_l = np.tril(np.asarray(a) @ np.asarray(a).T
+                     + 2.0 * np.asarray(c))
+    np.testing.assert_allclose(np.tril(np.asarray(out)), want_l,
+                               rtol=1e-4, atol=1e-4)
+    # upper triangle must be untouched C values
+    np.testing.assert_allclose(np.triu(np.asarray(out), 1),
+                               np.triu(np.asarray(c), 1), rtol=1e-6)
+
+
+def test_her2k_hermitian():
+    a = jnp.asarray((RNG.standard_normal((16, 24))
+                     + 1j * RNG.standard_normal((16, 24))), jnp.complex64)
+    b = jnp.asarray((RNG.standard_normal((16, 24))
+                     + 1j * RNG.standard_normal((16, 24))), jnp.complex64)
+    out = blas.her2k(a, b, uplo="L", alpha=1.0)
+    full = np.asarray(a) @ np.asarray(b).conj().T \
+        + np.asarray(b) @ np.asarray(a).conj().T
+    np.testing.assert_allclose(np.tril(np.asarray(out)), np.tril(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_trmm_trsm_roundtrip():
+    lt = np.tril(RNG.standard_normal((48, 48)).astype(np.float32) / 48)
+    np.fill_diagonal(lt, 1.5)
+    b = jnp.asarray(RNG.standard_normal((48, 20)), jnp.float32)
+    prod = blas.trmm(jnp.asarray(lt), b, side="L", uplo="L")
+    back = blas.trsm(jnp.asarray(lt), prod, side="L", uplo="L")
+    np.testing.assert_allclose(back, b, rtol=1e-3, atol=1e-3)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def test_getrf_gesv_f64():
+    n = 200
+    a = RNG.standard_normal((n, n)) + np.eye(n) * 3
+    b = RNG.standard_normal((n, 5))
+    x = lapack.gesv(jnp.asarray(a), jnp.asarray(b), nb=64)
+    np.testing.assert_allclose(x, np.linalg.solve(a, b), rtol=1e-8,
+                               atol=1e-8)
+
+
+def test_gesv_complex():
+    n = 150
+    a = (RNG.standard_normal((n, n))
+         + 1j * RNG.standard_normal((n, n))) + np.eye(n) * 4
+    b = RNG.standard_normal((n, 3)) + 1j * RNG.standard_normal((n, 3))
+    x = lapack.gesv(jnp.asarray(a), jnp.asarray(b), nb=48)
+    np.testing.assert_allclose(x, np.linalg.solve(a, b), rtol=1e-8,
+                               atol=1e-8)
+
+
+def test_potrf():
+    n = 160
+    a = RNG.standard_normal((n, n))
+    s = a @ a.T + n * np.eye(n)
+    l = lapack.potrf(jnp.asarray(s), nb=64)
+    np.testing.assert_allclose(l, np.linalg.cholesky(s), rtol=1e-8,
+                               atol=1e-8)
+
+
+def test_getrf_pivoting_hard_case():
+    # leading zeros force pivoting
+    a = np.array([[0.0, 1.0, 2.0], [1.0, 0.0, 1.0], [2.0, 3.0, 0.0]])
+    b = np.array([1.0, 2.0, 3.0])
+    x = lapack.gesv(jnp.asarray(a), jnp.asarray(b), nb=2)
+    np.testing.assert_allclose(x, np.linalg.solve(a, b), rtol=1e-10)

@@ -1,0 +1,149 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.attention import flash_attention
+from repro.kernels.gemm import gemm as pallas_gemm
+from repro.kernels.syrk import syrk as pallas_syrk
+from repro.kernels.trsm import trsm as pallas_trsm
+
+RNG = np.random.default_rng(0)
+
+
+def _tri(n, uplo, dtype=np.float32):
+    a = RNG.standard_normal((n, n)).astype(dtype) / n
+    a = np.tril(a) if uplo == "L" else np.triu(a)
+    np.fill_diagonal(a, 1.0 + np.abs(np.diag(a)))
+    return a
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (300, 200, 150),
+                                   (64, 257, 100), (33, 65, 17)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_shapes_dtypes(m, k, n, dtype):
+    a = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    b = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    out = pallas_gemm(a, b, bm=128, bk=128, bn=128, interpret=True)
+    want = ref.matmul(a, b)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert out.dtype == a.dtype
+
+
+def test_gemm_f64():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        a = jnp.asarray(RNG.standard_normal((130, 70)))
+        b = jnp.asarray(RNG.standard_normal((70, 90)))
+        out = pallas_gemm(a, b, bm=128, bk=128, bn=128, interpret=True)
+        np.testing.assert_allclose(out, np.asarray(a) @ np.asarray(b),
+                                   rtol=1e-12, atol=1e-12)
+        assert out.dtype == jnp.float64
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("side", ["L", "R"])
+@pytest.mark.parametrize("uplo", ["L", "U"])
+@pytest.mark.parametrize("trans", ["N", "T"])
+@pytest.mark.parametrize("diag", ["N", "U"])
+def test_trsm_variants(side, uplo, trans, diag):
+    m, n = 160, 96
+    a = _tri(m if side == "L" else n, uplo)
+    b = RNG.standard_normal((m, n)).astype(np.float32)
+    got = pallas_trsm(jnp.asarray(a), jnp.asarray(b), side=side,
+                      uplo=uplo, trans=trans, diag=diag, interpret=True)
+    want = ref.trsm(jnp.asarray(a), jnp.asarray(b), side=side, uplo=uplo,
+                    trans=trans, diag=diag)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_trsm_batched():
+    a = np.stack([_tri(96, "L") for _ in range(3)])
+    b = RNG.standard_normal((3, 96, 32)).astype(np.float32)
+    got = pallas_trsm(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    want = ref.trsm(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("uplo", ["L", "U"])
+@pytest.mark.parametrize("trans", ["N", "T"])
+@pytest.mark.parametrize("n,k", [(200, 130), (128, 256), (65, 33)])
+def test_syrk(uplo, trans, n, k):
+    shape = (n, k) if trans == "N" else (k, n)
+    a = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    got = pallas_syrk(a, uplo=uplo, trans=trans, interpret=True)
+    want = ref.syrk(a, uplo=uplo, trans=trans)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False),
+    dict(causal=True, window=32),
+    dict(causal=True, softcap=30.0),
+    dict(causal=True, window=48, softcap=20.0),
+])
+def test_flash_attention(kwargs):
+    q = jnp.asarray(RNG.standard_normal((2, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 2, 128, 64)), jnp.float32)
+    got = flash_attention(q, k, v, bq=64, bk=64, interpret=True, **kwargs)
+    want = ref.attention(q, k, v, **kwargs)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_ragged_tq():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 100, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 100, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 100, 32)), jnp.float32)
+    got = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_complex_matmul_via_ops():
+    import os
+    os.environ["SCILIB_PALLAS"] = "1"
+    try:
+        from repro.kernels import ops
+        a = (RNG.standard_normal((96, 64))
+             + 1j * RNG.standard_normal((96, 64))).astype(np.complex64)
+        b = (RNG.standard_normal((64, 80))
+             + 1j * RNG.standard_normal((64, 80))).astype(np.complex64)
+        got = ops.matmul(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(got, a @ b, rtol=1e-3, atol=1e-3)
+    finally:
+        os.environ.pop("SCILIB_PALLAS", None)
+
+
+@pytest.mark.parametrize("kvlen", [1, 37, 128, 256])
+def test_decode_attention_kernel(kvlen):
+    from repro.kernels.decode_attention import decode_attention
+    q = jnp.asarray(RNG.standard_normal((2, 8, 1, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 2, 256, 64)), jnp.float32)
+    got = decode_attention(q, k, v, jnp.asarray(kvlen), bk=64,
+                           interpret=True)
+    want = ref.attention(q, k, v, causal=True,
+                         kv_len=jnp.asarray(kvlen))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_softcap_and_bf16():
+    from repro.kernels.decode_attention import decode_attention
+    q = jnp.asarray(RNG.standard_normal((1, 4, 1, 32)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((1, 4, 128, 32)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((1, 4, 128, 32)), jnp.bfloat16)
+    got = decode_attention(q, k, v, jnp.asarray(100), softcap=20.0,
+                           bk=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, softcap=20.0,
+                         kv_len=jnp.asarray(100))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2)

@@ -1,0 +1,100 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.threshold import n_avg, should_offload
+from repro.core.trace import Trace
+from repro.memtier import GH200, MemTierSimulator, replay_trace
+from repro.optim.grad_compress import (_dequantize, _quantize,
+                                       compress_decompress,
+                                       init_compression)
+
+dims = st.integers(min_value=1, max_value=5000)
+# movement comparisons need super-page matrices (a page-granular
+# migration of an 8-byte matrix rightly costs more than copying it)
+big_dims = st.integers(min_value=128, max_value=5000)
+
+
+@given(m=dims, n=dims, k=dims)
+def test_navg_scale_invariance(m, n, k):
+    """N_avg of gemm is the geometric mean: symmetric + monotone."""
+    assert n_avg("dgemm", m, n, k) == n_avg("dgemm", n, m, k)
+    assert n_avg("dgemm", m, n, k) <= n_avg("dgemm", m + 1, n, k)
+    off_lo, _ = should_offload("dgemm", m, n, k, threshold=1e12)
+    assert not off_lo  # infinite threshold never offloads
+
+
+@given(m=dims, n=dims, k=dims, reps=st.integers(1, 10))
+@settings(max_examples=25, deadline=None)
+def test_dfu_movement_bounded_by_working_set(m, n, k, reps):
+    """DFU never moves more than one pass over the distinct buffers."""
+    t = Trace()
+    a = t.new_buffer(m * k * 8, "A")
+    b = t.new_buffer(k * n * 8, "B")
+    c = t.new_buffer(m * n * 8, "C")
+    for _ in range(reps):
+        t.gemm("d", m, n, k, a, b, c)
+    sim = MemTierSimulator(GH200, policy="dfu", threshold=0)
+    rep = sim.run(t)
+    working = sum(t.buffer_sizes.values())
+    assert rep.bytes_host_to_dev <= working * 1.01 + 3 * GH200.page_size
+
+
+@given(m=big_dims, n=big_dims, k=big_dims, reps=st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_memcopy_movement_scales_with_calls(m, n, k, reps):
+    """Mem-Copy movement is linear in calls; DFU's is not."""
+    def run(policy):
+        t = Trace()
+        a = t.new_buffer(m * k * 8, "A")
+        b = t.new_buffer(k * n * 8, "B")
+        c = t.new_buffer(m * n * 8, "C")
+        for _ in range(reps):
+            t.gemm("d", m, n, k, a, b, c)
+        return MemTierSimulator(GH200, policy=policy, threshold=0).run(t)
+
+    mc, dfu = run("memcopy"), run("dfu")
+    # memcopy counts exact operand bytes; DFU migrates page-rounded
+    tol = reps * 3 * GH200.page_size
+    assert abs(mc.bytes_host_to_dev - reps * dfu.bytes_host_to_dev) <= tol
+    # (total-time ordering is shape-dependent at small sizes — the very
+    # reason the offload threshold exists — and is asserted at realistic
+    # scale in test_memtier.test_policy_ordering_reuse_heavy)
+
+
+@given(st.lists(st.floats(min_value=-100, max_value=100,
+                          allow_nan=False, width=32),
+                min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantize_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, s = _quantize(x)
+    err = np.max(np.abs(np.asarray(_dequantize(q, s)) - np.asarray(x)))
+    assert err <= float(s) * 0.5 + 1e-6   # half-ULP of the int8 grid
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_error_feedback_conserves_mass(seed):
+    """grads_out + residual_new == grads_in + residual_old exactly."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+    state = init_compression(g)
+    out, new_state = compress_decompress(g, state)
+    lhs = np.asarray(out["w"]) + np.asarray(new_state.residual["w"])
+    rhs = np.asarray(g["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+@given(step=st.integers(0, 10_000), shard=st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_pipeline_pure_function_of_step(step, shard):
+    from repro.data import DataConfig, TokenPipeline
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=8)
+    p = TokenPipeline(cfg, num_shards=4)
+    b1 = p.batch(step, shard)
+    b2 = p.batch(step, shard)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert int(b1["tokens"].max()) < 100
