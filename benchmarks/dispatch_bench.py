@@ -1,0 +1,141 @@
+"""Dispatch fast-path benchmark: seed (sync, uncached) vs fast (async,
+cached) runtime, on the two workloads the tentpole targets.
+
+* ``smallgemm`` — a loop of sub-threshold 64^3 sgemms from one call
+  site.  The paper's point: interception overhead must be ~zero for
+  calls that *stay on the host*; the seed runtime spent ~200us/call on
+  re-created device scalars, re-derived thresholds and a mandatory
+  ``block_until_ready``.
+* ``dfuchain`` — a 100-call chained DFU workload (``C = A @ C``) above
+  the threshold: placement-registry hits plus async submission.
+
+Modes are selected with the runtime's own knobs so the comparison runs
+the *same* code path the library ships:
+
+* seed: ``SCILIB_SYNC=1`` + ``SCILIB_DISPATCH_CACHE=0`` (per-call
+  blocking + per-call re-derivation, the seed's behaviour),
+* fast: the defaults (async + dispatch cache).
+
+    PYTHONPATH=src python -m benchmarks.dispatch_bench
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+SMALL_N = 64
+SMALL_CALLS = 400
+CHAIN_N = 256
+CHAIN_CALLS = 100
+REPS = 3
+
+
+def _install(mode: str):
+    from repro.core import runtime as rtm
+    if mode == "seed":
+        os.environ["SCILIB_SYNC"] = "1"
+        os.environ["SCILIB_DISPATCH_CACHE"] = "0"
+    else:
+        os.environ.pop("SCILIB_SYNC", None)
+        os.environ["SCILIB_DISPATCH_CACHE"] = "1"
+    from repro.core import blas
+    blas.clear_caches()
+    return rtm
+
+
+def _sweep(fn, runtime, calls: int) -> float:
+    """calls/sec, best of REPS (first rep also warms compile caches)."""
+    best = 0.0
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fn()
+        runtime.sync()
+        best = max(best, calls / (time.perf_counter() - t0))
+    return best
+
+
+def _bench_smallgemm(mode: str) -> float:
+    rtm = _install(mode)
+    from repro.core import blas
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(0)
+    rt = rtm.install("dfu", record_trace=False)   # default threshold: host
+    try:
+        a = host_array(rng.standard_normal((SMALL_N, SMALL_N))
+                       .astype("float32"))
+        b = host_array(rng.standard_normal((SMALL_N, SMALL_N))
+                       .astype("float32"))
+
+        def loop():
+            for _ in range(SMALL_CALLS):
+                blas.gemm(a, b, alpha=1.0, beta=0.0)
+
+        return _sweep(loop, rt, SMALL_CALLS)
+    finally:
+        rtm.uninstall()
+
+
+def _bench_dfuchain(mode: str) -> float:
+    rtm = _install(mode)
+    from repro.core import blas
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(1)
+    rt = rtm.install("dfu", threshold=100, record_trace=False)
+    try:
+        a = host_array(rng.standard_normal((CHAIN_N, CHAIN_N))
+                       .astype("float32") / CHAIN_N)
+
+        def loop():
+            c = a
+            for _ in range(CHAIN_CALLS):
+                c = blas.gemm(a, c)
+            return c
+
+        return _sweep(loop, rt, CHAIN_CALLS)
+    finally:
+        rtm.uninstall()
+
+
+def bench() -> List[Row]:
+    rows: List[Row] = []
+    saved = {k: os.environ.get(k)
+             for k in ("SCILIB_SYNC", "SCILIB_DISPATCH_CACHE")}
+    try:
+        small = {m: _bench_smallgemm(m) for m in ("seed", "fast")}
+        chain = {m: _bench_dfuchain(m) for m in ("seed", "fast")}
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    rows.append(("dispatch.smallgemm64.seed_cps", round(small["seed"], 0),
+                 "sync + uncached (seed runtime)"))
+    rows.append(("dispatch.smallgemm64.fast_cps", round(small["fast"], 0),
+                 "async + dispatch cache"))
+    rows.append(("dispatch.smallgemm64.speedup",
+                 round(small["fast"] / small["seed"], 2),
+                 "acceptance: >= 2x"))
+    rows.append(("dispatch.dfuchain100.seed_cps", round(chain["seed"], 0),
+                 "sync + uncached (seed runtime)"))
+    rows.append(("dispatch.dfuchain100.fast_cps", round(chain["fast"], 0),
+                 "async + dispatch cache"))
+    rows.append(("dispatch.dfuchain100.speedup",
+                 round(chain["fast"] / chain["seed"], 2),
+                 "chained DFU workload"))
+    return rows
+
+
+def main() -> None:
+    print("name,value,derived")
+    for name, value, derived in bench():
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

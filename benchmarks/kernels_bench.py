@@ -20,8 +20,8 @@ V5E_FLOPS = 197.0e12
 
 
 def _wall(fn, *args, reps=3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
-        else fn(*args).block_until_ready()
+    warm = fn(*args)                       # evaluate the warmup once
+    (warm[0] if isinstance(warm, tuple) else warm).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)

@@ -15,13 +15,15 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: t1,t3,t4,t5,t6,t7,t8,kern,roofline")
+                    help="comma list: dispatch,t1,t3,t4,t5,t6,t7,t8,"
+                         "kern,serve,roofline")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
-    from benchmarks import (kernels_bench, roofline_report, serve_bench,
-                            tables)
+    from benchmarks import (dispatch_bench, kernels_bench,
+                            roofline_report, serve_bench, tables)
     suites = [
+        ("dispatch", dispatch_bench.bench),
         ("t1", tables.table1_stream),
         ("t3", tables.table3_must),
         ("t4", tables.table4_scaling),

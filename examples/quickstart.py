@@ -33,7 +33,10 @@ def main():
     stats = scilib.uninstall()
 
     print(stats.report())
-    print(f"\nresult memory kind: {c.sharding.memory_kind}")
+    ms = scilib.memspace.active()
+    print(f"\nresult tier: {scilib.memspace.tier_of(c)} "
+          f"(memory kind {ms.kind_of(scilib.memspace.tier_of(c))}"
+          f"{', simulated' if ms.simulated else ''})")
     print(f"mean buffer reuse: {runtime.mean_buffer_reuse():.1f}")
     # verify against plain execution
     c2, d2, small2 = application_code(a, b)

@@ -6,15 +6,20 @@ Public surface:
 * :mod:`repro.core.intercept` — ``install``/``uninstall``/``offload``:
   automatic interception of ``jnp.dot/matmul/einsum`` (DBI-mode).
 * :mod:`repro.core.lapack` — blocked LU/Cholesky drivers on that BLAS.
-* :mod:`repro.core.runtime` — the placement runtime + statistics.
+* :mod:`repro.core.runtime` — the placement runtime + statistics
+  (async by default; ``SCILIB_SYNC=1`` or ``runtime.sync()`` to fence).
 * :mod:`repro.core.policy` — Mem-Copy / counter / Device-First-Use /
   pinned / cpu data-movement policies.
+* :mod:`repro.core.memspace` — portable logical HOST/DEVICE memory
+  tiers mapped onto the backend's real memory kinds (simulated-tier
+  fallback on single-kind backends).
 """
-from repro.core import blas, lapack
+from repro.core import blas, lapack, memspace
 from repro.core.intercept import install, offload, uninstall
 from repro.core.policy import host_array
 from repro.core.runtime import OffloadRuntime, active
 from repro.core.trace import BlasCall, Trace
 
-__all__ = ["blas", "lapack", "install", "offload", "uninstall",
-           "OffloadRuntime", "active", "BlasCall", "Trace", "host_array"]
+__all__ = ["blas", "lapack", "memspace", "install", "offload",
+           "uninstall", "OffloadRuntime", "active", "BlasCall", "Trace",
+           "host_array"]

@@ -15,7 +15,8 @@ variants (cublas*Batched analogues) with the same placement logic.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import os
+from typing import Callable, Dict, Hashable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,13 +26,85 @@ from repro.core import runtime as rt
 __all__ = ["gemm", "symm", "hemm", "syrk", "herk", "syr2k", "her2k",
            "trmm", "trsm", "routine_name"]
 
+_RNAMES: Dict[Tuple[str, str], str] = {}
+
 
 def routine_name(base: str, dtype) -> str:
     dt = jnp.dtype(dtype)
-    prefix = {"float32": "s", "float64": "d", "complex64": "c",
-              "complex128": "z", "bfloat16": "s", "float16": "s"}.get(
-                  dt.name, "s")
-    return prefix + base
+    name = _RNAMES.get((base, dt.name))
+    if name is None:
+        prefix = {"float32": "s", "float64": "d", "complex64": "c",
+                  "complex128": "z", "bfloat16": "s", "float16": "s"}.get(
+                      dt.name, "s")
+        name = _RNAMES[(base, dt.name)] = prefix + base
+    return name
+
+
+# ----------------------------------------------------------------------- #
+# dispatch fast path: memoized device scalars and bound kernels            #
+#                                                                          #
+# The seed runtime re-created ``jnp.asarray(alpha)`` device scalars and a  #
+# fresh compute closure on *every* call (~50us per scalar on this          #
+# container — dwarfing the 64^3 gemm it wraps).  Steady-state BLAS calls   #
+# hit these tables instead and re-derive nothing; ``SCILIB_DISPATCH_CACHE  #
+# =0`` restores the per-call re-derivation for A/B benchmarking.           #
+# ----------------------------------------------------------------------- #
+_CACHE_ON = os.environ.get("SCILIB_DISPATCH_CACHE", "1") != "0"
+_SCALARS: Dict[Tuple, jax.Array] = {}
+_BOUND: Dict[Hashable, Callable] = {}
+_CACHE_LIMIT = 4096
+
+
+def refresh_cache_flag() -> None:
+    """Re-read SCILIB_DISPATCH_CACHE (called from runtime.install)."""
+    global _CACHE_ON
+    _CACHE_ON = os.environ.get("SCILIB_DISPATCH_CACHE", "1") != "0"
+
+
+def clear_caches() -> None:
+    _SCALARS.clear()
+    _BOUND.clear()
+
+
+def _hashable(v):
+    """Scalar cache key for alpha/beta, or None if uncacheable (arrays)."""
+    if isinstance(v, (bool, int, float, complex)):
+        return v
+    return None
+
+
+def _scalar(v, dtype) -> jax.Array:
+    """Device scalar for alpha/beta, memoized by (value, dtype)."""
+    key = _hashable(v)
+    if not _CACHE_ON or key is None:
+        return jnp.asarray(v, dtype=dtype)
+    full = (key, jnp.dtype(dtype).name)
+    arr = _SCALARS.get(full)
+    if arr is None:
+        if len(_SCALARS) > _CACHE_LIMIT:
+            _SCALARS.clear()
+        arr = _SCALARS[full] = jnp.asarray(v, dtype=dtype)
+    return arr
+
+
+def _bound(key: Optional[Hashable], factory: Callable[[], Callable]):
+    """Memoize the bound compute closure for one call-site signature."""
+    if not _CACHE_ON or key is None:
+        return factory()
+    fn = _BOUND.get(key)
+    if fn is None:
+        if len(_BOUND) > _CACHE_LIMIT:
+            _BOUND.clear()
+        fn = _BOUND[key] = factory()
+    return fn
+
+
+def _call_key(bkey: Optional[Hashable], m: int, n: int, k: int,
+              batch: int) -> Optional[Hashable]:
+    """Dispatch-cache key: (routine, flags, dtype, alpha, beta) + shape."""
+    if bkey is None:
+        return None
+    return (bkey, m, n, k, batch)
 
 
 def _op(x: jax.Array, trans: str) -> jax.Array:
@@ -166,12 +239,12 @@ def _trsm_kernel(a, b, alpha, *, side, uplo, trans, diag):
 # ----------------------------------------------------------------------- #
 # public routines                                                          #
 # ----------------------------------------------------------------------- #
-def _dispatch(routine, m, n, k, operands, compute, batch=1):
+def _dispatch(routine, m, n, k, operands, compute, batch=1, key=None):
     runtime = rt.active()
     if runtime is None:
         return compute(*[x for _, x, _, _ in operands])
     return runtime.blas_call(routine, m, n, k, operands, compute,
-                             batch=batch)
+                             batch=batch, key=key)
 
 
 def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
@@ -182,25 +255,36 @@ def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
     opk = a.shape[-1] if trans_a == "N" else a.shape[-2]
     opn = b.shape[-1] if trans_b == "N" else b.shape[-2]
     batch = _batch_of(a, b, c)
-    alpha_ = jnp.asarray(alpha, dtype=a.dtype)
-    beta_ = jnp.asarray(beta, dtype=a.dtype)
+    dt = a.dtype
     has_c = c is not None
-    c_in = c if has_c else jnp.zeros((), dtype=a.dtype)
+    av, bv = _hashable(alpha), _hashable(beta)
+    bkey = (("gemm", dt.name, trans_a, trans_b, has_c, av, bv)
+            if av is not None and bv is not None else None)
 
-    def compute(a_, b_, c_=c_in):
-        return _gemm_kernel(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
-                            trans_b=trans_b, has_c=has_c)
+    def factory():
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def compute(a_, b_, c_):
+                return _gemm_kernel(a_, b_, c_, alpha_, beta_,
+                                    trans_a=trans_a, trans_b=trans_b,
+                                    has_c=True)
+        else:
+            c0 = _scalar(0.0, dt)
 
+            def compute(a_, b_):
+                return _gemm_kernel(a_, b_, c0, alpha_, beta_,
+                                    trans_a=trans_a, trans_b=trans_b,
+                                    has_c=False)
+        return compute
+
+    compute = _bound(bkey, factory)
     ops = [("A", a, float(opn), False), ("B", b, float(opm), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
-
-        def compute(a_, b_, c_):
-            return _gemm_kernel(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
-                                trans_b=trans_b, has_c=True)
-
-    return _dispatch(routine_name("gemm", a.dtype), opm, opn, opk,
-                     ops, compute, batch)
+    return _dispatch(routine_name("gemm", dt), opm, opn, opk,
+                     ops, compute, batch,
+                     key=_call_key(bkey, opm, opn, opk, batch))
 
 
 def symm(a, b, c=None, *, side="L", uplo="L", alpha=1.0, beta=0.0):
@@ -217,25 +301,35 @@ def hemm(a, b, c=None, *, side="L", uplo="L", alpha=1.0, beta=0.0):
 def _symm_like(a, b, c, *, side, uplo, alpha, beta, conj, base):
     m, n = b.shape[-2], b.shape[-1]
     batch = _batch_of(a, b, c)
-    alpha_ = jnp.asarray(alpha, dtype=b.dtype)
-    beta_ = jnp.asarray(beta, dtype=b.dtype)
+    dt = b.dtype
     has_c = c is not None
+    av, bv = _hashable(alpha), _hashable(beta)
+    bkey = ((base, dt.name, side, uplo, has_c, av, bv)
+            if av is not None and bv is not None else None)
+
+    def factory():
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def compute(a_, b_, c_):
+                return _symm_kernel(a_, b_, c_, alpha_, beta_, side=side,
+                                    uplo=uplo, conj=conj, has_c=True)
+        else:
+            c0 = _scalar(0.0, dt)
+
+            def compute(a_, b_):
+                return _symm_kernel(a_, b_, c0, alpha_, beta_, side=side,
+                                    uplo=uplo, conj=conj, has_c=False)
+        return compute
+
+    compute = _bound(bkey, factory)
     ops = [("A", a, float(n if side == "L" else m), False),
            ("B", b, float(a.shape[-1]), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
-
-        def compute(a_, b_, c_):
-            return _symm_kernel(a_, b_, c_, alpha_, beta_, side=side,
-                                uplo=uplo, conj=conj, has_c=True)
-    else:
-        def compute(a_, b_):
-            return _symm_kernel(a_, b_, jnp.zeros((), b.dtype), alpha_,
-                                beta_, side=side, uplo=uplo, conj=conj,
-                                has_c=False)
-
-    return _dispatch(routine_name(base, b.dtype), a.shape[-1], n, 0,
-                     ops, compute, batch)
+    return _dispatch(routine_name(base, dt), a.shape[-1], n, 0,
+                     ops, compute, batch,
+                     key=_call_key(bkey, a.shape[-1], n, 0, batch))
 
 
 def syrk(a, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
@@ -253,24 +347,33 @@ def _syrk_like(a, c, *, uplo, trans, alpha, beta, conj, base):
     n = a.shape[-2] if trans == "N" else a.shape[-1]
     k = a.shape[-1] if trans == "N" else a.shape[-2]
     batch = _batch_of(a, c)
-    alpha_ = jnp.asarray(alpha, dtype=a.dtype)
-    beta_ = jnp.asarray(beta, dtype=a.dtype)
+    dt = a.dtype
     has_c = c is not None
+    av, bv = _hashable(alpha), _hashable(beta)
+    bkey = ((base, dt.name, uplo, trans, has_c, av, bv)
+            if av is not None and bv is not None else None)
+
+    def factory():
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def compute(a_, c_):
+                return _syrk_kernel(a_, c_, alpha_, beta_, uplo=uplo,
+                                    trans=trans, conj=conj, has_c=True)
+        else:
+            c0 = _scalar(0.0, dt)
+
+            def compute(a_):
+                return _syrk_kernel(a_, c0, alpha_, beta_, uplo=uplo,
+                                    trans=trans, conj=conj, has_c=False)
+        return compute
+
+    compute = _bound(bkey, factory)
     ops = [("A", a, float(n), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
-
-        def compute(a_, c_):
-            return _syrk_kernel(a_, c_, alpha_, beta_, uplo=uplo,
-                                trans=trans, conj=conj, has_c=True)
-    else:
-        def compute(a_):
-            return _syrk_kernel(a_, jnp.zeros((), a.dtype), alpha_, beta_,
-                                uplo=uplo, trans=trans, conj=conj,
-                                has_c=False)
-
-    return _dispatch(routine_name(base, a.dtype), n, n, k, ops, compute,
-                     batch)
+    return _dispatch(routine_name(base, dt), n, n, k, ops, compute,
+                     batch, key=_call_key(bkey, n, n, k, batch))
 
 
 def syr2k(a, b, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
@@ -287,55 +390,67 @@ def _syr2k_like(a, b, c, *, uplo, trans, alpha, beta, conj, base):
     n = a.shape[-2] if trans == "N" else a.shape[-1]
     k = a.shape[-1] if trans == "N" else a.shape[-2]
     batch = _batch_of(a, b, c)
-    alpha_ = jnp.asarray(alpha, dtype=a.dtype)
-    beta_ = jnp.asarray(beta, dtype=a.dtype)
+    dt = a.dtype
     has_c = c is not None
+    av, bv = _hashable(alpha), _hashable(beta)
+    bkey = ((base, dt.name, uplo, trans, has_c, av, bv)
+            if av is not None and bv is not None else None)
+
+    def factory():
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def compute(a_, b_, c_):
+                return _syr2k_kernel(a_, b_, c_, alpha_, beta_, uplo=uplo,
+                                     trans=trans, conj=conj, has_c=True)
+        else:
+            c0 = _scalar(0.0, dt)
+
+            def compute(a_, b_):
+                return _syr2k_kernel(a_, b_, c0, alpha_, beta_, uplo=uplo,
+                                     trans=trans, conj=conj, has_c=False)
+        return compute
+
+    compute = _bound(bkey, factory)
     ops = [("A", a, float(n), False), ("B", b, float(n), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
-
-        def compute(a_, b_, c_):
-            return _syr2k_kernel(a_, b_, c_, alpha_, beta_, uplo=uplo,
-                                 trans=trans, conj=conj, has_c=True)
-    else:
-        def compute(a_, b_):
-            return _syr2k_kernel(a_, b_, jnp.zeros((), a.dtype), alpha_,
-                                 beta_, uplo=uplo, trans=trans, conj=conj,
-                                 has_c=False)
-
-    return _dispatch(routine_name(base, a.dtype), n, n, k, ops, compute,
-                     batch)
+    return _dispatch(routine_name(base, dt), n, n, k, ops, compute,
+                     batch, key=_call_key(bkey, n, n, k, batch))
 
 
 def trmm(a, b, *, side="L", uplo="L", trans="N", diag="N", alpha=1.0):
     """B := alpha op(A) B (or B op(A)), A triangular."""
-    m, n = b.shape[-2], b.shape[-1]
-    batch = _batch_of(a, b)
-    alpha_ = jnp.asarray(alpha, dtype=b.dtype)
-
-    def compute(a_, b_):
-        return _trmm_kernel(a_, b_, alpha_, side=side, uplo=uplo,
-                            trans=trans, diag=diag)
-
-    tri_n = a.shape[-1]
-    ops = [("A", a, float(n if side == "L" else m), False),
-           ("B", b, float(tri_n), True)]
-    return _dispatch(routine_name("trmm", b.dtype), tri_n, n if side == "L"
-                     else m, 0, ops, compute, batch)
+    return _tri_like(a, b, side=side, uplo=uplo, trans=trans, diag=diag,
+                     alpha=alpha, base="trmm", kernel=_trmm_kernel)
 
 
 def trsm(a, b, *, side="L", uplo="L", trans="N", diag="N", alpha=1.0):
     """Solve op(A) X = alpha B (or X op(A) = alpha B), A triangular."""
+    return _tri_like(a, b, side=side, uplo=uplo, trans=trans, diag=diag,
+                     alpha=alpha, base="trsm", kernel=_trsm_kernel)
+
+
+def _tri_like(a, b, *, side, uplo, trans, diag, alpha, base, kernel):
     m, n = b.shape[-2], b.shape[-1]
     batch = _batch_of(a, b)
-    alpha_ = jnp.asarray(alpha, dtype=b.dtype)
+    dt = b.dtype
+    av = _hashable(alpha)
+    bkey = ((base, dt.name, side, uplo, trans, diag, av)
+            if av is not None else None)
 
-    def compute(a_, b_):
-        return _trsm_kernel(a_, b_, alpha_, side=side, uplo=uplo,
-                            trans=trans, diag=diag)
+    def factory():
+        alpha_ = _scalar(alpha, dt)
 
+        def compute(a_, b_):
+            return kernel(a_, b_, alpha_, side=side, uplo=uplo,
+                          trans=trans, diag=diag)
+        return compute
+
+    compute = _bound(bkey, factory)
     tri_n = a.shape[-1]
-    ops = [("A", a, float(n if side == "L" else m), False),
+    opn = n if side == "L" else m
+    ops = [("A", a, float(opn), False),
            ("B", b, float(tri_n), True)]
-    return _dispatch(routine_name("trsm", b.dtype), tri_n,
-                     n if side == "L" else m, 0, ops, compute, batch)
+    return _dispatch(routine_name(base, dt), tri_n, opn, 0, ops, compute,
+                     batch, key=_call_key(bkey, tri_n, opn, 0, batch))

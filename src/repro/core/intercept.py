@@ -88,13 +88,27 @@ def _build_patterns():
 
 
 def _canon_spec(spec: str):
-    """Rename indices canonically: first lhs operand's indices become
-    i/j (in order of appearance across the full spec)."""
+    """Canonicalize a two-operand einsum that is exactly a (possibly
+    transposed, possibly leading-batched) gemm.
+
+    Returns ``(canonical_2d_spec, batched)`` or None.  Batched specs are
+    the cublas*Batched shapes — ``bij,bjk->bik`` and transposed variants:
+    one leading index shared by both operands and the output, with a
+    plain gemm on the trailing two."""
     spec = spec.replace(" ", "")
     if "->" not in spec or spec.count(",") != 1:
         return None
     lhs, out = spec.split("->")
     a, b = lhs.split(",")
+    batched = False
+    if len(a) == 3 and len(b) == 3 and len(out) == 3:
+        bt = a[0]
+        if not (b[0] == bt and out[0] == bt):
+            return None
+        if bt in a[1:] or bt in b[1:] or bt in out[1:]:
+            return None
+        a, b, out = a[1:], b[1:], out[1:]
+        batched = True
     if len(a) != 2 or len(b) != 2 or len(out) != 2:
         return None
     # map: contraction index = the one shared between a and b
@@ -110,8 +124,9 @@ def _canon_spec(spec: str):
     if set(out) != {i, k} or out[0] != i:
         return None
     ren = {i: "i", j: "j", k: "k"}
-    return "".join(ren[c] for c in a) + "," + \
+    canon = "".join(ren[c] for c in a) + "," + \
         "".join(ren[c] for c in b) + "->ik"
+    return canon, batched
 
 
 def _einsum(spec, *operands, **kw):
@@ -119,10 +134,14 @@ def _einsum(spec, *operands, **kw):
             and _blasable(*operands) and not kw):
         canon = _canon_spec(spec)
         pats = _build_patterns()
-        if canon in pats:
-            ta, tb = pats[canon]
-            return blas.gemm(operands[0], operands[1],
-                             trans_a=ta, trans_b=tb)
+        if canon is not None and canon[0] in pats:
+            spec2d, batched = canon
+            a, b = operands
+            want_ndim = 3 if batched else 2
+            if (a.ndim == want_ndim and b.ndim == want_ndim
+                    and (not batched or a.shape[0] == b.shape[0])):
+                ta, tb = pats[spec2d]
+                return blas.gemm(a, b, trans_a=ta, trans_b=tb)
     if rt.active() is not None:
         rt.active().stats.uninstrumented_calls += 1
     return _ORIG["einsum"](spec, *operands, **kw)

@@ -1,0 +1,180 @@
+"""Portable logical memory tiers over JAX memory kinds.
+
+The paper's runtime moves buffers between two physical homes: host DRAM
+and device HBM, coherently addressable from both sides (GH200 NVLink-C2C).
+JAX exposes that split as *memory kinds* on a sharding — but the set of
+kinds is backend-dependent: a TPU/GPU backend offers ``device`` +
+``pinned_host`` (+ ``unpinned_host``), while the CPU backend of a dev
+container offers exactly one kind.  Hard-coding kind strings therefore
+breaks every policy on CPU before a single byte moves.
+
+This module maps two *logical* tiers onto whatever the backend has:
+
+* :data:`HOST`   — where CPU-first-touched data lives (the malloc side),
+* :data:`DEVICE` — where offloaded BLAS wants its operands (the HBM side).
+
+``probe()`` inspects ``addressable_memories()`` once.  When the backend
+has distinct kinds, ``put``/``tier_of`` are thin wrappers over real
+``device_put`` transfers.  When it has only one kind (CPU container),
+the mem-space runs in **simulated-tier** mode: the tier tag is carried in
+a side table keyed on buffer identity, a cross-tier ``put`` materializes
+a physical copy (so first-touch movement has a real cost and a distinct
+destination buffer), and every policy runs identically to the multi-kind
+backends — movement is still counted in the runtime statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Dict, Optional, Tuple
+
+import jax
+
+#: logical tier names (stable across backends)
+HOST = "host"
+DEVICE = "device"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemSpace:
+    """Resolved mapping of logical tiers onto one backend's memory kinds."""
+
+    host_kind: str      # physical kind backing the HOST tier
+    device_kind: str    # physical kind backing the DEVICE tier
+    simulated: bool     # True when the backend exposes a single kind
+    backend: str        # jax.default_backend() at probe time
+
+    def kind_of(self, tier: str) -> str:
+        return self.host_kind if tier == HOST else self.device_kind
+
+
+def probe(device: Optional[jax.Device] = None) -> MemSpace:
+    """Inspect the backend once and resolve the tier mapping."""
+    d = device if device is not None else jax.devices()[0]
+    backend = jax.default_backend()
+    try:
+        kinds = [m.kind for m in d.addressable_memories()]
+    except Exception:  # pragma: no cover - very old jaxlib
+        kinds = []
+    try:
+        device_kind = d.default_memory().kind
+    except Exception:  # pragma: no cover
+        device_kind = kinds[0] if kinds else "device"
+    if device_kind not in kinds and kinds:
+        device_kind = kinds[0]
+    # prefer pinned host memory for the HOST tier (DMA-able, what the
+    # paper's cudaMallocHost-style staging uses), else any non-device kind
+    host_kind = next((k for k in ("pinned_host", "unpinned_host")
+                      if k in kinds and k != device_kind), None)
+    if host_kind is None:
+        host_kind = next((k for k in kinds if k != device_kind), None)
+    if host_kind is None:
+        return MemSpace(host_kind=device_kind, device_kind=device_kind,
+                        simulated=True, backend=backend)
+    return MemSpace(host_kind=host_kind, device_kind=device_kind,
+                    simulated=False, backend=backend)
+
+
+# --------------------------------------------------------------------- #
+# module state: active mapping + simulated-tier tag table                 #
+# --------------------------------------------------------------------- #
+_ACTIVE: Optional[MemSpace] = None
+
+# id(arr) -> (weakref(arr), logical tier); only consulted in simulated
+# mode, but tags are maintained unconditionally so a mapping re-probe
+# (e.g. tests switching modes) never orphans tier state.
+_TIERS: Dict[int, Tuple[weakref.ref, str]] = {}
+
+
+def active() -> MemSpace:
+    """The resolved tier mapping (probed lazily on first use)."""
+    global _ACTIVE
+    if _ACTIVE is None:
+        _ACTIVE = probe()
+    return _ACTIVE
+
+
+def install(space: Optional[MemSpace] = None) -> MemSpace:
+    """Re-probe (or inject, for tests) the mapping; runtime.install hook."""
+    global _ACTIVE
+    _ACTIVE = probe() if space is None else space
+    return _ACTIVE
+
+
+def reset() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+    _TIERS.clear()
+
+
+def _tag(x: jax.Array, tier: str) -> None:
+    key = id(x)
+
+    def _drop(_ref, key=key):
+        _TIERS.pop(key, None)
+
+    _TIERS[key] = (weakref.ref(x, _drop), tier)
+
+
+def tier_of(x) -> str:
+    """Logical tier of a buffer (HOST or DEVICE).
+
+    Untagged buffers default to DEVICE: on accelerator backends freshly
+    created arrays are born in device memory, and the simulated mode
+    mirrors that so policies behave identically everywhere.  Data that is
+    semantically CPU-first-touched must come through :func:`host_array` /
+    ``put(x, HOST)``, exactly like the paper's malloc'd inputs.
+    """
+    ent = _TIERS.get(id(x))
+    if ent is not None and ent[0]() is not None:
+        return ent[1]
+    ms = active()
+    if ms.simulated:
+        return DEVICE
+    try:
+        kind = x.sharding.memory_kind or ms.device_kind
+    except Exception:  # non-array leaves
+        return DEVICE
+    return HOST if kind == ms.host_kind else DEVICE
+
+
+def put(x: jax.Array, tier: str) -> jax.Array:
+    """Re-home a buffer to a logical tier (the ``move_pages()`` analogue).
+
+    Real-tier mode issues a physical ``device_put`` to the mapped memory
+    kind.  Simulated mode materializes a copy tagged with the target tier
+    — the source keeps its own tag, so Mem-Copy-style round trips remain
+    observable and DFU's placement registry gets a distinct device-side
+    buffer to cache.
+    """
+    ms = active()
+    if not ms.simulated:
+        kind = ms.kind_of(tier)
+        cur = x.sharding.memory_kind or ms.device_kind
+        if cur == kind:
+            return x
+        return jax.device_put(x, x.sharding.with_memory_kind(kind))
+    if tier_of(x) == tier:
+        return x
+    import jax.numpy as jnp
+    moved = jnp.array(x, copy=True)
+    _tag(moved, tier)
+    return moved
+
+
+def tag_device(x: jax.Array) -> jax.Array:
+    """Mark an array device-resident without moving it (outputs of
+    offloaded compute are born on the device tier)."""
+    ms = active()
+    if ms.simulated and tier_of(x) != DEVICE:
+        _tag(x, DEVICE)
+    return x
+
+
+def tag_host(x: jax.Array) -> jax.Array:
+    """Mark an array host-resident without moving it (eviction bookkeeping
+    in simulated mode: the buffer's next device use must re-migrate)."""
+    ms = active()
+    if ms.simulated and tier_of(x) != HOST:
+        _tag(x, HOST)
+    return x

@@ -1,10 +1,11 @@
-"""Data-movement policies (paper §3.2) over real JAX memory kinds.
+"""Data-movement policies (paper §3.2) over portable logical memory tiers.
 
 The JAX adaptation of the paper's three strategies plus two controls.
-"Host tier" is ``memory_kind="pinned_host"``; "device tier" is
-``memory_kind="device"`` — on a real TPU these are host DRAM and HBM; on
-the CPU backend of this container they are distinct XLA memory spaces, so
-every ``device_put`` below is a *real* transfer, not a simulation.
+Tiers are the *logical* HOST/DEVICE pair of :mod:`repro.core.memspace`:
+on a TPU/GPU backend they map to real distinct memory kinds (host DRAM
+vs HBM) and every ``put`` is a physical transfer; on a single-kind CPU
+backend the mem-space simulates the tier split (tag + copy) so the same
+policies run — and produce the same statistics — on every backend.
 
 Buffer identity follows the source array object (the JAX analogue of the
 paper's virtual-address identity): placement is cached per buffer, so a
@@ -14,25 +15,26 @@ that pass the same array — that cache *is* the page table remap of Fig. 2.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
 
 import jax
 
-HOST_KIND = "pinned_host"
-DEVICE_KIND = "device"
+from repro.core import memspace
+
+#: logical tier names, re-exported for the runtime and tests.  These were
+#: once hard-coded physical memory kinds ("pinned_host"/"device"); the
+#: mem-space now resolves the physical kind per backend.
+HOST_KIND = memspace.HOST
+DEVICE_KIND = memspace.DEVICE
 
 
-def _put(x: jax.Array, kind: str) -> jax.Array:
-    """Re-home a buffer to a memory tier (the move_pages() analogue)."""
-    sharding = x.sharding.with_memory_kind(kind)
-    return jax.device_put(x, sharding)
+def _put(x: jax.Array, tier: str) -> jax.Array:
+    """Re-home a buffer to a logical tier (the move_pages() analogue)."""
+    return memspace.put(x, tier)
 
 
 def memory_kind_of(x: jax.Array) -> str:
-    try:
-        return x.sharding.memory_kind or DEVICE_KIND
-    except Exception:  # pragma: no cover - non-array leaves
-        return DEVICE_KIND
+    """Logical tier of a buffer (kept under its historical name)."""
+    return memspace.tier_of(x)
 
 
 def host_array(x) -> jax.Array:
@@ -72,7 +74,7 @@ class PolicyBase:
         if self.copy_back:
             nbytes = y.nbytes
             return Placement(_put(y, HOST_KIND), moved_bytes=nbytes)
-        return Placement(y)
+        return Placement(memspace.tag_device(y))
 
 
 class MemCopyPolicy(PolicyBase):
@@ -83,7 +85,7 @@ class MemCopyPolicy(PolicyBase):
     persistent = False
 
     def place_operand(self, runtime, x):
-        if memory_kind_of(x) == DEVICE_KIND:
+        if memspace.tier_of(x) == DEVICE_KIND:
             # even Mem-Copy tools skip the copy when data is already there
             return Placement(x, cache_hit=True)
         return Placement(_put(x, DEVICE_KIND), moved_bytes=x.nbytes)
@@ -106,7 +108,7 @@ class DeviceFirstUsePolicy(PolicyBase):
         cached = runtime.lookup_placement(x)
         if cached is not None:
             return Placement(cached, cache_hit=True)
-        if memory_kind_of(x) == DEVICE_KIND:
+        if memspace.tier_of(x) == DEVICE_KIND:
             runtime.register_placement(x, x)
             return Placement(x, cache_hit=False)
         moved = _put(x, DEVICE_KIND)
@@ -114,6 +116,7 @@ class DeviceFirstUsePolicy(PolicyBase):
         return Placement(moved, moved_bytes=x.nbytes)
 
     def place_output(self, runtime, y):
+        memspace.tag_device(y)
         runtime.register_placement(y, y)
         return Placement(y)
 
@@ -141,7 +144,7 @@ class CounterPolicy(PolicyBase):
         cached = runtime.lookup_placement(x)
         if cached is not None:
             return Placement(cached, cache_hit=True)
-        if memory_kind_of(x) == DEVICE_KIND:
+        if memspace.tier_of(x) == DEVICE_KIND:
             runtime.register_placement(x, x)
             return Placement(x)
         if written:
@@ -166,7 +169,7 @@ class PinnedDevicePolicy(PolicyBase):
         cached = runtime.lookup_placement(x)
         if cached is not None:
             return Placement(cached, cache_hit=True)
-        if memory_kind_of(x) == DEVICE_KIND:
+        if memspace.tier_of(x) == DEVICE_KIND:
             runtime.register_placement(x, x)
             return Placement(x)
         moved = _put(x, DEVICE_KIND)

@@ -5,36 +5,47 @@ One ``OffloadRuntime`` owns
 * the **placement registry** — buffer identity -> device-tier placement.
   This is the JAX analogue of the remapped page table (Fig. 2): the caller
   keeps its handle, the physical home changes once, later uses are free.
-* the **offload decision** (threshold logic of §3.3),
+  The registry is a byte-capped LRU (``SCILIB_DEVICE_BYTES``): when device
+  residency exceeds the cap, the least-recently-used placement is evicted
+  back to the host tier so DFU cannot grow HBM use unboundedly.
+* the **offload decision** (threshold logic of §3.3), memoized per call
+  site in the **dispatch cache** — steady-state calls re-derive nothing,
 * the **statistics** the paper's ``.fini_array`` hook prints (per-routine
   call/offload counts, bytes moved, wall time, reuse counts),
 * a **BLAS trace** so any run can be replayed through the memtier
   simulator under calibrated GH200/TPU constants (Tables 3/5 methodology).
 
-The runtime is deliberately synchronous and eager: it manages *placement*,
-while the arithmetic itself is jit-compiled per shape by the ops layer.
+Execution is **asynchronous by default**: the runtime manages *placement*
+and hands XLA the jit-compiled arithmetic without blocking, exactly like
+the paper's tool returns control to the host thread while cuBLAS runs.
+``SCILIB_SYNC=1`` (or ``install(..., sync=True)``) restores the fully
+synchronous seed behaviour — per-call ``block_until_ready`` with wall
+time measured around the device work — and ``runtime.sync()`` drains
+in-flight results explicitly (what benchmarks call before reading clocks).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import os
 import time
 import weakref
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 import jax
 
+from repro.core import memspace
 from repro.core import threshold as thr
-from repro.core.policy import (
-    DEVICE_KIND,
-    HOST_KIND,
-    CounterPolicy,
-    Placement,
-    PolicyBase,
-    make_policy,
-    memory_kind_of,
-)
+from repro.core.policy import CounterPolicy, PolicyBase, make_policy
 from repro.core.trace import Trace
+
+#: how many in-flight outputs the async mode keeps alive for ``sync()``;
+#: XLA executes in submission order, so a bounded window is enough.
+_PENDING_WINDOW = 32
+
+#: dispatch-decision entries kept per runtime before a full reset
+#: (long-lived servers over ragged shapes must not leak decisions).
+_DECISION_CACHE_LIMIT = 65536
 
 
 @dataclasses.dataclass
@@ -48,6 +59,10 @@ class RoutineStats:
     bytes_out: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    # dispatch fast path: calls whose offload decision came from the
+    # per-call-site dispatch cache vs. calls that had to derive it
+    dispatch_hits: int = 0
+    dispatch_misses: int = 0
     # bytes streamed from the host tier without persisting (the coherent
     # remote-read path of GH200; a transient copy on this container)
     transient_bytes: int = 0
@@ -58,6 +73,9 @@ class RuntimeStats:
     per_routine: Dict[str, RoutineStats] = dataclasses.field(
         default_factory=dict)
     uninstrumented_calls: int = 0
+    # LRU registry pressure
+    evictions: int = 0
+    evicted_bytes: int = 0
 
     def routine(self, name: str) -> RoutineStats:
         return self.per_routine.setdefault(name, RoutineStats())
@@ -72,18 +90,39 @@ class RuntimeStats:
         miss = sum(r.cache_misses for r in self.per_routine.values())
         return hits / max(1, miss)
 
+    def dispatch_hit_ratio(self) -> float:
+        hits = sum(r.dispatch_hits for r in self.per_routine.values())
+        total = hits + sum(r.dispatch_misses
+                           for r in self.per_routine.values())
+        return hits / max(1, total)
+
     def report(self) -> str:
         lines = ["scilib-accel runtime report",
                  f"{'routine':<10}{'calls':>8}{'offload':>9}{'host':>7}"
-                 f"{'sec':>10}{'GB moved':>10}{'reuse':>8}"]
+                 f"{'sec':>10}{'GB moved':>10}{'reuse':>8}{'dhit':>7}"]
         for name, r in sorted(self.per_routine.items()):
             gb = (r.bytes_in + r.bytes_out) / 1e9
             reuse = r.cache_hits / max(1, r.cache_misses)
+            dhit = r.dispatch_hits / max(1, r.dispatch_hits
+                                         + r.dispatch_misses)
             lines.append(f"{name:<10}{r.calls:>8}{r.offloaded:>9}"
                          f"{r.on_host:>7}{r.seconds:>10.3f}{gb:>10.3f}"
-                         f"{reuse:>8.1f}")
+                         f"{reuse:>8.1f}{dhit:>7.2f}")
         lines.append(f"uninstrumented calls: {self.uninstrumented_calls}")
+        if self.evictions:
+            lines.append(f"evictions: {self.evictions} "
+                         f"({self.evicted_bytes / 1e9:.3f} GB)")
         return "\n".join(lines)
+
+
+def _env_bytes(name: str) -> Optional[int]:
+    raw = os.environ.get(name, "")
+    if not raw:
+        return None
+    try:
+        return int(float(raw))
+    except ValueError:
+        return None
 
 
 class OffloadRuntime:
@@ -91,22 +130,44 @@ class OffloadRuntime:
 
     def __init__(self, *, policy: str = "dfu",
                  threshold: Optional[float] = None,
-                 record_trace: bool = True):
+                 record_trace: bool = True,
+                 sync: Optional[bool] = None,
+                 device_bytes: Optional[int] = None):
         policy = os.environ.get("SCILIB_POLICY", policy)
         self.policy: PolicyBase = make_policy(policy)
+        self.memspace = memspace.install()
         self.threshold = thr.threshold_from_env(
-            thr.DEFAULT_THRESHOLD if threshold is None else threshold)
+            thr.default_threshold() if threshold is None else threshold)
         self.stats = RuntimeStats()
         self.trace: Optional[Trace] = Trace() if record_trace else None
         self.debug = int(os.environ.get("SCILIB_DEBUG", "0") or 0)
-        # placement registry: id(src) -> (weakref(src), placed_array)
-        self._placements: Dict[int, Tuple[weakref.ref, jax.Array]] = {}
+        if sync is None:
+            sync = os.environ.get("SCILIB_SYNC", "") == "1"
+        self.sync_mode = bool(sync)
+        self.dispatch_cache_enabled = (
+            os.environ.get("SCILIB_DISPATCH_CACHE", "1") != "0")
+        # keep the blas-level scalar/kernel caches on the same flag even
+        # when a runtime is constructed directly (not via install())
+        from repro.core import blas
+        blas.refresh_cache_flag()
+        cap = _env_bytes("SCILIB_DEVICE_BYTES")
+        self.device_bytes_cap: Optional[int] = (
+            device_bytes if device_bytes is not None else cap)
+        # per-call-site dispatch cache: key -> (offload, n_avg)
+        self._decisions: Dict[Hashable, Tuple[bool, float]] = {}
+        # placement registry (LRU order): id(src) -> (weakref, placed)
+        self._placements: "collections.OrderedDict[int, Tuple[weakref.ref, jax.Array]]" = (
+            collections.OrderedDict())
+        self._resident_bytes = 0
+        # async mode: recent in-flight outputs, drained by sync()
+        self._pending: "collections.deque[jax.Array]" = collections.deque(
+            maxlen=_PENDING_WINDOW)
         # trace-buffer ids: id(arr) -> trace buffer id
         self._trace_ids: Dict[int, Tuple[weakref.ref, int]] = {}
         self._reuse_by_buffer: Dict[int, int] = {}
 
     # ------------------------------------------------------------------ #
-    # placement registry                                                  #
+    # placement registry (byte-capped LRU)                                #
     # ------------------------------------------------------------------ #
     def lookup_placement(self, x: jax.Array) -> Optional[jax.Array]:
         ent = self._placements.get(id(x))
@@ -114,20 +175,71 @@ class OffloadRuntime:
             return None
         ref, placed = ent
         if ref() is None:       # stale id collision after GC
-            del self._placements[id(x)]
+            self._drop_placement(id(x))
             return None
+        self._placements.move_to_end(id(x))
         return placed
 
     def register_placement(self, src: jax.Array, placed: jax.Array) -> None:
         key = id(src)
+        nbytes = placed.nbytes
 
         def _drop(_ref, key=key, self=self):
-            self._placements.pop(key, None)
+            self._drop_placement(key)
 
+        if key in self._placements:
+            self._drop_placement(key)
         self._placements[key] = (weakref.ref(src, _drop), placed)
+        self._resident_bytes += nbytes
+        self._evict_over_cap(protect=key)
+
+    def _drop_placement(self, key: int) -> None:
+        ent = self._placements.pop(key, None)
+        if ent is not None:
+            self._resident_bytes -= ent[1].nbytes
+
+    def _evict_over_cap(self, protect: int) -> None:
+        """Evict LRU placements back to the host tier until under the cap.
+
+        The just-registered placement is protected: its operand is in use
+        by the current call, so a single oversized buffer is admitted and
+        the *next* registration pushes it out.
+
+        Eviction drops the registry's strong reference and re-tags the
+        buffer host-side, so the next use re-migrates (and is counted
+        again).  JAX arrays are immutable: on real-tier backends the HBM
+        itself is released once the application's own references die —
+        the registry cannot forcibly move a borrowed handle — while the
+        simulated tier models the re-migration cost with a real copy."""
+        cap = self.device_bytes_cap
+        if cap is None:
+            return
+        while self._resident_bytes > cap and len(self._placements) > 1:
+            key = next(iter(self._placements))
+            if key == protect:
+                break
+            _ref, placed = self._placements.pop(key)
+            self._resident_bytes -= placed.nbytes
+            memspace.tag_host(placed)
+            self.stats.evictions += 1
+            self.stats.evicted_bytes += placed.nbytes
+            if self.debug >= 1:
+                print(f"[scilib] evict {placed.nbytes} B "
+                      f"(resident {self._resident_bytes} B)")
 
     def resident_bytes(self) -> int:
-        return sum(p.nbytes for _, p in self._placements.values())
+        return self._resident_bytes
+
+    # ------------------------------------------------------------------ #
+    # async mode                                                          #
+    # ------------------------------------------------------------------ #
+    def sync(self) -> "OffloadRuntime":
+        """Block until every tracked in-flight result is materialized
+        (XLA executes in submission order, so draining the recent window
+        fences everything submitted before it)."""
+        while self._pending:
+            self._pending.popleft().block_until_ready()
+        return self
 
     # ------------------------------------------------------------------ #
     # trace buffer identity                                               #
@@ -167,13 +279,17 @@ class OffloadRuntime:
     def blas_call(self, routine: str, m: int, n: int, k: int,
                   operands: Sequence[Tuple[str, jax.Array, float, bool]],
                   compute: Callable[..., jax.Array],
-                  batch: int = 1) -> jax.Array:
+                  batch: int = 1,
+                  key: Optional[Hashable] = None) -> jax.Array:
         """Run one level-3 BLAS call under the active policy.
 
         ``operands``: (role, array, device_reads_per_elem, written) — the
         same metadata the memtier access-counter model consumes.
         ``compute``: jit-compiled arithmetic taking the placed operand
         arrays in order.
+        ``key``: hashable call-site identity ``(routine, m, n, k, batch,
+        dtype, flags)``; when given, the offload decision is memoized in
+        the dispatch cache.
         """
         st = self.stats.routine(routine)
         st.calls += 1
@@ -184,16 +300,30 @@ class OffloadRuntime:
             # the offload decision is static and the compute fn embeds it.
             return compute(*arrays)
 
-        offload, nav = thr.should_offload(routine, m, n, k,
-                                          threshold=self.threshold,
-                                          batch=batch)
+        if key is not None and self.dispatch_cache_enabled:
+            dec = self._decisions.get(key)
+            if dec is None:
+                dec = thr.should_offload(routine, m, n, k,
+                                         threshold=self.threshold,
+                                         batch=batch)
+                if len(self._decisions) > _DECISION_CACHE_LIMIT:
+                    self._decisions.clear()   # dynamic-shape churn guard
+                self._decisions[key] = dec
+                st.dispatch_misses += 1
+            else:
+                st.dispatch_hits += 1
+            offload, nav = dec
+        else:
+            st.dispatch_misses += 1
+            offload, nav = thr.should_offload(routine, m, n, k,
+                                              threshold=self.threshold,
+                                              batch=batch)
         if self.policy.name == "cpu":
             offload = False
 
         t0 = time.perf_counter()
         if not offload:
             out = compute(*self._harmonize(arrays, st))
-            out.block_until_ready()
             st.on_host += 1
         else:
             placed, budget_used = [], 0
@@ -218,8 +348,16 @@ class OffloadRuntime:
             out_p = self.policy.place_output(self, out)
             st.bytes_out += out_p.moved_bytes
             out = out_p.array
-            out.block_until_ready()
             st.offloaded += 1
+        if self.sync_mode:
+            out.block_until_ready()
+        else:
+            # retire finished results first so the window never pins
+            # buffers the application has already dropped
+            pend = self._pending
+            while pend and pend[0].is_ready():
+                pend.popleft()
+            pend.append(out)
         st.seconds += time.perf_counter() - t0
         self._record_trace(routine, m, n, k, operands, out, batch)
         if self.debug >= 2:
@@ -228,18 +366,18 @@ class OffloadRuntime:
         return out
 
     # ------------------------------------------------------------------ #
-    @staticmethod
-    def _harmonize(arrays, st) -> list:
+    def _harmonize(self, arrays, st) -> list:
         """Execution-space harmonization: XLA cannot mix memory spaces in
         one op, so operands a policy left host-resident are streamed in
         transiently (GH200's coherent remote read, made explicit). The
         placement registry is untouched — residency stays host."""
-        from repro.core.policy import DEVICE_KIND, _put
+        simulated = self.memspace.simulated
         out = []
         for a in arrays:
-            if memory_kind_of(a) != DEVICE_KIND:
+            if memspace.tier_of(a) != memspace.DEVICE:
                 st.transient_bytes += a.nbytes
-                a = _put(a, DEVICE_KIND)
+                if not simulated:
+                    a = memspace.put(a, memspace.DEVICE)
             out.append(a)
         return out
 
@@ -296,19 +434,25 @@ _ACTIVE: Optional[OffloadRuntime] = None
 
 
 def install(policy: str = "dfu", threshold: Optional[float] = None,
-            record_trace: bool = True) -> OffloadRuntime:
+            record_trace: bool = True, sync: Optional[bool] = None,
+            device_bytes: Optional[int] = None) -> OffloadRuntime:
     """`.init_array` analogue: create and activate the global runtime."""
     global _ACTIVE
     _ACTIVE = OffloadRuntime(policy=policy, threshold=threshold,
-                             record_trace=record_trace)
+                             record_trace=record_trace, sync=sync,
+                             device_bytes=device_bytes)
     return _ACTIVE
 
 
 def uninstall() -> Optional[RuntimeStats]:
-    """`.fini_array` analogue: deactivate and return final statistics."""
+    """`.fini_array` analogue: drain in-flight work, deactivate, and
+    return final statistics."""
     global _ACTIVE
     rt, _ACTIVE = _ACTIVE, None
-    return rt.stats if rt else None
+    if rt is None:
+        return None
+    rt.sync()
+    return rt.stats
 
 
 def active() -> Optional[OffloadRuntime]:

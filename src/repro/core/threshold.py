@@ -16,11 +16,44 @@ DEFAULT_THRESHOLD = 500.0
 
 #: Per-device safe lower bounds (the paper: "the optimal threshold is
 #: GPU-dependent"). v5e MXU pipelines saturate earlier for bf16 than H100
-#: FP64 tensor cores, but dispatch overheads are comparable.
+#: FP64 tensor cores, but dispatch overheads are comparable.  Keys are
+#: the canonical device keys :func:`detect_device_key` produces.
 DEVICE_DEFAULTS = {
     "gh200": 500.0,
     "tpu-v5e": 384.0,
+    "tpu": 384.0,     # other TPU generations: same MXU-saturation regime
+    "gpu": 500.0,     # unknown CUDA/ROCm parts: the paper's safe value
+    "cpu": 500.0,     # no accelerator: value only matters for simulation
 }
+
+
+def detect_device_key(backend: str = None, device_kind: str = None) -> str:
+    """Canonical device key for DEVICE_DEFAULTS from the live backend.
+
+    ``backend``/``device_kind`` exist for tests; by default they come from
+    ``jax.default_backend()`` / ``jax.devices()[0].device_kind``.
+    """
+    if backend is None or device_kind is None:
+        import jax
+        if backend is None:
+            backend = jax.default_backend()
+        if device_kind is None:
+            try:
+                device_kind = jax.devices()[0].device_kind
+            except Exception:  # pragma: no cover - no devices
+                device_kind = ""
+    kind = (device_kind or "").lower()
+    if backend == "tpu":
+        return "tpu-v5e" if "v5" in kind else "tpu"
+    if backend == "gpu":
+        return "gh200" if ("gh200" in kind or "grace" in kind) else "gpu"
+    return backend
+
+
+def default_threshold() -> float:
+    """Backend-detected threshold default (still SCILIB_THRESHOLD-
+    overridable via :func:`threshold_from_env`)."""
+    return DEVICE_DEFAULTS.get(detect_device_key(), DEFAULT_THRESHOLD)
 
 
 def threshold_from_env(default: float = DEFAULT_THRESHOLD) -> float:

@@ -1,0 +1,17 @@
+"""Pallas API compatibility across JAX versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; the kernels must compile against both (the dev
+container pins an older jaxlib than the TPU fleet runs).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params under whichever name this JAX exposes."""
+    return CompilerParams(**kwargs)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _syrk_kernel(a_ref, at_ref, o_ref, acc_ref, *, k_steps: int,
                  lower: bool):
@@ -63,7 +65,7 @@ def syrk(a: jax.Array, *, uplo: str = "L", trans: str = "N", bm: int = 256,
         out_specs=pl.BlockSpec((bm, bm), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((npad, npad), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bm), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(opa, opa.mT)[:n, :n]

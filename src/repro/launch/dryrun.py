@@ -75,6 +75,14 @@ def _n_groups(cfg) -> int:
     return cfg.n_layers // period_of(cfg)
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize cost_analysis() across JAX versions: newer releases
+    return one dict, 0.4.x returns a one-element list of dicts."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _cost_probe(cfg, shape_name: str, mesh, k: int, **cell_kw) -> dict:
     """Compile the k-group variant UNROLLED (true per-layer costs);
     return per-device cost + collective bytes."""
@@ -86,7 +94,7 @@ def _cost_probe(cfg, shape_name: str, mesh, k: int, **cell_kw) -> dict:
                      donate_argnums=cell.donate_argnums)
     compiled = jitted.lower(*cell.args).compile()
     try:
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled.cost_analysis())
     except Exception:
         cost = {}
     colls = collective_bytes(compiled.as_text())
@@ -156,12 +164,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
             except Exception as e:          # CPU backend may lack this
                 rec["memory"] = {"error": str(e)}
             try:
-                cost = compiled.cost_analysis()
+                cost = _cost_dict(compiled.cost_analysis())
             except Exception:
                 cost = None
             if not cost or "flops" not in (cost or {}):
                 try:
-                    cost = lowered.cost_analysis()
+                    cost = _cost_dict(lowered.cost_analysis())
                 except Exception:
                     cost = cost or {}
             hlo = compiled.as_text()

@@ -211,10 +211,15 @@ def moe_fwd_a2a(p: Params, cfg: ModelConfig, x: jax.Array, mesh,
         out = (gathered * weights[..., None]).sum(1)
         return out.reshape(bsz, t, d).astype(xl.dtype), aux
 
+    import inspect
+    params = inspect.signature(shard_map).parameters
+    # the no-replication-check kwarg was renamed check_rep -> check_vma
+    relax = ({"check_vma": False} if "check_vma" in params
+             else {"check_rep": False})
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(bt, None, None), P(), P(model_axis, None, None),
                   P(model_axis, None, None), P(model_axis, None, None)),
         out_specs=(P(bt, None, None), P()),
-        check_vma=False)
+        **relax)
     return fn(x, p["router"], p["wg"], p["wu"], p["wd"])

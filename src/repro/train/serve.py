@@ -4,7 +4,7 @@ This is where the paper's technique becomes a first-class LM-framework
 feature (DESIGN.md §4): the decode cache (KV for attention layers, SSM
 state for SSD layers) is a large, massively-reused buffer — exactly the
 object SCILIB-Accel's Device First-Use policy was designed for. The
-server allocates the cache on the *host tier* (``pinned_host``), and the
+server allocates the cache on the *host tier* (``memspace.HOST``), and the
 active placement policy decides how it reaches the device:
 
 * ``dfu``     — migrated to device memory on the first decode step, then
@@ -25,7 +25,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import DEVICE_KIND, HOST_KIND, _put
+from repro.core import memspace
+from repro.core.memspace import DEVICE, HOST
 from repro.models.registry import Model
 
 
@@ -49,15 +50,14 @@ class ServeStats:
     tokens: int = 0
 
 
-def _tree_put(tree, kind: str) -> Tuple[Any, int]:
+def _tree_put(tree, tier: str) -> Tuple[Any, int]:
     moved = 0
     leaves, tdef = jax.tree.flatten(tree)
     out = []
     for x in leaves:
-        cur = x.sharding.memory_kind or DEVICE_KIND
-        if cur != kind:
+        if memspace.tier_of(x) != tier:
             moved += x.nbytes
-            x = _put(x, kind)
+            x = memspace.put(x, tier)
         out.append(x)
     return tdef.unflatten(out), moved
 
@@ -96,15 +96,15 @@ class Server:
         cache = self.model.init_cache(b, self.scfg.max_len,
                                       self.scfg.cache_dtype)
         if self.scfg.offload_policy == "pinned":
-            cache, _ = _tree_put(cache, DEVICE_KIND)   # born device-side
+            cache, _ = _tree_put(cache, DEVICE)        # born device-side
         else:
             # CPU-side first touch: the cache starts host-resident, like
             # the paper's malloc'd matrices...
-            cache, _ = _tree_put(cache, HOST_KIND)
+            cache, _ = _tree_put(cache, HOST)
             # ...and the prefill forward is its first device use: under
             # DFU this is THE one migration; under memcopy it is merely
             # the first of many round trips.
-            cache, moved = _tree_put(cache, DEVICE_KIND)
+            cache, moved = _tree_put(cache, DEVICE)
             self.stats.bytes_host_to_dev += moved
             self.stats.migrations += int(
                 self.scfg.offload_policy == "dfu")
@@ -112,7 +112,7 @@ class Server:
             params=self.params, tokens=tokens, cache=cache,
             cache_pos=jnp.zeros((), jnp.int32), **(extra or {}))
         if self.scfg.offload_policy == "memcopy":
-            cache, moved = _tree_put(cache, HOST_KIND)
+            cache, moved = _tree_put(cache, HOST)
             self.stats.bytes_dev_to_host += moved
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
         self.stats.prefill_s += time.perf_counter() - t0
@@ -128,21 +128,21 @@ class Server:
             pos = jnp.asarray(start_pos + i, jnp.int32)
             if policy == "dfu":
                 # first device use migrates; later steps are cache hits
-                kinds = {x.sharding.memory_kind
+                tiers = {memspace.tier_of(x)
                          for x in jax.tree.leaves(cache)}
-                if HOST_KIND in kinds:
-                    cache, moved = _tree_put(cache, DEVICE_KIND)
+                if HOST in tiers:
+                    cache, moved = _tree_put(cache, DEVICE)
                     self.stats.bytes_host_to_dev += moved
                     self.stats.migrations += 1
                 else:
                     self.stats.cache_reuses += 1
             elif policy == "memcopy":
-                cache, moved = _tree_put(cache, DEVICE_KIND)
+                cache, moved = _tree_put(cache, DEVICE)
                 self.stats.bytes_host_to_dev += moved
             self._key, sub = jax.random.split(self._key)
             tok, cache = self._decode_fn(self.params, tok, cache, pos, sub)
             if policy == "memcopy":
-                cache, moved = _tree_put(cache, HOST_KIND)
+                cache, moved = _tree_put(cache, HOST)
                 self.stats.bytes_dev_to_host += moved
             else:
                 self.stats.cache_reuses += int(policy == "pinned")

@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 
 import repro.core as core
-from repro.core import blas
-from repro.core.policy import DEVICE_KIND, HOST_KIND, host_array
+from repro.core import blas, memspace
+from repro.core.policy import host_array
 from repro.core.threshold import n_avg, should_offload
 
 RNG = np.random.default_rng(2)
@@ -37,7 +37,7 @@ def test_dfu_migrates_once_and_reuses():
         # a and b moved once; a hit 5 more times, outputs chain for free
         assert st.bytes_in == a.nbytes + b.nbytes
         assert st.cache_hits >= 5
-    assert c.sharding.memory_kind == DEVICE_KIND
+    assert memspace.tier_of(c) == memspace.DEVICE
 
 
 def test_memcopy_roundtrips_every_call():
@@ -50,7 +50,7 @@ def test_memcopy_roundtrips_every_call():
         st = rt.stats.per_routine["sgemm"]
         assert st.bytes_in == 3 * (a.nbytes + b.nbytes)
         assert st.bytes_out == 3 * out.nbytes
-    assert out.sharding.memory_kind == HOST_KIND
+    assert memspace.tier_of(out) == memspace.HOST
 
 
 def test_policies_numerically_identical():
