@@ -8,6 +8,11 @@ cached) runtime, on the two workloads the tentpole targets.
   ``block_until_ready``.
 * ``dfuchain`` — a 100-call chained DFU workload (``C = A @ C``) above
   the threshold: placement-registry hits plus async submission.
+* ``shardscale`` — the same chained workload under the multi-device
+  tile scheduler (``SCILIB_DEVICES`` in 1/2/4): tiles/sec, per-device
+  moved bytes and byte-cap eviction counters.  On this CPU container
+  every logical device tier shares one physical CPU, so the numbers
+  measure scheduler overhead and movement accounting, not speedup.
 
 Modes are selected with the runtime's own knobs so the comparison runs
 the *same* code path the library ships:
@@ -32,6 +37,8 @@ SMALL_N = 64
 SMALL_CALLS = 400
 CHAIN_N = 256
 CHAIN_CALLS = 100
+SHARD_N = 512
+SHARD_CALLS = 30
 REPS = 3
 
 
@@ -101,13 +108,48 @@ def _bench_dfuchain(mode: str) -> float:
         rtm.uninstall()
 
 
+def _bench_shardscale(n_dev: int) -> Tuple[float, float, int, int]:
+    """Chained DFU gemms under SCILIB_DEVICES=n_dev with a per-device
+    byte cap sized to put the block LRU under pressure.  Returns
+    (calls/sec, tiles/sec, evictions, moved bytes) summed over devices."""
+    rtm = _install("fast")
+    os.environ["SCILIB_DEVICES"] = str(n_dev)
+    os.environ["SCILIB_DEVICE_BYTES"] = str(3 * SHARD_N * SHARD_N * 4)
+    from repro.core import blas
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(2)
+    rt = rtm.install("dfu", threshold=100, record_trace=False)
+    try:
+        a = host_array(rng.standard_normal((SHARD_N, SHARD_N))
+                       .astype("float32") / SHARD_N)
+
+        def loop():
+            c = a
+            for _ in range(SHARD_CALLS):
+                c = blas.gemm(a, c)
+            return c
+
+        cps = _sweep(loop, rt, SHARD_CALLS)
+        st = rt.stats.per_routine["sgemm"]
+        tiles_per_call = st.tiles / max(1, st.calls)
+        evs = sum(d.evictions for d in rt.stats.per_device.values())
+        moved = sum(d.moved_bytes for d in rt.stats.per_device.values())
+        return cps, cps * tiles_per_call, evs, moved
+    finally:
+        rtm.uninstall()
+        os.environ.pop("SCILIB_DEVICES", None)
+        os.environ.pop("SCILIB_DEVICE_BYTES", None)
+
+
 def bench() -> List[Row]:
     rows: List[Row] = []
     saved = {k: os.environ.get(k)
-             for k in ("SCILIB_SYNC", "SCILIB_DISPATCH_CACHE")}
+             for k in ("SCILIB_SYNC", "SCILIB_DISPATCH_CACHE",
+                       "SCILIB_DEVICES", "SCILIB_DEVICE_BYTES")}
     try:
         small = {m: _bench_smallgemm(m) for m in ("seed", "fast")}
         chain = {m: _bench_dfuchain(m) for m in ("seed", "fast")}
+        shard = {n: _bench_shardscale(n) for n in (1, 2, 4)}
     finally:
         for k, v in saved.items():
             if v is None:
@@ -128,6 +170,17 @@ def bench() -> List[Row]:
     rows.append(("dispatch.dfuchain100.speedup",
                  round(chain["fast"] / chain["seed"], 2),
                  "chained DFU workload"))
+    for n, (cps, tps, evs, moved) in sorted(shard.items()):
+        rows.append((f"dispatch.shard.gemm512.d{n}_cps", round(cps, 0),
+                     f"chained gemm, SCILIB_DEVICES={n}"))
+        rows.append((f"dispatch.shard.gemm512.d{n}_tiles_ps",
+                     round(tps, 0),
+                     "tile kernels/sec across device tiers"))
+        rows.append((f"dispatch.shard.gemm512.d{n}_evictions", evs,
+                     "per-device byte-cap LRU evictions (summed)"))
+        rows.append((f"dispatch.shard.gemm512.d{n}_moved_mb",
+                     round(moved / 1e6, 1),
+                     "block bytes moved to device tiers (summed)"))
     return rows
 
 

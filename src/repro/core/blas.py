@@ -15,13 +15,15 @@ variants (cublas*Batched analogues) with the same placement logic.
 from __future__ import annotations
 
 import functools
+import math
 import os
-from typing import Callable, Dict, Hashable, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import runtime as rt
+from repro.core.runtime import Tile, TileOp, TilePlan
 
 __all__ = ["gemm", "symm", "hemm", "syrk", "herk", "syr2k", "her2k",
            "trmm", "trsm", "routine_name"]
@@ -217,6 +219,22 @@ def _syr2k_kernel(a, b, c, alpha, beta, *, uplo, trans, conj, has_c):
     return tri.astype(a.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("trans", "conj", "has_c"))
+def _syrk_block_kernel(ai, aj, c, alpha, beta, *, trans, conj, has_c):
+    """Off-diagonal block of a tiled syrk/herk:
+    C[i,j] := alpha op(A)_i op(A)_j^{T|H} + beta C[i,j] (full block)."""
+    from repro.kernels import ops as kops
+    opi, opj = _op(ai, trans), _op(aj, trans)
+    jt = jnp.swapaxes(opj, -1, -2)
+    if conj:
+        jt = jnp.conj(jt)
+    acc = kops.matmul(opi, jt)
+    out = alpha.astype(acc.dtype) * acc
+    if has_c:
+        out = out + beta.astype(acc.dtype) * c
+    return out.astype(ai.dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("side", "uplo", "trans", "diag"))
 def _trmm_kernel(a, b, alpha, *, side, uplo, trans, diag):
@@ -237,14 +255,277 @@ def _trsm_kernel(a, b, alpha, *, side, uplo, trans, diag):
 
 
 # ----------------------------------------------------------------------- #
+# multi-device tile decomposition (BLASX-style 2-D sharding)               #
+#                                                                          #
+# When the runtime sees more than one device tier, super-threshold calls   #
+# are split into tiles the scheduler deals round-robin-with-affinity       #
+# across devices.  The decomposition is per-routine: gemm tiles the        #
+# output 2-D; symm/trmm/trsm split the rectangular panel along its free    #
+# dimension (the triangle replicates); syrk/herk tile the stored triangle  #
+# of C by block, diagonal blocks through the syrk kernel, off-diagonal     #
+# through a gemm-shaped block kernel.  syr2k/her2k stay single-device.     #
+# Builders return None when the matrix is too small to split               #
+# (``SCILIB_TILE_MIN``), which falls back to the single-device path.       #
+# ----------------------------------------------------------------------- #
+def _tile_min() -> int:
+    raw = os.environ.get("SCILIB_TILE_MIN", "")
+    try:
+        return max(1, int(raw)) if raw else 64
+    except ValueError:
+        return 64
+
+
+def _shard_active(batch: int, *arrays) -> bool:
+    """Tile decomposition applies to plain 2-D calls only: a leading
+    batch axis — even a singleton one — uses the batched kernels, whose
+    axes the 2-D tile coordinates do not address."""
+    runtime = rt.active()
+    if runtime is None or batch != 1 or runtime.n_devices < 2:
+        return False
+    return all(x is None or x.ndim == 2 for x in arrays)
+
+
+def _splits(dim: int, g: int) -> List[Tuple[int, int]]:
+    """g contiguous block ranges covering [0, dim)."""
+    base, rem = divmod(dim, g)
+    edges = [0]
+    for i in range(g):
+        edges.append(edges[-1] + base + (1 if i < rem else 0))
+    return [(edges[i], edges[i + 1]) for i in range(g)]
+
+
+def _grid2d(n_dev: int, m: int, n: int) -> Optional[Tuple[int, int]]:
+    """Near-square tile grid with >= n_dev tiles, clamped so no tile edge
+    drops under the minimum; None when the call is too small to shard."""
+    min_tile = _tile_min()
+    gm = max(1, math.isqrt(n_dev))
+    gn = -(-n_dev // gm)
+    if n < m:                       # split the longer dimension more finely
+        gm, gn = gn, gm
+    gm = min(gm, max(1, m // min_tile))
+    gn = min(gn, max(1, n // min_tile))
+    if gm * gn < 2:
+        return None
+    return gm, gn
+
+
+def _grid1d(n_dev: int, dim: int) -> Optional[int]:
+    g = min(n_dev, max(1, dim // _tile_min()))
+    return g if g >= 2 else None
+
+
+def _assemble(blocks: List[List[jax.Array]]) -> jax.Array:
+    rows = [row[0] if len(row) == 1 else jnp.concatenate(row, axis=-1)
+            for row in blocks]
+    return rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=-2)
+
+
+def _full_coords(x: jax.Array) -> Tuple[int, int, int, int]:
+    return (0, x.shape[-2], 0, x.shape[-1])
+
+
+def _rowblock_coords(x: jax.Array, trans: str,
+                     r0: int, r1: int) -> Tuple[int, int, int, int]:
+    """Coords on the parent for row block [r0:r1) of op(x)."""
+    if trans == "N":
+        return (r0, r1, 0, x.shape[-1])
+    return (0, x.shape[-2], r0, r1)
+
+
+def _colblock_coords(x: jax.Array, trans: str,
+                     c0: int, c1: int) -> Tuple[int, int, int, int]:
+    """Coords on the parent for column block [c0:c1) of op(x)."""
+    if trans == "N":
+        return (0, x.shape[-2], c0, c1)
+    return (c0, c1, 0, x.shape[-1])
+
+
+def _shard_gemm(a, b, c, alpha, beta, trans_a, trans_b,
+                n_dev) -> Optional[TilePlan]:
+    m = a.shape[-2] if trans_a == "N" else a.shape[-1]
+    n = b.shape[-1] if trans_b == "N" else b.shape[-2]
+    g = _grid2d(n_dev, m, n)
+    if g is None:
+        return None
+    gm, gn = g
+    rows, cols = _splits(m, gm), _splits(n, gn)
+    dt = a.dtype
+    has_c = c is not None
+    alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
+    if has_c:
+        def tile_fn(a_, b_, c_):
+            return _gemm_kernel(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
+                                trans_b=trans_b, has_c=True)
+    else:
+        czero = _scalar(0.0, dt)
+
+        def tile_fn(a_, b_):
+            return _gemm_kernel(a_, b_, czero, alpha_, beta_,
+                                trans_a=trans_a, trans_b=trans_b,
+                                has_c=False)
+    tiles = []
+    for (r0, r1) in rows:
+        for (q0, q1) in cols:
+            ops = [TileOp("A", a, _rowblock_coords(a, trans_a, r0, r1),
+                          shared=(gm == 1)),
+                   TileOp("B", b, _colblock_coords(b, trans_b, q0, q1),
+                          shared=(gn == 1))]
+            if has_c:
+                ops.append(TileOp("C", c, (r0, r1, q0, q1), written=True))
+            tiles.append(Tile(tuple(ops), tile_fn, (r0, r1, q0, q1)))
+
+    def gather(outs):
+        it = iter(outs)
+        return _assemble([[next(it) for _ in cols] for _ in rows])
+
+    return TilePlan((gm, gn), tuple(tiles), gather)
+
+
+def _shard_symm(a, b, c, alpha, beta, side, uplo, conj,
+                n_dev) -> Optional[TilePlan]:
+    m, n = b.shape[-2], b.shape[-1]
+    dim = n if side == "L" else m
+    g = _grid1d(n_dev, dim)
+    if g is None:
+        return None
+    panels = _splits(dim, g)
+    dt = b.dtype
+    has_c = c is not None
+    alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
+    if has_c:
+        def tile_fn(a_, b_, c_):
+            return _symm_kernel(a_, b_, c_, alpha_, beta_, side=side,
+                                uplo=uplo, conj=conj, has_c=True)
+    else:
+        czero = _scalar(0.0, dt)
+
+        def tile_fn(a_, b_):
+            return _symm_kernel(a_, b_, czero, alpha_, beta_, side=side,
+                                uplo=uplo, conj=conj, has_c=False)
+    tiles = []
+    for (p0, p1) in panels:
+        coords = (0, m, p0, p1) if side == "L" else (p0, p1, 0, n)
+        ops = [TileOp("A", a, _full_coords(a), shared=True),
+               TileOp("B", b, coords)]
+        if has_c:
+            ops.append(TileOp("C", c, coords, written=True))
+        tiles.append(Tile(tuple(ops), tile_fn, coords))
+
+    def gather(outs):
+        return jnp.concatenate(outs, axis=-1 if side == "L" else -2)
+
+    return TilePlan((1, g) if side == "L" else (g, 1), tuple(tiles), gather)
+
+
+def _shard_syrk(a, c, alpha, beta, uplo, trans, conj,
+                n_dev) -> Optional[TilePlan]:
+    n = a.shape[-2] if trans == "N" else a.shape[-1]
+    g = 2
+    while g * (g + 1) // 2 < n_dev:
+        g += 1
+    g = min(g, max(1, n // _tile_min()))
+    if g < 2:
+        return None
+    blocks = _splits(n, g)
+    dt = a.dtype
+    has_c = c is not None
+    alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
+    czero = _scalar(0.0, dt)
+    if has_c:
+        def diag_fn(a_, c_):
+            return _syrk_kernel(a_, c_, alpha_, beta_, uplo=uplo,
+                                trans=trans, conj=conj, has_c=True)
+
+        def off_fn(ai, aj, cij):
+            return _syrk_block_kernel(ai, aj, cij, alpha_, beta_,
+                                      trans=trans, conj=conj, has_c=True)
+    else:
+        def diag_fn(a_):
+            return _syrk_kernel(a_, czero, alpha_, beta_, uplo=uplo,
+                                trans=trans, conj=conj, has_c=False)
+
+        def off_fn(ai, aj):
+            return _syrk_block_kernel(ai, aj, czero, alpha_, beta_,
+                                      trans=trans, conj=conj, has_c=False)
+    tiles, stored = [], {}
+    for i in range(g):
+        for j in range(g):
+            if not (i >= j if uplo == "L" else i <= j):
+                continue
+            (r0, r1), (q0, q1) = blocks[i], blocks[j]
+            coords = (r0, r1, q0, q1)
+            if i == j:
+                ops = [TileOp("A", a, _rowblock_coords(a, trans, r0, r1))]
+                fn = diag_fn
+            else:
+                ops = [TileOp("A", a, _rowblock_coords(a, trans, r0, r1)),
+                       TileOp("A", a, _rowblock_coords(a, trans, q0, q1))]
+                fn = off_fn
+            if has_c:
+                ops.append(TileOp("C", c, coords, written=True))
+            stored[(i, j)] = len(tiles)
+            tiles.append(Tile(tuple(ops), fn, coords))
+
+    def gather(outs):
+        grid = []
+        for i in range(g):
+            row = []
+            for j in range(g):
+                idx = stored.get((i, j))
+                if idx is not None:
+                    row.append(outs[idx])
+                    continue
+                (r0, r1), (q0, q1) = blocks[i], blocks[j]
+                if has_c:          # untouched triangle keeps C verbatim
+                    row.append(c[r0:r1, q0:q1].astype(dt))
+                else:
+                    row.append(jnp.zeros((r1 - r0, q1 - q0), dt))
+            grid.append(row)
+        return _assemble(grid)
+
+    return TilePlan((g, g), tuple(tiles), gather)
+
+
+def _shard_tri(a, b, side, uplo, trans, diag, alpha, kernel,
+               n_dev) -> Optional[TilePlan]:
+    """trmm/trsm: the RHS panel splits along its free dimension; each
+    panel solve/multiply is independent, the triangle replicates."""
+    m, n = b.shape[-2], b.shape[-1]
+    dim = n if side == "L" else m
+    g = _grid1d(n_dev, dim)
+    if g is None:
+        return None
+    panels = _splits(dim, g)
+    dt = b.dtype
+    alpha_ = _scalar(alpha, dt)
+
+    def tile_fn(a_, b_):
+        return kernel(a_, b_, alpha_, side=side, uplo=uplo, trans=trans,
+                      diag=diag)
+
+    tiles = []
+    for (p0, p1) in panels:
+        coords = (0, m, p0, p1) if side == "L" else (p0, p1, 0, n)
+        tiles.append(Tile((TileOp("A", a, _full_coords(a), shared=True),
+                           TileOp("B", b, coords, written=True)),
+                          tile_fn, coords))
+
+    def gather(outs):
+        return jnp.concatenate(outs, axis=-1 if side == "L" else -2)
+
+    return TilePlan((1, g) if side == "L" else (g, 1), tuple(tiles), gather)
+
+
+# ----------------------------------------------------------------------- #
 # public routines                                                          #
 # ----------------------------------------------------------------------- #
-def _dispatch(routine, m, n, k, operands, compute, batch=1, key=None):
+def _dispatch(routine, m, n, k, operands, compute, batch=1, key=None,
+              shard=None):
     runtime = rt.active()
     if runtime is None:
         return compute(*[x for _, x, _, _ in operands])
     return runtime.blas_call(routine, m, n, k, operands, compute,
-                             batch=batch, key=key)
+                             batch=batch, key=key, shard=shard)
 
 
 def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
@@ -282,9 +563,13 @@ def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
     ops = [("A", a, float(opn), False), ("B", b, float(opm), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
+    shard = (functools.partial(_shard_gemm, a, b, c, alpha, beta,
+                               trans_a, trans_b)
+             if _shard_active(batch, a, b, c) else None)
     return _dispatch(routine_name("gemm", dt), opm, opn, opk,
                      ops, compute, batch,
-                     key=_call_key(bkey, opm, opn, opk, batch))
+                     key=_call_key(bkey, opm, opn, opk, batch),
+                     shard=shard)
 
 
 def symm(a, b, c=None, *, side="L", uplo="L", alpha=1.0, beta=0.0):
@@ -327,9 +612,13 @@ def _symm_like(a, b, c, *, side, uplo, alpha, beta, conj, base):
            ("B", b, float(a.shape[-1]), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
+    shard = (functools.partial(_shard_symm, a, b, c, alpha, beta,
+                               side, uplo, conj)
+             if _shard_active(batch, a, b, c) else None)
     return _dispatch(routine_name(base, dt), a.shape[-1], n, 0,
                      ops, compute, batch,
-                     key=_call_key(bkey, a.shape[-1], n, 0, batch))
+                     key=_call_key(bkey, a.shape[-1], n, 0, batch),
+                     shard=shard)
 
 
 def syrk(a, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
@@ -372,8 +661,12 @@ def _syrk_like(a, c, *, uplo, trans, alpha, beta, conj, base):
     ops = [("A", a, float(n), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
+    shard = (functools.partial(_shard_syrk, a, c, alpha, beta, uplo,
+                               trans, conj)
+             if _shard_active(batch, a, c) else None)
     return _dispatch(routine_name(base, dt), n, n, k, ops, compute,
-                     batch, key=_call_key(bkey, n, n, k, batch))
+                     batch, key=_call_key(bkey, n, n, k, batch),
+                     shard=shard)
 
 
 def syr2k(a, b, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
@@ -452,5 +745,9 @@ def _tri_like(a, b, *, side, uplo, trans, diag, alpha, base, kernel):
     opn = n if side == "L" else m
     ops = [("A", a, float(opn), False),
            ("B", b, float(tri_n), True)]
+    shard = (functools.partial(_shard_tri, a, b, side, uplo, trans, diag,
+                               alpha, kernel)
+             if _shard_active(batch, a, b) else None)
     return _dispatch(routine_name(base, dt), tri_n, opn, 0, ops, compute,
-                     batch, key=_call_key(bkey, tri_n, opn, 0, batch))
+                     batch, key=_call_key(bkey, tri_n, opn, 0, batch),
+                     shard=shard)

@@ -21,10 +21,19 @@ a side table keyed on buffer identity, a cross-tier ``put`` materializes
 a physical copy (so first-touch movement has a real cost and a distinct
 destination buffer), and every policy runs identically to the multi-kind
 backends — movement is still counted in the runtime statistics.
+
+The DEVICE tier additionally carries a **device index**: a node with N
+local accelerators has N device tiers, one per HBM.  ``probe()``
+enumerates them from ``len(jax.devices())``, and ``SCILIB_DEVICES=n``
+forces a simulated N-tier layout (mirroring the single-kind fallback) so
+the multi-device tile scheduler can be exercised on any backend,
+including this CPU container.  ``put_block`` re-homes a buffer to one
+specific device tier; ``device_of`` reads the index back.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import weakref
 from typing import Dict, Optional, Tuple
 
@@ -43,15 +52,32 @@ class MemSpace:
     device_kind: str    # physical kind backing the DEVICE tier
     simulated: bool     # True when the backend exposes a single kind
     backend: str        # jax.default_backend() at probe time
+    n_devices: int = 1  # number of logical DEVICE tiers (accelerators)
 
     def kind_of(self, tier: str) -> str:
         return self.host_kind if tier == HOST else self.device_kind
+
+
+def _env_devices() -> Optional[int]:
+    raw = os.environ.get("SCILIB_DEVICES", "")
+    if not raw:
+        return None
+    try:
+        return max(1, int(raw))
+    except ValueError:
+        return None
 
 
 def probe(device: Optional[jax.Device] = None) -> MemSpace:
     """Inspect the backend once and resolve the tier mapping."""
     d = device if device is not None else jax.devices()[0]
     backend = jax.default_backend()
+    n_devices = _env_devices()
+    if n_devices is None:
+        try:
+            n_devices = len(jax.devices())
+        except Exception:  # pragma: no cover - no devices
+            n_devices = 1
     try:
         kinds = [m.kind for m in d.addressable_memories()]
     except Exception:  # pragma: no cover - very old jaxlib
@@ -70,9 +96,10 @@ def probe(device: Optional[jax.Device] = None) -> MemSpace:
         host_kind = next((k for k in kinds if k != device_kind), None)
     if host_kind is None:
         return MemSpace(host_kind=device_kind, device_kind=device_kind,
-                        simulated=True, backend=backend)
+                        simulated=True, backend=backend,
+                        n_devices=n_devices)
     return MemSpace(host_kind=host_kind, device_kind=device_kind,
-                    simulated=False, backend=backend)
+                    simulated=False, backend=backend, n_devices=n_devices)
 
 
 # --------------------------------------------------------------------- #
@@ -80,10 +107,10 @@ def probe(device: Optional[jax.Device] = None) -> MemSpace:
 # --------------------------------------------------------------------- #
 _ACTIVE: Optional[MemSpace] = None
 
-# id(arr) -> (weakref(arr), logical tier); only consulted in simulated
-# mode, but tags are maintained unconditionally so a mapping re-probe
-# (e.g. tests switching modes) never orphans tier state.
-_TIERS: Dict[int, Tuple[weakref.ref, str]] = {}
+# id(arr) -> (weakref(arr), logical tier, device index); only consulted
+# in simulated mode, but tags are maintained unconditionally so a mapping
+# re-probe (e.g. tests switching modes) never orphans tier state.
+_TIERS: Dict[int, Tuple[weakref.ref, str, int]] = {}
 
 
 def active() -> MemSpace:
@@ -107,13 +134,18 @@ def reset() -> None:
     _TIERS.clear()
 
 
-def _tag(x: jax.Array, tier: str) -> None:
+def n_devices() -> int:
+    """Number of logical device tiers (accelerators) of the active space."""
+    return active().n_devices
+
+
+def _tag(x: jax.Array, tier: str, device: int = 0) -> None:
     key = id(x)
 
     def _drop(_ref, key=key):
         _TIERS.pop(key, None)
 
-    _TIERS[key] = (weakref.ref(x, _drop), tier)
+    _TIERS[key] = (weakref.ref(x, _drop), tier, device)
 
 
 def tier_of(x) -> str:
@@ -138,6 +170,27 @@ def tier_of(x) -> str:
     return HOST if kind == ms.host_kind else DEVICE
 
 
+def device_of(x) -> Optional[int]:
+    """Device-tier index of a buffer, or None when it has no explicit
+    device placement (host-resident or never routed by the scheduler)."""
+    ent = _TIERS.get(id(x))
+    if ent is not None and ent[0]() is not None:
+        return ent[2] if ent[1] == DEVICE else None
+    ms = active()
+    if ms.simulated:
+        return None
+    try:
+        devs = list(x.devices())
+    except Exception:  # non-array leaves / old jaxlib
+        return None
+    if len(devs) != 1:
+        return None
+    try:
+        return jax.devices().index(devs[0])
+    except ValueError:  # pragma: no cover - device of another backend
+        return None
+
+
 def put(x: jax.Array, tier: str) -> jax.Array:
     """Re-home a buffer to a logical tier (the ``move_pages()`` analogue).
 
@@ -159,6 +212,31 @@ def put(x: jax.Array, tier: str) -> jax.Array:
     import jax.numpy as jnp
     moved = jnp.array(x, copy=True)
     _tag(moved, tier)
+    return moved
+
+
+def put_block(x: jax.Array, device: int) -> jax.Array:
+    """Re-home a buffer onto one specific DEVICE tier (tile scheduling).
+
+    With multiple *real* devices the block is ``device_put`` onto that
+    accelerator's memory.  Otherwise the device tier is logical: a copy
+    tagged ``(DEVICE, device)`` — same first-touch cost model as
+    :func:`put`, so per-device movement statistics stay honest on the
+    CPU container's ``SCILIB_DEVICES=n`` layout.
+    """
+    if tier_of(x) == DEVICE and device_of(x) == device:
+        return x
+    try:
+        real = jax.devices()
+    except Exception:  # pragma: no cover - no devices
+        real = []
+    if len(real) > 1:
+        moved = jax.device_put(x, real[device % len(real)])
+        _tag(moved, DEVICE, device)
+        return moved
+    import jax.numpy as jnp
+    moved = jnp.array(x, copy=True)
+    _tag(moved, DEVICE, device)
     return moved
 
 

@@ -54,6 +54,9 @@ class Placement:
     array: jax.Array
     moved_bytes: int = 0
     cache_hit: bool = False
+    #: which device tier the buffer landed on (multi-device scheduling);
+    #: 0 is the only tier on single-accelerator systems.
+    device: int = 0
 
 
 class PolicyBase:
@@ -64,6 +67,12 @@ class PolicyBase:
     copy_back = False
     #: whether placements persist across calls (the reuse mechanism)
     persistent = True
+    #: whether the multi-device tile scheduler may shard calls under this
+    #: policy.  Only policies that migrate every operand on (first) use
+    #: keep their semantics when the runtime moves blocks itself; the
+    #: access-counter model decides per-operand and must stay
+    #: single-device or it would silently degenerate to DFU.
+    shardable = True
 
     def place_operand(self, runtime, x: jax.Array) -> Placement:
         raise NotImplementedError
@@ -75,6 +84,34 @@ class PolicyBase:
             nbytes = y.nbytes
             return Placement(_put(y, HOST_KIND), moved_bytes=nbytes)
         return Placement(memspace.tag_device(y))
+
+    def select_device(self, runtime, blocks) -> int:
+        """Which device tier runs one tile of a sharded call (BLASX-style
+        round-robin with affinity).
+
+        ``blocks``: (key, nbytes, shared) per tile operand.  Persistent
+        policies prefer the device already holding the most operand-block
+        bytes — first use moved the block there, every later tile on the
+        same device is free, the exact multi-device generalization of
+        first-touch.  Blocks shared by every tile (trsm's triangle) are
+        replicated and never steer the choice.  With no residency
+        anywhere, tiles deal round-robin so work spreads evenly.
+        Score ties — a block replicated onto several devices by an
+        earlier grid layout — break toward the device with the fewest
+        tiles scheduled this call, so replication cannot funnel a whole
+        grid onto one device and idle the rest."""
+        if self.persistent:
+            scores: dict = {}
+            for key, nbytes, shared in blocks:
+                if shared:
+                    continue
+                for home in runtime.block_homes(key):
+                    scores[home] = scores.get(home, 0) + nbytes
+            if scores:
+                return min(scores, key=lambda d: (-scores[d],
+                                                  runtime.scheduled_load(d),
+                                                  d))
+        return runtime.next_device()
 
 
 class MemCopyPolicy(PolicyBase):
@@ -133,6 +170,7 @@ class CounterPolicy(PolicyBase):
     name = "counter"
     copy_back = False
     persistent = True
+    shardable = False     # R1-R4 are per-operand host-vs-device rules
 
     reuse_min = 100.0
     byte_budget = 3.4e9

@@ -13,7 +13,15 @@ One ``OffloadRuntime`` owns
 * the **statistics** the paper's ``.fini_array`` hook prints (per-routine
   call/offload counts, bytes moved, wall time, reuse counts),
 * a **BLAS trace** so any run can be replayed through the memtier
-  simulator under calibrated GH200/TPU constants (Tables 3/5 methodology).
+  simulator under calibrated GH200/TPU constants (Tables 3/5 methodology),
+* the **multi-device tile scheduler**: with more than one device tier
+  (``len(jax.devices()) > 1``, or ``SCILIB_DEVICES=n`` forcing a
+  simulated N-tier layout), super-threshold calls are split into 2-D
+  tiles scheduled round-robin-with-affinity across devices, BLASX-style
+  — a tile runs on the device where its operand block is already
+  resident, tracked in per-device block registries with per-device byte
+  caps and eviction counters.  With one device the scheduler is inert
+  and the single-device fast path is untouched.
 
 Execution is **asynchronous by default**: the runtime manages *placement*
 and hands XLA the jit-compiled arithmetic without blocking, exactly like
@@ -48,6 +56,60 @@ _PENDING_WINDOW = 32
 _DECISION_CACHE_LIMIT = 65536
 
 
+# --------------------------------------------------------------------- #
+# tile plans (built by core.blas, executed by the scheduler below)       #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class TileOp:
+    """One operand block of one tile.
+
+    ``coords`` is the (r0, r1, c0, c1) window on the *parent* array —
+    the stable block identity the affinity registry keys on, so the same
+    window of the same buffer lands on the same device call after call.
+    ``shared`` marks blocks identical across every tile of the plan
+    (e.g. the triangle of trsm): they replicate per device and must not
+    steer affinity, or every tile would chase one device.
+    """
+
+    role: str
+    parent: jax.Array
+    coords: Tuple[int, int, int, int]
+    shared: bool = False
+    written: bool = False
+
+    def key(self) -> Tuple:
+        return (id(self.parent),) + self.coords
+
+    @property
+    def nbytes(self) -> int:
+        r0, r1, c0, c1 = self.coords
+        return (r1 - r0) * (c1 - c0) * self.parent.dtype.itemsize
+
+    def materialize(self) -> jax.Array:
+        r0, r1, c0, c1 = self.coords
+        if (r0, c0) == (0, 0) and (r1, c1) == self.parent.shape[-2:]:
+            return self.parent
+        return self.parent[r0:r1, c0:c1]
+
+
+@dataclasses.dataclass
+class Tile:
+    """One unit of scheduled work: placed operand blocks -> output block."""
+
+    ops: Tuple[TileOp, ...]
+    compute: Callable[..., jax.Array]
+    out_coords: Tuple[int, int, int, int]
+
+
+@dataclasses.dataclass
+class TilePlan:
+    """A 2-D decomposition of one level-3 call plus its gather."""
+
+    grid: Tuple[int, int]
+    tiles: Tuple[Tile, ...]
+    gather: Callable[[Sequence[jax.Array]], jax.Array]
+
+
 @dataclasses.dataclass
 class RoutineStats:
     calls: int = 0
@@ -66,11 +128,27 @@ class RoutineStats:
     # bytes streamed from the host tier without persisting (the coherent
     # remote-read path of GH200; a transient copy on this container)
     transient_bytes: int = 0
+    # multi-device tile scheduler: calls split across devices / tiles run
+    sharded: int = 0
+    tiles: int = 0
+
+
+@dataclasses.dataclass
+class DeviceStats:
+    """Per-device-tier accounting of the multi-device tile scheduler."""
+
+    tiles: int = 0               # tile kernels scheduled on this device
+    moved_bytes: int = 0         # host -> this device block movement
+    affinity_hits: int = 0       # blocks already resident here (free)
+    evictions: int = 0           # per-device byte-cap LRU pressure
+    evicted_bytes: int = 0
 
 
 @dataclasses.dataclass
 class RuntimeStats:
     per_routine: Dict[str, RoutineStats] = dataclasses.field(
+        default_factory=dict)
+    per_device: Dict[int, DeviceStats] = dataclasses.field(
         default_factory=dict)
     uninstrumented_calls: int = 0
     # LRU registry pressure
@@ -79,6 +157,9 @@ class RuntimeStats:
 
     def routine(self, name: str) -> RoutineStats:
         return self.per_routine.setdefault(name, RoutineStats())
+
+    def device(self, index: int) -> DeviceStats:
+        return self.per_device.setdefault(index, DeviceStats())
 
     @property
     def total_moved_bytes(self) -> int:
@@ -112,6 +193,13 @@ class RuntimeStats:
         if self.evictions:
             lines.append(f"evictions: {self.evictions} "
                          f"({self.evicted_bytes / 1e9:.3f} GB)")
+        if self.per_device:
+            lines.append(f"{'device':<10}{'tiles':>8}{'GB moved':>10}"
+                         f"{'affinity':>10}{'evict':>7}")
+            for dev, d in sorted(self.per_device.items()):
+                lines.append(f"{'dev' + str(dev):<10}{d.tiles:>8}"
+                             f"{d.moved_bytes / 1e9:>10.3f}"
+                             f"{d.affinity_hits:>10}{d.evictions:>7}")
         return "\n".join(lines)
 
 
@@ -159,6 +247,21 @@ class OffloadRuntime:
         self._placements: "collections.OrderedDict[int, Tuple[weakref.ref, jax.Array]]" = (
             collections.OrderedDict())
         self._resident_bytes = 0
+        # multi-device tile scheduler: one block registry (LRU order) per
+        # device tier, block key -> (weakref(parent), placed block), plus
+        # the affinity map block key -> home device and the round-robin
+        # cursor for blocks with no residency anywhere.
+        self.n_devices = int(self.memspace.n_devices)
+        self._tile_caches: list = [collections.OrderedDict()
+                                   for _ in range(self.n_devices)]
+        self._tile_resident: list = [0] * self.n_devices
+        # block key -> set of device tiers where the block is resident
+        # (blocks shared by tiles on different devices replicate)
+        self._block_homes: Dict[Tuple, set] = {}
+        self._rr_cursor = 0
+        # tiles assigned to each device within the call being scheduled
+        # (tie-breaker: replicated blocks score several devices equally)
+        self._sched_load: list = [0] * self.n_devices
         # async mode: recent in-flight outputs, drained by sync()
         self._pending: "collections.deque[jax.Array]" = collections.deque(
             maxlen=_PENDING_WINDOW)
@@ -231,6 +334,159 @@ class OffloadRuntime:
         return self._resident_bytes
 
     # ------------------------------------------------------------------ #
+    # multi-device block registries + tile scheduler                      #
+    # ------------------------------------------------------------------ #
+    def block_homes(self, key: Tuple) -> frozenset:
+        """Device tiers where a block is currently resident."""
+        return frozenset(self._block_homes.get(key, ()))
+
+    def next_device(self) -> int:
+        """Round-robin cursor for blocks with no residency anywhere."""
+        dev = self._rr_cursor % self.n_devices
+        self._rr_cursor += 1
+        return dev
+
+    def scheduled_load(self, device: int) -> int:
+        """Tiles already assigned to a device in the call being
+        scheduled (the affinity tie-breaker)."""
+        return self._sched_load[device]
+
+    def device_resident_bytes(self, device: int) -> int:
+        return self._tile_resident[device]
+
+    def _lookup_block(self, device: int, key: Tuple) -> Optional[jax.Array]:
+        cache = self._tile_caches[device]
+        ent = cache.get(key)
+        if ent is None:
+            return None
+        if ent[0]() is None:            # parent died, id may be recycled
+            self._drop_block(device, key)
+            return None
+        cache.move_to_end(key)
+        return ent[1]
+
+    def _register_block(self, device: int, key: Tuple,
+                        parent: jax.Array, placed: jax.Array) -> None:
+        cache = self._tile_caches[device]
+
+        def _drop(_ref, device=device, key=key, self=self):
+            self._drop_block(device, key)
+
+        if key in cache:
+            self._drop_block(device, key)
+        cache[key] = (weakref.ref(parent, _drop), placed)
+        self._tile_resident[device] += placed.nbytes
+        self._block_homes.setdefault(key, set()).add(device)
+        self._evict_device_over_cap(device, protect=key)
+
+    def _drop_block(self, device: int, key: Tuple) -> None:
+        ent = self._tile_caches[device].pop(key, None)
+        if ent is not None:
+            self._tile_resident[device] -= ent[1].nbytes
+            homes = self._block_homes.get(key)
+            if homes is not None:
+                homes.discard(device)
+                if not homes:
+                    del self._block_homes[key]
+
+    def _evict_device_over_cap(self, device: int, protect: Tuple) -> None:
+        """Per-device byte-cap LRU, mirroring :meth:`_evict_over_cap`:
+        the cap applies to *each* device tier's block residency."""
+        cap = self.device_bytes_cap
+        if cap is None:
+            return
+        cache = self._tile_caches[device]
+        dst = self.stats.device(device)
+        while self._tile_resident[device] > cap and len(cache) > 1:
+            key = next(iter(cache))
+            if key == protect:
+                break
+            _ref, placed = cache.pop(key)
+            self._tile_resident[device] -= placed.nbytes
+            homes = self._block_homes.get(key)
+            if homes is not None:
+                homes.discard(device)
+                if not homes:
+                    del self._block_homes[key]
+            memspace.tag_host(placed)
+            dst.evictions += 1
+            dst.evicted_bytes += placed.nbytes
+            if self.debug >= 1:
+                print(f"[scilib] dev{device} evict block {placed.nbytes} B "
+                      f"(resident {self._tile_resident[device]} B)")
+
+    def _place_block(self, device: int, op: TileOp) -> Tuple[jax.Array, int,
+                                                             bool]:
+        """Materialize one operand block on one device tier.
+
+        Returns (placed block, bytes moved, affinity hit).  Persistent
+        policies (DFU/counter/pinned) register the block so later calls
+        find it resident; Mem-Copy stages fresh every call."""
+        key = op.key()
+        persistent = self.policy.persistent
+        if persistent:
+            cached = self._lookup_block(device, key)
+            if cached is not None:
+                return cached, 0, True
+        block = op.materialize()
+        placed = memspace.put_block(block, device)
+        # a no-op put (block already home on this device, e.g. a chained
+        # output reused whole) moved nothing — keep the stats honest
+        moved = 0 if placed is block else op.nbytes
+        if persistent:
+            self._register_block(device, key, op.parent, placed)
+        return placed, moved, False
+
+    def _sharded_call(self, st: RoutineStats,
+                      plan: TilePlan) -> Tuple[jax.Array, Tuple[int, ...]]:
+        """Execute one call as scheduled tiles and gather the output.
+
+        Device choice is the policy's (:meth:`PolicyBase.select_device`):
+        affinity first — the device already holding the most operand-block
+        bytes — then round-robin.  Output blocks are registered on their
+        device so the next call slicing the gathered result at the same
+        coordinates reuses them for free (the BLASX chained-call path)."""
+        # Phase 1 — schedule every tile against the residency state at
+        # call entry, so blocks placed by the first tiles of this call
+        # cannot gravitationally pull the rest onto one device.
+        self._sched_load = [0] * self.n_devices
+        devices = []
+        for tile in plan.tiles:
+            dev = self.policy.select_device(
+                self, [(op.key(), op.nbytes, op.shared) for op in tile.ops])
+            self._sched_load[dev] += 1
+            devices.append(dev)
+        # Phase 2 — place blocks and run the tile kernels.
+        outs = []
+        for tile, dev in zip(plan.tiles, devices):
+            dst = self.stats.device(dev)
+            placed = []
+            for op in tile.ops:
+                arr, moved, hit = self._place_block(dev, op)
+                st.bytes_in += moved
+                dst.moved_bytes += moved
+                st.cache_hits += int(hit)
+                st.cache_misses += int(not hit)
+                dst.affinity_hits += int(hit)
+                placed.append(arr)
+            outs.append(tile.compute(*placed))
+            dst.tiles += 1
+        out = plan.gather(outs)
+        if self.policy.persistent:
+            for tile, dev, block in zip(plan.tiles, devices, outs):
+                self._register_block(dev, (id(out),) + tile.out_coords,
+                                     out, block)
+        if self.policy.copy_back:
+            st.bytes_out += out.nbytes
+            out = memspace.put(out, memspace.HOST)
+        else:
+            memspace.tag_device(out)
+        st.offloaded += 1
+        st.sharded += 1
+        st.tiles += len(plan.tiles)
+        return out, tuple(devices)
+
+    # ------------------------------------------------------------------ #
     # async mode                                                          #
     # ------------------------------------------------------------------ #
     def sync(self) -> "OffloadRuntime":
@@ -280,7 +536,9 @@ class OffloadRuntime:
                   operands: Sequence[Tuple[str, jax.Array, float, bool]],
                   compute: Callable[..., jax.Array],
                   batch: int = 1,
-                  key: Optional[Hashable] = None) -> jax.Array:
+                  key: Optional[Hashable] = None,
+                  shard: Optional[Callable[[int], Optional[TilePlan]]] = None,
+                  ) -> jax.Array:
         """Run one level-3 BLAS call under the active policy.
 
         ``operands``: (role, array, device_reads_per_elem, written) — the
@@ -290,6 +548,9 @@ class OffloadRuntime:
         ``key``: hashable call-site identity ``(routine, m, n, k, batch,
         dtype, flags)``; when given, the offload decision is memoized in
         the dispatch cache.
+        ``shard``: optional tile-plan builder ``n_devices -> TilePlan``;
+        consulted only when the call offloads and more than one device
+        tier exists, so the single-device fast path never pays for it.
         """
         st = self.stats.routine(routine)
         st.calls += 1
@@ -322,9 +583,16 @@ class OffloadRuntime:
             offload = False
 
         t0 = time.perf_counter()
+        devices: Tuple[int, ...] = ()
+        plan = None
+        if (offload and shard is not None and self.n_devices > 1
+                and self.policy.shardable):
+            plan = shard(self.n_devices)
         if not offload:
             out = compute(*self._harmonize(arrays, st))
             st.on_host += 1
+        elif plan is not None:
+            out, devices = self._sharded_call(st, plan)
         else:
             placed, budget_used = [], 0
             ai = self._arith_intensity(routine, m, n, k, arrays, batch)
@@ -359,10 +627,12 @@ class OffloadRuntime:
                 pend.popleft()
             pend.append(out)
         st.seconds += time.perf_counter() - t0
-        self._record_trace(routine, m, n, k, operands, out, batch)
+        self._record_trace(routine, m, n, k, operands, out, batch, devices)
         if self.debug >= 2:
+            where = "host" if not offload else (
+                f"shard[{len(devices)} tiles]" if devices else "offload")
             print(f"[scilib] {routine} m={m} n={n} k={k} navg={nav:.0f} "
-                  f"{'offload' if offload else 'host'}")
+                  f"{where}")
         return out
 
     # ------------------------------------------------------------------ #
@@ -407,7 +677,8 @@ class OffloadRuntime:
                  "her2k": 2.0 * n * n * k}.get(routine.lstrip("sdcz"), 0.0)
         return batch * flops / max(1, nbytes)
 
-    def _record_trace(self, routine, m, n, k, operands, out, batch) -> None:
+    def _record_trace(self, routine, m, n, k, operands, out, batch,
+                      devices=()) -> None:
         if self.trace is None:
             return
         ops = []
@@ -424,7 +695,7 @@ class OffloadRuntime:
         from repro.core.trace import BlasCall
         self.trace.calls.append(BlasCall(
             routine=routine, m=m, n=n, k=k, batch=batch,
-            operands=tuple(ops)))
+            operands=tuple(ops), devices=tuple(devices)))
 
 
 # --------------------------------------------------------------------- #

@@ -25,6 +25,10 @@ class BlasCall:
     ``operands`` maps role -> (buffer_id, bytes, reads_per_elem, written):
     the per-element device read multiplicity drives the access-counter
     model, ``written`` marks output operands (matrix C, or B for trsm/trmm).
+
+    ``devices`` records the multi-device tile schedule: one device-tier
+    index per tile when the runtime sharded the call, empty for
+    single-device execution (older traces load with the empty default).
     """
 
     routine: str                     # e.g. "zgemm", "dtrsm"
@@ -34,6 +38,7 @@ class BlasCall:
     operands: Tuple[Tuple[str, int, int, float, bool], ...]
     # each: (role, buffer_id, nbytes, reads_per_elem, written)
     batch: int = 1
+    devices: Tuple[int, ...] = ()    # device tier per scheduled tile
 
     # ------------------------------------------------------------------ #
     @property
@@ -177,5 +182,7 @@ class Trace:
             t._next_buf = max(t._next_buf, int(k) + 1)
         for c in raw["calls"]:
             c["operands"] = tuple(tuple(o) for o in c["operands"])
+            if "devices" in c:
+                c["devices"] = tuple(c["devices"])
             t.calls.append(BlasCall(**c))
         return t

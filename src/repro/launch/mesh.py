@@ -26,3 +26,33 @@ def make_debug_mesh(n_devices: int = 8, model: int = 2):
 
 def batch_axes(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --------------------------------------------------------------------- #
+# BLAS-offload device set (the multi-device tile scheduler's view)       #
+# --------------------------------------------------------------------- #
+def offload_devices():
+    """Real devices backing the offload runtime's logical device tiers.
+
+    The runtime enumerates N device tiers (``SCILIB_DEVICES`` or
+    ``len(jax.devices())``, see ``repro.core.memspace``); tier *i* maps to
+    real device ``i % len(jax.devices())`` — with more tiers than
+    hardware (the CPU container's simulated layout) tiers wrap onto the
+    same physical device, exactly like :func:`memspace.put_block`.
+    """
+    from repro.core import memspace
+    devs = jax.devices()
+    return [devs[i % len(devs)] for i in range(memspace.active().n_devices)]
+
+
+def make_offload_mesh():
+    """1-D ``('blas',)`` mesh over the sharded-dispatch device set, for
+    model code that wants its collectives co-located with the BLAS tiles
+    the offload runtime schedules."""
+    import numpy as np
+    seen, unique = set(), []
+    for d in offload_devices():
+        if d.id not in seen:
+            seen.add(d.id)
+            unique.append(d)
+    return jax.sharding.Mesh(np.array(unique), ("blas",))

@@ -32,10 +32,20 @@ shape, and the run-to-run instability of the 200 MB row:
       bound (C of 1000^3 migrates; C of the skinny shape never does).
   R4. mid-size buffers (>=100 MB) migrate with one-call delay on a seeded
       coin flip (the "yes?" rows).
+
+**Multi-device replay** (``n_devices > 1``): the DFU policy models the
+runtime's BLASX-style tile scheduler — super-threshold calls split into a
+2-D tile grid executed concurrently across N devices, buffers assigned to
+a device round-robin on first use and staying put thereafter (affinity),
+each device with its own HBM capacity and H2D accounting
+(``per_device_h2d``).  Read operands replicate along one grid axis (the
+tile-communication amplification of 2-D decompositions); migration links
+to different devices run in parallel.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -54,6 +64,7 @@ class PolicyReport:
     policy: str
     spec: str
     threshold: float
+    n_devices: int = 1
     total_s: float = 0.0
     blas_device_s: float = 0.0
     blas_host_s: float = 0.0
@@ -67,6 +78,8 @@ class PolicyReport:
     max_reuse: float = 0.0
     n_migrated_buffers: int = 0
     device_bytes_peak: int = 0
+    # multi-device replay: H2D bytes landing on each device tier
+    per_device_h2d: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, float]:
         return {
@@ -92,7 +105,8 @@ class MemTierSimulator:
 
     def __init__(self, spec: HardwareSpec = GH200, *, policy: str = "dfu",
                  threshold: float = 500.0, aligned_alloc: bool = False,
-                 seed: int = 0, evict_lru: bool = False):
+                 seed: int = 0, evict_lru: bool = False,
+                 n_devices: int = 1):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
         self.spec = spec
@@ -102,14 +116,21 @@ class MemTierSimulator:
         self.pt = PageTable(spec)
         self.rng = np.random.default_rng(seed)
         self.evict_lru = evict_lru
+        self.n_devices = max(1, int(n_devices))
         self.report = PolicyReport(policy=policy, spec=spec.name,
-                                   threshold=threshold)
+                                   threshold=threshold,
+                                   n_devices=self.n_devices)
         self._bufs: Dict[int, Buffer] = {}       # trace buf id -> Buffer
         self._staged: Dict[int, bool] = {}       # memcopy staging cache
         self._delayed: Dict[int, int] = {}       # counter: deferred once
         self._denied: set = set()                # counter: budget-refused
         self._lru: Dict[int, int] = {}           # buf id -> last use step
         self._step = 0
+        # multi-device DFU: buffer -> assigned device (round-robin with
+        # affinity — first placement sticks), per-device HBM usage
+        self._dev_of: Dict[int, int] = {}
+        self._dev_bytes: Dict[int, int] = {}
+        self._rr_dev = 0
 
     # ------------------------------------------------------------------ #
     def _buffer(self, trace: Trace, bid: int) -> Buffer:
@@ -199,6 +220,91 @@ class MemTierSimulator:
         self.report.movement_s += t_move
         return self._device_kernel(call, bufs) + t_move
 
+    def _dfu_multi(self, call: BlasCall, bufs: List[Buffer]) -> float:
+        """N-device DFU: the runtime's tile scheduler under the cost model.
+
+        Buffers are dealt to devices round-robin on first device use and
+        stay put (affinity); the call executes as a gm x gn tile grid,
+        one tile round per device concurrently.  Read operands replicate
+        along one grid axis — the communication amplification every 2-D
+        decomposition pays — while the written operand splits per tile.
+        """
+        spec, n_dev = self.spec, self.n_devices
+        t_move_dev: Dict[int, float] = {}
+        for b in bufs:
+            if b.fully_on(MemKind.DEVICE):
+                continue
+            dev = self._dev_of.get(b.buf_id)
+            if dev is None:
+                dev = self._rr_dev % n_dev
+                self._rr_dev += 1
+                self._dev_of[b.buf_id] = dev
+            if not self._fits_dev(b, dev):
+                continue
+            moved, secs = self.pt.move_pages(b, MemKind.DEVICE)
+            self._dev_bytes[dev] = self._dev_bytes.get(dev, 0) + moved
+            self.report.per_device_h2d[dev] = (
+                self.report.per_device_h2d.get(dev, 0) + moved)
+            self.report.bytes_host_to_dev += moved
+            t_move_dev[dev] = t_move_dev.get(dev, 0.0) + secs
+        # links to distinct devices run in parallel: the slowest one gates
+        t_move = max(t_move_dev.values(), default=0.0)
+        self.report.movement_s += t_move
+        gm = max(1, math.isqrt(n_dev))
+        gn = -(-n_dev // gm)
+        tiles = gm * gn
+        axis_frac = (1.0 / gm, 1.0 / gn)
+        t_mem, nread = 0.0, 0
+        for b, (_, _, nb, _, written) in zip(bufs, call.operands):
+            if written:
+                frac = 1.0 / tiles
+            else:
+                frac = axis_frac[min(nread, 1)]
+                nread += 1
+            t_mem += self.pt.stream_time(b, int(nb * call.batch * frac),
+                                         accessor="gpu")
+        on_dev = [b for b in bufs if b.resident_bytes(MemKind.DEVICE) > 0]
+        if on_dev and any(not b.aligned for b in on_dev):
+            mem_pen, comp_pen = spec.unaligned_penalty, spec.sysmalloc_penalty
+        else:
+            mem_pen = comp_pen = 1.0
+        eff = spec.eff("gpu", call.routine)
+        per_tile = max(call.flops / tiles / (spec.gpu_flops * eff) * comp_pen,
+                       t_mem * mem_pen) + spec.kernel_launch_s
+        t_k = per_tile * (-(-tiles // n_dev))   # tile rounds per device
+        self.report.blas_device_s += t_k
+        self.report.offloaded_calls += 1
+        for b in bufs:
+            if b.fully_on(MemKind.DEVICE):
+                b.device_uses += 1
+            self._lru[b.buf_id] = self._step
+        return t_k + t_move
+
+    def _fits_dev(self, b: Buffer, dev: int) -> bool:
+        """Per-device capacity check, honoring ``evict_lru`` exactly like
+        the single-device :meth:`_fits` (victims limited to the buffers
+        assigned to this device)."""
+        need = b.n_pages * b.page_size
+        free = self.spec.device_capacity - self._dev_bytes.get(dev, 0)
+        if need <= free:
+            return True
+        if not self.evict_lru:
+            return False
+        victims = sorted(
+            (bb for bb in self._bufs.values()
+             if self._dev_of.get(bb.buf_id) == dev and bb is not b
+             and bb.resident_bytes(MemKind.DEVICE) > 0),
+            key=lambda bb: self._lru.get(bb.buf_id, -1))
+        for v in victims:
+            moved, secs = self.pt.move_pages(v, MemKind.HOST)
+            self.report.movement_s += secs
+            self.report.bytes_dev_to_host += moved
+            self._dev_bytes[dev] = self._dev_bytes.get(dev, 0) - moved
+            free += moved
+            if need <= free:
+                return True
+        return need <= free
+
     def _counter(self, call: BlasCall, bufs: List[Buffer]) -> float:
         """Model of Hopper's access-counter migration (§4.4.1, Table 6)."""
         spec = self.spec
@@ -275,7 +381,8 @@ class MemTierSimulator:
             elif self.policy == "memcopy":
                 t = self._memcopy(call, bufs)
             elif self.policy == "dfu":
-                t = self._dfu(call, bufs)
+                t = (self._dfu(call, bufs) if self.n_devices == 1
+                     else self._dfu_multi(call, bufs))
             elif self.policy == "counter":
                 t = self._counter(call, bufs)
             else:                                   # pinned
@@ -308,12 +415,13 @@ class MemTierSimulator:
 def replay_trace(trace: Trace, *, spec: HardwareSpec = GH200,
                  policies=POLICIES, threshold: float = 500.0,
                  aligned_alloc: bool = False,
-                 evict_lru: bool = False) -> Dict[str, PolicyReport]:
+                 evict_lru: bool = False,
+                 n_devices: int = 1) -> Dict[str, PolicyReport]:
     """Run one trace under several policies (the paper's Tables 3/5)."""
     out = {}
     for p in policies:
         sim = MemTierSimulator(spec, policy=p, threshold=threshold,
                                aligned_alloc=aligned_alloc,
-                               evict_lru=evict_lru)
+                               evict_lru=evict_lru, n_devices=n_devices)
         out[p] = sim.run(trace)
     return out
