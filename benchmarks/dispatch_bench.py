@@ -13,6 +13,9 @@ cached) runtime, on the two workloads the tentpole targets.
   moved bytes and byte-cap eviction counters.  On this CPU container
   every logical device tier shares one physical CPU, so the numbers
   measure scheduler overhead and movement accounting, not speedup.
+* ``adaptive`` — the small-gemm loop under ``SCILIB_ADAPTIVE=1``: the
+  per-site warmup probes both paths, locks, and steady state should
+  approach the fast path (the lock costs two dict hops per call).
 
 Modes are selected with the runtime's own knobs so the comparison runs
 the *same* code path the library ships:
@@ -22,6 +25,10 @@ the *same* code path the library ships:
 * fast: the defaults (async + dispatch cache).
 
     PYTHONPATH=src python -m benchmarks.dispatch_bench
+
+``SCILIB_BENCH_QUICK=1`` shrinks every loop for CI smoke runs, and
+``--record-trace PATH`` dumps the dfuchain workload's BLAS trace for
+the autotuner walkthrough (``python -m repro.tools.autotune PATH``).
 """
 from __future__ import annotations
 
@@ -33,23 +40,28 @@ import numpy as np
 
 Row = Tuple[str, float, str]
 
+_QUICK = os.environ.get("SCILIB_BENCH_QUICK", "") == "1"
+
 SMALL_N = 64
-SMALL_CALLS = 400
+SMALL_CALLS = 40 if _QUICK else 400
 CHAIN_N = 256
-CHAIN_CALLS = 100
+CHAIN_CALLS = 20 if _QUICK else 100
 SHARD_N = 512
-SHARD_CALLS = 30
-REPS = 3
+SHARD_CALLS = 6 if _QUICK else 30
+REPS = 1 if _QUICK else 3
 
 
 def _install(mode: str):
     from repro.core import runtime as rtm
+    os.environ.pop("SCILIB_ADAPTIVE", None)
     if mode == "seed":
         os.environ["SCILIB_SYNC"] = "1"
         os.environ["SCILIB_DISPATCH_CACHE"] = "0"
     else:
         os.environ.pop("SCILIB_SYNC", None)
         os.environ["SCILIB_DISPATCH_CACHE"] = "1"
+        if mode == "adaptive":
+            os.environ["SCILIB_ADAPTIVE"] = "1"
     from repro.core import blas
     blas.clear_caches()
     return rtm
@@ -141,13 +153,36 @@ def _bench_shardscale(n_dev: int) -> Tuple[float, float, int, int]:
         os.environ.pop("SCILIB_DEVICE_BYTES", None)
 
 
+def _record_chain_trace(path: str) -> None:
+    """Run the dfuchain workload with trace recording on and dump the
+    trace for the autotuner walkthrough (docs/PERF.md)."""
+    rtm = _install("fast")
+    from repro.core import blas
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(3)
+    rt = rtm.install("dfu", threshold=100, record_trace=True)
+    try:
+        a = host_array(rng.standard_normal((CHAIN_N, CHAIN_N))
+                       .astype("float32") / CHAIN_N)
+        c = a
+        for _ in range(CHAIN_CALLS):
+            c = blas.gemm(a, c)
+        rt.sync()
+        rt.trace.dump(path)
+        print(f"# trace: {len(rt.trace)} calls -> {path}")
+    finally:
+        rtm.uninstall()
+
+
 def bench() -> List[Row]:
     rows: List[Row] = []
     saved = {k: os.environ.get(k)
              for k in ("SCILIB_SYNC", "SCILIB_DISPATCH_CACHE",
-                       "SCILIB_DEVICES", "SCILIB_DEVICE_BYTES")}
+                       "SCILIB_DEVICES", "SCILIB_DEVICE_BYTES",
+                       "SCILIB_ADAPTIVE")}
     try:
-        small = {m: _bench_smallgemm(m) for m in ("seed", "fast")}
+        small = {m: _bench_smallgemm(m)
+                 for m in ("seed", "fast", "adaptive")}
         chain = {m: _bench_dfuchain(m) for m in ("seed", "fast")}
         shard = {n: _bench_shardscale(n) for n in (1, 2, 4)}
     finally:
@@ -163,6 +198,9 @@ def bench() -> List[Row]:
     rows.append(("dispatch.smallgemm64.speedup",
                  round(small["fast"] / small["seed"], 2),
                  "acceptance: >= 2x"))
+    rows.append(("dispatch.smallgemm64.adaptive_cps",
+                 round(small["adaptive"], 0),
+                 "SCILIB_ADAPTIVE=1: warmup probes + locked steady state"))
     rows.append(("dispatch.dfuchain100.seed_cps", round(chain["seed"], 0),
                  "sync + uncached (seed runtime)"))
     rows.append(("dispatch.dfuchain100.fast_cps", round(chain["fast"], 0),
@@ -185,9 +223,17 @@ def bench() -> List[Row]:
 
 
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--record-trace", default="",
+                    help="also dump the dfuchain workload's BLAS trace "
+                         "here (autotuner input)")
+    args = ap.parse_args()
     print("name,value,derived")
     for name, value, derived in bench():
         print(f"{name},{value},{derived}")
+    if args.record_trace:
+        _record_chain_trace(args.record_trace)
 
 
 if __name__ == "__main__":

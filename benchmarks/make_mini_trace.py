@@ -1,0 +1,74 @@
+"""Generate the checked-in miniature autotune trace.
+
+    PYTHONPATH=src python -m benchmarks.make_mini_trace [out.json]
+
+The workload is three call sites chosen so the paper's default
+threshold (500) is measurably wrong for one of them — the situation the
+trace-replay autotuner exists to catch:
+
+* ``dgemm@parsec_dft.py:update_rho:88`` — six movement-bound skinny
+  dgemms (4000 x 4000 x 15, N_avg ~= 621) on *fresh* buffers every call:
+  above the default threshold, so the baseline offloads them and pays
+  ~130 MB of one-way migration per call for ~0.5 GFLOP of work.  Any
+  threshold above ~621 keeps them host and deletes that movement.
+* ``zgemm@must_lsms.py:greens:214`` — twenty-four reuse-heavy 1000^3
+  zgemms on the *same* buffers (N_avg = 1000): genuinely worth
+  offloading at any sensible threshold; DFU moves the operands once,
+  Mem-Copy restages ~64 MB per call.
+* ``sgemm@train_step.py:mlp_forward:57`` — ten tiny 128^3 sgemms:
+  below every candidate threshold, host everywhere.
+
+The expected recommendation is therefore a threshold between ~621 and
+1000 (the autotuner's N_avg-midpoint grid lands on ~811), which both
+speeds up the replay and cuts moved bytes versus the 500 default —
+the acceptance check in ``tests/test_callsite_pipeline.py`` and the CI
+autotune smoke step assert exactly that.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core.trace import Trace
+
+DEFAULT_OUT = "tests/data/mini_trace.json"
+
+SITE_SKINNY = "dgemm@parsec_dft.py:update_rho:88"
+SITE_REUSE = "zgemm@must_lsms.py:greens:214"
+SITE_SMALL = "sgemm@train_step.py:mlp_forward:57"
+
+
+def build() -> Trace:
+    t = Trace()
+    # reuse-heavy zgemm site: one buffer triple, 24 calls
+    za = t.new_buffer(1000 * 1000 * 16, "G_k")
+    zb = t.new_buffer(1000 * 1000 * 16, "tau")
+    zc = t.new_buffer(1000 * 1000 * 16, "G_out")
+    # small sgemm site: one buffer triple, 10 calls
+    sa = t.new_buffer(128 * 128 * 4, "act")
+    sb = t.new_buffer(128 * 128 * 4, "w")
+    sc = t.new_buffer(128 * 128 * 4, "out")
+    # interleave the sites roughly how an application would issue them
+    for step in range(6):
+        # skinny dgemm on fresh buffers every call (no reuse to exploit)
+        da = t.new_buffer(4000 * 15 * 8, f"rho_a{step}")
+        db = t.new_buffer(15 * 4000 * 8, f"rho_b{step}")
+        dc = t.new_buffer(4000 * 4000 * 8, f"rho_c{step}")
+        t.gemm("d", 4000, 4000, 15, da, db, dc, site=SITE_SKINNY)
+        for _ in range(4):
+            t.gemm("z", 1000, 1000, 1000, za, zb, zc, site=SITE_REUSE)
+        t.gemm("s", 128, 128, 128, sa, sb, sc, site=SITE_SMALL)
+    for _ in range(4):
+        t.gemm("s", 128, 128, 128, sa, sb, sc, site=SITE_SMALL)
+    return t
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_OUT
+    trace = build()
+    trace.dump(out)
+    print(f"wrote {len(trace)} calls / "
+          f"{len(trace.buffer_sizes)} buffers -> {out}")
+
+
+if __name__ == "__main__":
+    main()

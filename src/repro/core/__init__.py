@@ -13,13 +13,15 @@ Public surface:
 * :mod:`repro.core.memspace` — portable logical HOST/DEVICE memory
   tiers mapped onto the backend's real memory kinds (simulated-tier
   fallback on single-kind backends).
+* :mod:`repro.core.callsite` — per-call-site fingerprints and profiles
+  (the paper's patched call sites; drives ``SCILIB_ADAPTIVE=1``).
 """
-from repro.core import blas, lapack, memspace
+from repro.core import blas, callsite, lapack, memspace
 from repro.core.intercept import install, offload, uninstall
 from repro.core.policy import host_array
 from repro.core.runtime import OffloadRuntime, active
 from repro.core.trace import BlasCall, Trace
 
-__all__ = ["blas", "lapack", "memspace", "install", "offload",
-           "uninstall", "OffloadRuntime", "active", "BlasCall", "Trace",
-           "host_array"]
+__all__ = ["blas", "callsite", "lapack", "memspace", "install",
+           "offload", "uninstall", "OffloadRuntime", "active",
+           "BlasCall", "Trace", "host_array"]

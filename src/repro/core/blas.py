@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import functools
 import math
+import operator
 import os
 from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
@@ -26,7 +27,7 @@ from repro.core import runtime as rt
 from repro.core.runtime import Tile, TileOp, TilePlan
 
 __all__ = ["gemm", "symm", "hemm", "syrk", "herk", "syr2k", "her2k",
-           "trmm", "trsm", "routine_name"]
+           "trmm", "trsm", "routine_name", "tensordot_flags"]
 
 _RNAMES: Dict[Tuple[str, str], str] = {}
 
@@ -107,6 +108,62 @@ def _call_key(bkey: Optional[Hashable], m: int, n: int, k: int,
     if bkey is None:
         return None
     return (bkey, m, n, k, batch)
+
+
+def tensordot_flags(axes) -> Optional[Tuple[str, str]]:
+    """Canonicalize a 2-D ``tensordot`` axes spec into gemm transpose
+    flags, or None when the contraction is not gemm-shaped.
+
+    For two matrices, a single contracted axis per operand is exactly a
+    (possibly transposed) gemm — tensordot orders the output as (free
+    axes of a, free axes of b), which is gemm's ``ik`` layout:
+
+    ========================  ==========
+    axes                      (ta, tb)
+    ========================  ==========
+    ``1`` / ``(1, 0)``        ``N, N``
+    ``(0, 0)``                ``T, N``
+    ``(1, 1)``                ``N, T``
+    ``(0, 1)``                ``T, T``
+    ========================  ==========
+
+    ``axes=2`` (full double contraction -> scalar) and anything
+    higher-rank are not level-3 calls and return None.
+    """
+    if isinstance(axes, int):
+        if axes != 1:
+            return None
+        ax_a, ax_b = 1, 0              # a's last axis against b's first
+    else:
+        try:
+            ax_a, ax_b = axes
+        except (TypeError, ValueError):
+            return None
+        ax_a, ax_b = _single_axis(ax_a), _single_axis(ax_b)
+        if ax_a is None or ax_b is None:
+            return None
+    ta = "N" if ax_a == 1 else "T"
+    tb = "N" if ax_b == 0 else "T"
+    return ta, tb
+
+
+def _single_axis(ax) -> Optional[int]:
+    """One matrix axis as a plain 0/1 int, or None.  Accepts ints,
+    integer-likes (numpy scalars), and single-axis sequences."""
+    if not isinstance(ax, int):
+        try:                           # single-element sequence?
+            if len(ax) != 1:
+                return None
+            ax = ax[0]
+        except TypeError:
+            pass                       # scalar-like: fall through
+    try:
+        ax = operator.index(ax)        # numpy integers included
+    except TypeError:
+        return None
+    if ax not in (-2, -1, 0, 1):
+        return None                    # out of range for a matrix
+    return ax % 2                      # accept negative axes
 
 
 def _op(x: jax.Array, trans: str) -> jax.Array:

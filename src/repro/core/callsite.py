@@ -1,0 +1,205 @@
+"""Call-site identity and per-site profiles (paper §3.1, per-site patching).
+
+The paper's tool does not make one global offload decision: dynamic binary
+instrumentation patches each BLAS *call site* individually, profiles it,
+and locks in a site-specific decision.  This module is the JAX analogue:
+
+* :func:`fingerprint` — a cheap call-site id built from the interception
+  entry point (the BLAS routine) plus the first caller frame outside the
+  dispatch machinery.  A loop calling ``blas.gemm`` from one line is one
+  site; the same gemm shape issued from two places is two sites.
+* :class:`CallSiteProfile` — what the runtime learns about one site:
+  call count, size (N_avg) distribution, residency hit rate, observed
+  per-path wall time, and — in adaptive mode — the locked decision.
+* :class:`CallSiteRegistry` — the per-runtime site table; the analogue of
+  the paper's patched-trampoline table.
+
+Frames inside the dispatch machinery itself (``blas.py``, ``runtime.py``,
+``intercept.py``, this file) are skipped, so a ``lapack.getrf`` driver's
+internal gemm calls fingerprint to their line *inside the driver* —
+exactly what the paper's patching of BLAS symbols inside libraries does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Dict, Iterator, List, Optional
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+#: dispatch-machinery files whose frames never count as the call site
+_MACHINERY = frozenset(
+    os.path.join(_HERE, name)
+    for name in ("callsite.py", "runtime.py", "blas.py", "intercept.py"))
+_MAX_WALK = 16
+
+UNKNOWN = "<unknown>"
+
+
+def fingerprint(entry: str) -> str:
+    """Cheap call-site id: ``entry@file:function:lineno``.
+
+    ``entry`` is the interception entry point (the BLAS routine name).
+    The caller frame is the first one outside the dispatch machinery.
+    Cost is a short frame walk (~1 us) — negligible against even a
+    sub-threshold host gemm, and the fast dispatch path stays fast.
+    """
+    try:
+        frame = sys._getframe(1)
+    except ValueError:                      # pragma: no cover - no caller
+        return f"{entry}@{UNKNOWN}"
+    for _ in range(_MAX_WALK):
+        if frame is None:
+            break
+        code = frame.f_code
+        if code.co_filename not in _MACHINERY:
+            return (f"{entry}@{os.path.basename(code.co_filename)}"
+                    f":{code.co_name}:{frame.f_lineno}")
+        frame = frame.f_back
+    return f"{entry}@{UNKNOWN}"
+
+
+@dataclasses.dataclass
+class CallSiteProfile:
+    """Everything the runtime has learned about one BLAS call site."""
+
+    site: str
+    calls: int = 0
+    flops: float = 0.0
+    seconds: float = 0.0
+    offloaded: int = 0
+    on_host: int = 0
+    # size distribution (N_avg per call; locked adaptive calls skip the
+    # derivation entirely, so the count can trail ``calls``)
+    n_avg_min: float = float("inf")
+    n_avg_max: float = 0.0
+    n_avg_sum: float = 0.0
+    n_avg_count: int = 0
+    # residency: operand placements attempted / found already resident
+    lookups: int = 0
+    hits: int = 0
+    # adaptive warmup: per-path wall-time samples (paper: profile the
+    # first N calls on both paths, then patch in the faster decision)
+    host_timed: int = 0
+    host_seconds: float = 0.0
+    host_best: float = float("inf")
+    device_timed: int = 0
+    device_seconds: float = 0.0
+    device_best: float = float("inf")
+    locked: Optional[bool] = None          # the locked offload decision
+    locked_why: str = ""
+    last_offload: Optional[bool] = None    # decision of the latest call
+
+    # ------------------------------------------------------------------ #
+    def observe(self, n_avg: float, flops: float, seconds: float,
+                offload: bool) -> None:
+        """Record one completed call at this site.  ``n_avg <= 0``
+        means "not derived" (the locked adaptive fast path skips the
+        derivation): the call still counts, the size distribution —
+        already captured during warmup — is left untouched."""
+        self.calls += 1
+        self.flops += flops
+        self.seconds += seconds
+        if offload:
+            self.offloaded += 1
+        else:
+            self.on_host += 1
+        self.last_offload = offload
+        if n_avg > 0:
+            if n_avg < self.n_avg_min:
+                self.n_avg_min = n_avg
+            if n_avg > self.n_avg_max:
+                self.n_avg_max = n_avg
+            self.n_avg_sum += n_avg
+            self.n_avg_count += 1
+
+    def observe_probe(self, offload: bool, seconds: float) -> None:
+        """Record one timed adaptive-warmup probe on one path."""
+        if offload:
+            self.device_timed += 1
+            self.device_seconds += seconds
+            if seconds < self.device_best:
+                self.device_best = seconds
+        else:
+            self.host_timed += 1
+            self.host_seconds += seconds
+            if seconds < self.host_best:
+                self.host_best = seconds
+
+    # ------------------------------------------------------------------ #
+    @property
+    def probes_done(self) -> int:
+        return self.host_timed + self.device_timed
+
+    def probe_path(self) -> bool:
+        """Deterministic warmup schedule: even probes run the host path,
+        odd probes offload — both paths get equal samples regardless of
+        what the threshold rule would have said."""
+        return self.probes_done % 2 == 1
+
+    def lock(self, fallback: Optional[bool] = None) -> bool:
+        """Lock the faster path (paper's warmup-then-patch step).
+
+        Compares the *best* sample per path, not the mean: the first
+        probe of each path pays jit compilation, and the minimum is
+        robust to that one-off cost.  A path with no samples (e.g. the
+        ``cpu`` policy forces every probe host-side) loses by default;
+        with no samples at all the threshold ``fallback`` decides.
+        """
+        if self.locked is not None:
+            return self.locked
+        if self.probes_done == 0:
+            self.locked = bool(fallback)
+            self.locked_why = "no probes; threshold fallback"
+            return self.locked
+        self.locked = self.device_best < self.host_best
+        self.locked_why = (f"device {self.device_best * 1e6:.0f}us vs "
+                           f"host {self.host_best * 1e6:.0f}us "
+                           f"over {self.probes_done} probes")
+        return self.locked
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_avg_mean(self) -> float:
+        return (self.n_avg_sum / self.n_avg_count
+                if self.n_avg_count else 0.0)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def decision_label(self) -> str:
+        """Human label for the report table."""
+        if self.locked is not None:
+            return ("offload*" if self.locked else "host*")
+        if self.last_offload is None:
+            return "-"
+        return "offload" if self.last_offload else "host"
+
+
+class CallSiteRegistry:
+    """Site id -> profile; the runtime's patched-call-site table."""
+
+    def __init__(self) -> None:
+        self._sites: Dict[str, CallSiteProfile] = {}
+
+    def profile(self, site: str) -> CallSiteProfile:
+        prof = self._sites.get(site)
+        if prof is None:
+            prof = self._sites[site] = CallSiteProfile(site)
+        return prof
+
+    def get(self, site: str) -> Optional[CallSiteProfile]:
+        return self._sites.get(site)
+
+    def top_by_flops(self, n: int = 8) -> List[CallSiteProfile]:
+        return sorted(self._sites.values(), key=lambda p: -p.flops)[:n]
+
+    def __len__(self) -> int:
+        return len(self._sites)
+
+    def __iter__(self) -> Iterator[CallSiteProfile]:
+        return iter(self._sites.values())
+
+    def __contains__(self, site: str) -> bool:
+        return site in self._sites

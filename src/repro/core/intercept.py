@@ -3,8 +3,8 @@
 The paper patches BLAS symbols in an *unmodified CPU binary* with a
 trampoline that runs the offload wrapper. The JAX ecosystem's equivalent
 entry points are the public matmul symbols: ``jnp.dot``, ``jnp.matmul``,
-``jnp.einsum`` (NumPy-style application code calls these, not
-``repro.core.blas``). :func:`install` rebinds them to trampolines that
+``jnp.einsum``, ``jnp.tensordot`` (NumPy-style application code calls
+these, not ``repro.core.blas``). :func:`install` rebinds them to trampolines that
 route level-3-shaped calls through the offload runtime and fall through to
 the original for everything else — no caller changes, no re-"linking".
 
@@ -129,6 +129,20 @@ def _canon_spec(spec: str):
     return canon, batched
 
 
+def _tensordot(a, b, axes=2, **kw):
+    """2-D tensordot contractions with one contracted axis per operand
+    are exactly a (possibly transposed) gemm — tensordot-heavy code no
+    longer bypasses offload."""
+    if (_blasable(a, b) and not kw
+            and getattr(a, "ndim", 0) == 2 and getattr(b, "ndim", 0) == 2):
+        flags = blas.tensordot_flags(axes)
+        if flags is not None:
+            return blas.gemm(a, b, trans_a=flags[0], trans_b=flags[1])
+    if rt.active() is not None:
+        rt.active().stats.uninstrumented_calls += 1
+    return _ORIG["tensordot"](a, b, axes, **kw)
+
+
 def _einsum(spec, *operands, **kw):
     if (isinstance(spec, str) and len(operands) == 2
             and _blasable(*operands) and not kw):
@@ -159,9 +173,11 @@ def install(policy: str = "dfu", threshold: Optional[float] = None,
         _ORIG["matmul"] = jnp.matmul
         _ORIG["dot"] = jnp.dot
         _ORIG["einsum"] = jnp.einsum
+        _ORIG["tensordot"] = jnp.tensordot
         jnp.matmul = _matmul
         jnp.dot = _dot
         jnp.einsum = _einsum
+        jnp.tensordot = _tensordot
     return runtime
 
 
@@ -171,6 +187,7 @@ def uninstall():
         jnp.matmul = _ORIG.pop("matmul")
         jnp.dot = _ORIG.pop("dot")
         jnp.einsum = _ORIG.pop("einsum")
+        jnp.tensordot = _ORIG.pop("tensordot")
     return rt.uninstall()
 
 

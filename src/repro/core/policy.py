@@ -67,6 +67,10 @@ class PolicyBase:
     copy_back = False
     #: whether placements persist across calls (the reuse mechanism)
     persistent = True
+    #: whether this policy executes on the device tier at all — the
+    #: dispatch pipeline's decide stage vetoes offload when False
+    #: (host-only baselines), instead of string-matching policy names
+    offloads = True
     #: whether the multi-device tile scheduler may shard calls under this
     #: policy.  Only policies that migrate every operand on (first) use
     #: keep their semantics when the runtime moves blocks itself; the
@@ -221,6 +225,7 @@ class CpuOnlyPolicy(PolicyBase):
     name = "cpu"
     copy_back = False
     persistent = False
+    offloads = False
 
     def place_operand(self, runtime, x):
         return Placement(x)

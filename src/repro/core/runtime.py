@@ -30,6 +30,35 @@ the paper's tool returns control to the host thread while cuBLAS runs.
 synchronous seed behaviour — per-call ``block_until_ready`` with wall
 time measured around the device work — and ``runtime.sync()`` drains
 in-flight results explicitly (what benchmarks call before reading clocks).
+
+**The dispatch pipeline.**  ``blas_call`` is a staged pipeline with
+call-site identity threaded through every layer, mirroring the paper's
+per-call-site DBI patching:
+
+    canonicalize -> decide -> plan -> execute -> record
+
+* *canonicalize* bundles the call into a :class:`CallContext` and
+  fingerprints the call site (:mod:`repro.core.callsite`).
+* *decide* runs the ordered ``decision_stages`` — adaptive per-site
+  lock-in (``SCILIB_ADAPTIVE=1``), the memoized dispatch cache, then the
+  threshold rule — until one yields a :class:`DispatchDecision`; the
+  policy capability (``policy.offloads``) can veto offload afterwards.
+  Stages are plain callables on the runtime: later policies plug in by
+  inserting into ``decision_stages`` instead of editing branches.
+* *plan* consults the multi-device tile planner only when the decision
+  offloads and more than one device tier exists.
+* *execute* runs the host path, the whole-call offload path, or the
+  sharded tile schedule.
+* *record* updates per-routine and per-site statistics and appends the
+  :class:`~repro.core.trace.BlasCall` (with ``callsite_id`` and the
+  measured per-call ``seconds``) to the trace.
+
+**Adaptive per-site mode** (``SCILIB_ADAPTIVE=1``): the first
+``SCILIB_ADAPTIVE_WARMUP`` calls at each site alternate deterministically
+between the host and offload paths, timed synchronously, and the faster
+path is then locked — exactly the paper's warmup-then-patch behaviour.
+With ``SCILIB_ADAPTIVE=0`` (default) the pipeline is behaviour-identical
+to the flat dispatch it replaced.
 """
 from __future__ import annotations
 
@@ -42,6 +71,7 @@ from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 import jax
 
+from repro.core import callsite as cs
 from repro.core import memspace
 from repro.core import threshold as thr
 from repro.core.policy import CounterPolicy, PolicyBase, make_policy
@@ -110,6 +140,40 @@ class TilePlan:
     gather: Callable[[Sequence[jax.Array]], jax.Array]
 
 
+# --------------------------------------------------------------------- #
+# dispatch-pipeline IR                                                   #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class CallContext:
+    """One canonicalized BLAS call flowing through the pipeline."""
+
+    routine: str
+    m: int
+    n: int
+    k: int
+    batch: int
+    operands: Sequence[Tuple[str, jax.Array, float, bool]]
+    arrays: list
+    compute: Callable[..., jax.Array]
+    key: Optional[Hashable]
+    shard: Optional[Callable[[int], Optional["TilePlan"]]]
+    site: Optional[cs.CallSiteProfile] = None
+    site_id: str = ""
+
+
+@dataclasses.dataclass
+class DispatchDecision:
+    """The small dispatch IR a decision stage emits: offload?  why?
+    Later stages attach the tile plan (device? shard plan?)."""
+
+    offload: bool
+    n_avg: float = 0.0
+    why: str = "threshold"      # "cache" | "threshold" | "adaptive:probe"
+    #                           # | "adaptive:locked" | "policy:host-only"
+    plan: Optional[TilePlan] = None
+    timed: bool = False         # adaptive probe: block + bill path timing
+
+
 @dataclasses.dataclass
 class RoutineStats:
     calls: int = 0
@@ -154,6 +218,8 @@ class RuntimeStats:
     # LRU registry pressure
     evictions: int = 0
     evicted_bytes: int = 0
+    # per-call-site profiles (shared with the owning runtime's registry)
+    callsites: Optional[cs.CallSiteRegistry] = None
 
     def routine(self, name: str) -> RoutineStats:
         return self.per_routine.setdefault(name, RoutineStats())
@@ -200,6 +266,17 @@ class RuntimeStats:
                 lines.append(f"{'dev' + str(dev):<10}{d.tiles:>8}"
                              f"{d.moved_bytes / 1e9:>10.3f}"
                              f"{d.affinity_hits:>10}{d.evictions:>7}")
+        if self.callsites is not None and len(self.callsites):
+            lines.append("call sites (top by flops; * = adaptive lock)")
+            lines.append(f"{'site':<44}{'calls':>7}{'GFLOP':>9}"
+                         f"{'decision':>10}{'hit%':>6}{'sec':>9}")
+            for p in self.callsites.top_by_flops():
+                site = (p.site if len(p.site) <= 43
+                        else p.site[:40] + "...")
+                lines.append(f"{site:<44}{p.calls:>7}"
+                             f"{p.flops / 1e9:>9.2f}"
+                             f"{p.decision_label():>10}"
+                             f"{100 * p.hit_rate:>6.0f}{p.seconds:>9.3f}")
         return "\n".join(lines)
 
 
@@ -211,6 +288,31 @@ def _env_bytes(name: str) -> Optional[int]:
         return int(float(raw))
     except ValueError:
         return None
+
+
+#: real-FLOP factors per base routine (shared by the access-counter
+#: arithmetic-intensity input and the per-site flops accounting)
+_FLOP_FACTORS = {
+    "gemm": lambda m, n, k: 2.0 * m * n * k,
+    "trsm": lambda m, n, k: 1.0 * m * m * n,
+    "trmm": lambda m, n, k: 1.0 * m * m * n,
+    "syrk": lambda m, n, k: 1.0 * n * n * k,
+    "herk": lambda m, n, k: 1.0 * n * n * k,
+    "symm": lambda m, n, k: 2.0 * m * m * n,
+    "hemm": lambda m, n, k: 2.0 * m * m * n,
+    "syr2k": lambda m, n, k: 2.0 * n * n * k,
+    "her2k": lambda m, n, k: 2.0 * n * n * k,
+}
+
+
+def _flops_of(routine: str, m: int, n: int, k: int, batch: int = 1) -> float:
+    """Real-FLOP count, matching :meth:`repro.core.trace.BlasCall.flops`:
+    complex multiply-adds cost 4x their real counterparts."""
+    fn = _FLOP_FACTORS.get(thr.base_routine(routine))
+    if fn is None:
+        return 0.0
+    mult = 4.0 if routine[:1] in ("c", "z") else 1.0
+    return mult * batch * fn(m, n, k)
 
 
 class OffloadRuntime:
@@ -234,6 +336,24 @@ class OffloadRuntime:
         self.sync_mode = bool(sync)
         self.dispatch_cache_enabled = (
             os.environ.get("SCILIB_DISPATCH_CACHE", "1") != "0")
+        # per-call-site profiling (cheap fingerprint; SCILIB_CALLSITE=0
+        # turns the whole site layer off) and the adaptive per-site mode
+        self.callsite_enabled = (
+            os.environ.get("SCILIB_CALLSITE", "1") != "0")
+        self.adaptive = os.environ.get("SCILIB_ADAPTIVE", "") == "1"
+        try:
+            self.adaptive_warmup = max(
+                2, int(os.environ.get("SCILIB_ADAPTIVE_WARMUP", "6")))
+        except ValueError:
+            self.adaptive_warmup = 6
+        self.callsites = cs.CallSiteRegistry()
+        self.stats.callsites = self.callsites
+        # ordered decision stages: first stage to return a decision wins.
+        # Later policy PRs extend dispatch by inserting here, not by
+        # editing branches inside blas_call.
+        self.decision_stages = [self._stage_adaptive,
+                                self._stage_cached,
+                                self._stage_threshold]
         # keep the blas-level scalar/kernel caches on the same flag even
         # when a runtime is constructed directly (not via install())
         from repro.core import blas
@@ -437,8 +557,9 @@ class OffloadRuntime:
             self._register_block(device, key, op.parent, placed)
         return placed, moved, False
 
-    def _sharded_call(self, st: RoutineStats,
-                      plan: TilePlan) -> Tuple[jax.Array, Tuple[int, ...]]:
+    def _sharded_call(self, st: RoutineStats, plan: TilePlan,
+                      site: Optional[cs.CallSiteProfile] = None,
+                      ) -> Tuple[jax.Array, Tuple[int, ...]]:
         """Execute one call as scheduled tiles and gather the output.
 
         Device choice is the policy's (:meth:`PolicyBase.select_device`):
@@ -468,6 +589,9 @@ class OffloadRuntime:
                 st.cache_hits += int(hit)
                 st.cache_misses += int(not hit)
                 dst.affinity_hits += int(hit)
+                if site is not None:
+                    site.lookups += 1
+                    site.hits += int(hit)
                 placed.append(arr)
             outs.append(tile.compute(*placed))
             dst.tiles += 1
@@ -530,7 +654,7 @@ class OffloadRuntime:
         self._trace_ids[key] = (weakref.ref(dst, _drop), ent[1])
 
     # ------------------------------------------------------------------ #
-    # the intercepted-call entry point                                    #
+    # the intercepted-call entry point: the staged dispatch pipeline      #
     # ------------------------------------------------------------------ #
     def blas_call(self, routine: str, m: int, n: int, k: int,
                   operands: Sequence[Tuple[str, jax.Array, float, bool]],
@@ -539,13 +663,15 @@ class OffloadRuntime:
                   key: Optional[Hashable] = None,
                   shard: Optional[Callable[[int], Optional[TilePlan]]] = None,
                   ) -> jax.Array:
-        """Run one level-3 BLAS call under the active policy.
+        """Run one level-3 BLAS call through the dispatch pipeline:
+
+            canonicalize -> decide -> plan -> execute -> record
 
         ``operands``: (role, array, device_reads_per_elem, written) — the
         same metadata the memtier access-counter model consumes.
         ``compute``: jit-compiled arithmetic taking the placed operand
         arrays in order.
-        ``key``: hashable call-site identity ``(routine, m, n, k, batch,
+        ``key``: hashable call-shape identity ``(routine, m, n, k, batch,
         dtype, flags)``; when given, the offload decision is memoized in
         the dispatch cache.
         ``shard``: optional tile-plan builder ``n_devices -> TilePlan``;
@@ -561,63 +687,14 @@ class OffloadRuntime:
             # the offload decision is static and the compute fn embeds it.
             return compute(*arrays)
 
-        if key is not None and self.dispatch_cache_enabled:
-            dec = self._decisions.get(key)
-            if dec is None:
-                dec = thr.should_offload(routine, m, n, k,
-                                         threshold=self.threshold,
-                                         batch=batch)
-                if len(self._decisions) > _DECISION_CACHE_LIMIT:
-                    self._decisions.clear()   # dynamic-shape churn guard
-                self._decisions[key] = dec
-                st.dispatch_misses += 1
-            else:
-                st.dispatch_hits += 1
-            offload, nav = dec
-        else:
-            st.dispatch_misses += 1
-            offload, nav = thr.should_offload(routine, m, n, k,
-                                              threshold=self.threshold,
-                                              batch=batch)
-        if self.policy.name == "cpu":
-            offload = False
-
+        call = self._canonicalize(routine, m, n, k, operands, arrays,
+                                  compute, batch, key, shard)
+        decision = self._decide(call, st)
         t0 = time.perf_counter()
-        devices: Tuple[int, ...] = ()
-        plan = None
-        if (offload and shard is not None and self.n_devices > 1
-                and self.policy.shardable):
-            plan = shard(self.n_devices)
-        if not offload:
-            out = compute(*self._harmonize(arrays, st))
-            st.on_host += 1
-        elif plan is not None:
-            out, devices = self._sharded_call(st, plan)
-        else:
-            placed, budget_used = [], 0
-            ai = self._arith_intensity(routine, m, n, k, arrays, batch)
-            for (role, x, reads, written) in operands:
-                if isinstance(self.policy, CounterPolicy):
-                    p = self.policy.place_operand(
-                        self, x, reads_per_elem=reads, written=written,
-                        ai=ai, budget_used=budget_used)
-                else:
-                    p = self.policy.place_operand(self, x)
-                budget_used += p.moved_bytes
-                st.bytes_in += p.moved_bytes
-                st.cache_hits += int(p.cache_hit)
-                st.cache_misses += int(not p.cache_hit)
-                if p.cache_hit:
-                    self._count_reuse(x)
-                if p.moved_bytes or p.cache_hit:
-                    self.alias_trace_id(x, p.array)
-                placed.append(p.array)
-            out = compute(*self._harmonize(placed, st))
-            out_p = self.policy.place_output(self, out)
-            st.bytes_out += out_p.moved_bytes
-            out = out_p.array
-            st.offloaded += 1
-        if self.sync_mode:
+        self._stage_plan(call, decision)
+        out, devices = self._execute(call, decision, st)
+        if self.sync_mode or decision.timed:
+            # adaptive probes always block: path timing needs wall time
             out.block_until_ready()
         else:
             # retire finished results first so the window never pins
@@ -626,14 +703,174 @@ class OffloadRuntime:
             while pend and pend[0].is_ready():
                 pend.popleft()
             pend.append(out)
-        st.seconds += time.perf_counter() - t0
-        self._record_trace(routine, m, n, k, operands, out, batch, devices)
-        if self.debug >= 2:
-            where = "host" if not offload else (
-                f"shard[{len(devices)} tiles]" if devices else "offload")
-            print(f"[scilib] {routine} m={m} n={n} k={k} navg={nav:.0f} "
-                  f"{where}")
+        dt = time.perf_counter() - t0
+        self._record(call, decision, out, devices, dt, st)
         return out
+
+    # ------------------------------------------------------------------ #
+    # stage 1 — canonicalize: bundle the call, fingerprint the site       #
+    # ------------------------------------------------------------------ #
+    def _canonicalize(self, routine, m, n, k, operands, arrays, compute,
+                      batch, key, shard) -> CallContext:
+        call = CallContext(routine=routine, m=m, n=n, k=k, batch=batch,
+                           operands=operands, arrays=arrays,
+                           compute=compute, key=key, shard=shard)
+        if self.callsite_enabled:
+            call.site_id = cs.fingerprint(routine)
+            call.site = self.callsites.profile(call.site_id)
+        return call
+
+    # ------------------------------------------------------------------ #
+    # stage 2 — decide: ordered stages emit the DispatchDecision IR       #
+    # ------------------------------------------------------------------ #
+    def _decide(self, call: CallContext, st: RoutineStats) -> DispatchDecision:
+        decision = None
+        for stage in self.decision_stages:
+            decision = stage(call, st)
+            if decision is not None:
+                break
+        if decision.offload and not self.policy.offloads:
+            decision.offload = False
+            decision.why = "policy:host-only"
+        return decision
+
+    def _stage_adaptive(self, call: CallContext,
+                        st: RoutineStats) -> Optional[DispatchDecision]:
+        """Per-site adaptive mode (``SCILIB_ADAPTIVE=1``): probe the
+        first N calls at each site on both paths, then lock the faster
+        decision — the paper's warmup-then-patch behaviour."""
+        if not self.adaptive or call.site is None:
+            return None
+        site = call.site
+        if site.locked is not None:
+            # locked fast path: no threshold math, no N_avg derivation —
+            # the warmup already captured the site's size distribution
+            st.dispatch_hits += 1
+            return DispatchDecision(site.locked, n_avg=0.0,
+                                    why="adaptive:locked")
+        nav = (thr.n_avg(call.routine, call.m, call.n, call.k)
+               * (max(1, call.batch) ** (1.0 / 3.0)))
+        if site.probes_done >= self.adaptive_warmup:
+            locked = site.lock()
+            if self.debug >= 1:
+                print(f"[scilib] adaptive lock {site.site}: "
+                      f"{'offload' if locked else 'host'} "
+                      f"({site.locked_why})")
+            st.dispatch_hits += 1
+            return DispatchDecision(locked, n_avg=nav,
+                                    why="adaptive:locked")
+        st.dispatch_misses += 1
+        return DispatchDecision(site.probe_path(), n_avg=nav,
+                                why="adaptive:probe", timed=True)
+
+    def _stage_cached(self, call: CallContext,
+                      st: RoutineStats) -> Optional[DispatchDecision]:
+        """The memoized dispatch cache (fast path): one threshold
+        derivation per call shape, two dict lookups thereafter."""
+        if call.key is None or not self.dispatch_cache_enabled:
+            return None
+        dec = self._decisions.get(call.key)
+        if dec is None:
+            dec = thr.should_offload(call.routine, call.m, call.n, call.k,
+                                     threshold=self.threshold,
+                                     batch=call.batch)
+            if len(self._decisions) > _DECISION_CACHE_LIMIT:
+                self._decisions.clear()   # dynamic-shape churn guard
+            self._decisions[call.key] = dec
+            st.dispatch_misses += 1
+            return DispatchDecision(dec[0], n_avg=dec[1], why="threshold")
+        st.dispatch_hits += 1
+        return DispatchDecision(dec[0], n_avg=dec[1], why="cache")
+
+    def _stage_threshold(self, call: CallContext,
+                         st: RoutineStats) -> DispatchDecision:
+        """Terminal stage: derive the threshold rule per call (paper
+        §3.3); reached when the key is unhashable or caching is off."""
+        st.dispatch_misses += 1
+        offload, nav = thr.should_offload(call.routine, call.m, call.n,
+                                          call.k, threshold=self.threshold,
+                                          batch=call.batch)
+        return DispatchDecision(offload, n_avg=nav, why="threshold")
+
+    # ------------------------------------------------------------------ #
+    # stage 3 — plan: consult the multi-device tile planner               #
+    # ------------------------------------------------------------------ #
+    def _stage_plan(self, call: CallContext,
+                    decision: DispatchDecision) -> DispatchDecision:
+        if (decision.offload and call.shard is not None
+                and self.n_devices > 1 and self.policy.shardable):
+            decision.plan = call.shard(self.n_devices)
+        return decision
+
+    # ------------------------------------------------------------------ #
+    # stage 4 — execute: host, whole-call offload, or sharded tiles       #
+    # ------------------------------------------------------------------ #
+    def _execute(self, call: CallContext, decision: DispatchDecision,
+                 st: RoutineStats) -> Tuple[jax.Array, Tuple[int, ...]]:
+        if not decision.offload:
+            out = call.compute(*self._harmonize(call.arrays, st))
+            st.on_host += 1
+            return out, ()
+        if decision.plan is not None:
+            return self._sharded_call(st, decision.plan, site=call.site)
+        return self._offload_whole(call, st), ()
+
+    def _offload_whole(self, call: CallContext,
+                       st: RoutineStats) -> jax.Array:
+        """Single-device offload: the policy places every operand."""
+        site = call.site
+        placed, budget_used = [], 0
+        ai = self._arith_intensity(call.routine, call.m, call.n, call.k,
+                                   call.arrays, call.batch)
+        for (role, x, reads, written) in call.operands:
+            if isinstance(self.policy, CounterPolicy):
+                p = self.policy.place_operand(
+                    self, x, reads_per_elem=reads, written=written,
+                    ai=ai, budget_used=budget_used)
+            else:
+                p = self.policy.place_operand(self, x)
+            budget_used += p.moved_bytes
+            st.bytes_in += p.moved_bytes
+            st.cache_hits += int(p.cache_hit)
+            st.cache_misses += int(not p.cache_hit)
+            if site is not None:
+                site.lookups += 1
+                site.hits += int(p.cache_hit)
+            if p.cache_hit:
+                self._count_reuse(x)
+            if p.moved_bytes or p.cache_hit:
+                self.alias_trace_id(x, p.array)
+            placed.append(p.array)
+        out = call.compute(*self._harmonize(placed, st))
+        out_p = self.policy.place_output(self, out)
+        st.bytes_out += out_p.moved_bytes
+        st.offloaded += 1
+        return out_p.array
+
+    # ------------------------------------------------------------------ #
+    # stage 5 — record: statistics, site profile, trace                   #
+    # ------------------------------------------------------------------ #
+    def _record(self, call: CallContext, decision: DispatchDecision,
+                out: jax.Array, devices: Tuple[int, ...], dt: float,
+                st: RoutineStats) -> None:
+        st.seconds += dt
+        site = call.site
+        if site is not None:
+            if decision.timed:
+                site.observe_probe(decision.offload, dt)
+            site.observe(decision.n_avg,
+                         _flops_of(call.routine, call.m, call.n, call.k,
+                                   call.batch),
+                         dt, decision.offload)
+        self._record_trace(call.routine, call.m, call.n, call.k,
+                           call.operands, out, call.batch, devices,
+                           site_id=call.site_id, seconds=dt)
+        if self.debug >= 2:
+            where = "host" if not decision.offload else (
+                f"shard[{len(devices)} tiles]" if devices else "offload")
+            print(f"[scilib] {call.routine} m={call.m} n={call.n} "
+                  f"k={call.k} navg={decision.n_avg:.0f} {where} "
+                  f"({decision.why})")
 
     # ------------------------------------------------------------------ #
     def _harmonize(self, arrays, st) -> list:
@@ -666,19 +903,11 @@ class OffloadRuntime:
     @staticmethod
     def _arith_intensity(routine, m, n, k, arrays, batch) -> float:
         nbytes = sum(a.nbytes for a in arrays)
-        flops = {"gemm": 2.0 * m * n * k,
-                 "trsm": 1.0 * m * m * n,
-                 "trmm": 1.0 * m * m * n,
-                 "syrk": 1.0 * n * n * k,
-                 "herk": 1.0 * n * n * k,
-                 "symm": 2.0 * m * m * n,
-                 "hemm": 2.0 * m * m * n,
-                 "syr2k": 2.0 * n * n * k,
-                 "her2k": 2.0 * n * n * k}.get(routine.lstrip("sdcz"), 0.0)
-        return batch * flops / max(1, nbytes)
+        return _flops_of(routine, m, n, k, batch) / max(1, nbytes)
 
     def _record_trace(self, routine, m, n, k, operands, out, batch,
-                      devices=()) -> None:
+                      devices=(), site_id: str = "",
+                      seconds: float = 0.0) -> None:
         if self.trace is None:
             return
         ops = []
@@ -695,7 +924,8 @@ class OffloadRuntime:
         from repro.core.trace import BlasCall
         self.trace.calls.append(BlasCall(
             routine=routine, m=m, n=n, k=k, batch=batch,
-            operands=tuple(ops), devices=tuple(devices)))
+            operands=tuple(ops), devices=tuple(devices),
+            callsite_id=site_id, seconds=seconds))
 
 
 # --------------------------------------------------------------------- #
@@ -717,12 +947,22 @@ def install(policy: str = "dfu", threshold: Optional[float] = None,
 
 def uninstall() -> Optional[RuntimeStats]:
     """`.fini_array` analogue: drain in-flight work, deactivate, and
-    return final statistics."""
+    return final statistics.  With ``SCILIB_TRACE=/path.json`` set, the
+    recorded trace is dumped there — traces for the autotuner need no
+    code changes, mirroring the paper tool's no-recompile ethos."""
     global _ACTIVE
     rt, _ACTIVE = _ACTIVE, None
     if rt is None:
         return None
     rt.sync()
+    path = os.environ.get("SCILIB_TRACE", "")
+    if path and rt.trace is not None:
+        try:
+            rt.trace.dump(path)
+            if rt.debug >= 1:
+                print(f"[scilib] trace ({len(rt.trace)} calls) -> {path}")
+        except OSError as exc:       # never let stats die on a bad path
+            print(f"[scilib] SCILIB_TRACE dump to {path!r} failed: {exc}")
     return rt.stats
 
 

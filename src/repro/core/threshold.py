@@ -66,9 +66,17 @@ def threshold_from_env(default: float = DEFAULT_THRESHOLD) -> float:
         return default
 
 
+def base_routine(routine: str) -> str:
+    """Routine family without the precision prefix (``"dsyrk"`` ->
+    ``"syrk"``).  Not ``lstrip("sdcz")``: that also eats the base's own
+    leading ``s`` (``"dsyrk"`` -> ``"yrk"``) and broke the syrk/symm
+    branches below for every precision."""
+    return routine[1:] if routine[:1] in ("s", "d", "c", "z") else routine
+
+
 def n_avg(routine: str, m: int, n: int, k: int = 0) -> float:
     """Routine-dependent mean dimension (paper §3.3)."""
-    base = routine.lstrip("sdcz")
+    base = base_routine(routine)
     m, n, k = max(1, m), max(1, n), max(1, k)
     if base == "gemm":
         return (m * n * k) ** (1.0 / 3.0)
@@ -87,3 +95,26 @@ def should_offload(routine: str, m: int, n: int, k: int = 0, *,
     size enters through the cube root (equivalent total-work heuristic)."""
     nav = n_avg(routine, m, n, k) * (max(1, batch) ** (1.0 / 3.0))
     return nav > threshold, nav
+
+
+def threshold_grid(n_avgs, limit: int = 8) -> Tuple[float, ...]:
+    """Candidate thresholds for a workload's observed N_avg values.
+
+    The only thresholds worth trying are the ones that flip at least one
+    call's decision: midpoints between adjacent distinct N_avg values,
+    plus one below the smallest and one above the largest, plus the
+    paper's default.  Deduplicated, sorted, and capped at ``limit``
+    (evenly subsampled) so autotune grids stay small on ragged traces.
+    """
+    uniq = sorted({round(float(v), 3) for v in n_avgs if v > 0})
+    cands = {DEFAULT_THRESHOLD}
+    if uniq:
+        cands.add(max(1.0, uniq[0] * 0.5))
+        cands.add(uniq[-1] * 2.0)
+        for lo, hi in zip(uniq, uniq[1:]):
+            cands.add((lo + hi) / 2.0)
+    grid = sorted(cands)
+    if len(grid) > limit:
+        step = (len(grid) - 1) / (limit - 1)
+        grid = [grid[round(i * step)] for i in range(limit)]
+    return tuple(grid)

@@ -29,6 +29,13 @@ class BlasCall:
     ``devices`` records the multi-device tile schedule: one device-tier
     index per tile when the runtime sharded the call, empty for
     single-device execution (older traces load with the empty default).
+
+    ``callsite_id`` is the call-site fingerprint of
+    :mod:`repro.core.callsite` (``routine@file:function:lineno``) — the
+    per-site identity the paper's DBI patching keys on; ``seconds`` is
+    the runtime's measured per-call wall time (dispatch/submission time
+    in async mode, device wall time under ``SCILIB_SYNC=1``).  Both
+    default empty/zero so older traces load unchanged.
     """
 
     routine: str                     # e.g. "zgemm", "dtrsm"
@@ -39,6 +46,8 @@ class BlasCall:
     # each: (role, buffer_id, nbytes, reads_per_elem, written)
     batch: int = 1
     devices: Tuple[int, ...] = ()    # device tier per scheduled tile
+    callsite_id: str = ""            # per-site fingerprint (may be "")
+    seconds: float = 0.0             # measured per-call wall time
 
     # ------------------------------------------------------------------ #
     @property
@@ -104,7 +113,8 @@ class Trace:
         return bid
 
     def gemm(self, prec: str, m: int, n: int, k: int,
-             a: int, b: int, c: int, batch: int = 1) -> None:
+             a: int, b: int, c: int, batch: int = 1,
+             site: str = "") -> None:
         el = _ELEM[prec]
         self.calls.append(BlasCall(
             routine=f"{prec}gemm", m=m, n=n, k=k, batch=batch,
@@ -112,27 +122,27 @@ class Trace:
                 ("A", a, m * k * el, float(n), False),
                 ("B", b, k * n * el, float(m), False),
                 ("C", c, m * n * el, 1.0, True),
-            )))
+            ), callsite_id=site))
 
     def trsm(self, prec: str, m: int, n: int,
-             a: int, b: int, batch: int = 1) -> None:
+             a: int, b: int, batch: int = 1, site: str = "") -> None:
         el = _ELEM[prec]
         self.calls.append(BlasCall(
             routine=f"{prec}trsm", m=m, n=n, k=0, batch=batch,
             operands=(
                 ("A", a, m * m * el, float(n), False),
                 ("B", b, m * n * el, float(m), True),
-            )))
+            ), callsite_id=site))
 
     def syrk(self, prec: str, n: int, k: int,
-             a: int, c: int, batch: int = 1) -> None:
+             a: int, c: int, batch: int = 1, site: str = "") -> None:
         el = _ELEM[prec]
         self.calls.append(BlasCall(
             routine=f"{prec}syrk", m=n, n=n, k=k, batch=batch,
             operands=(
                 ("A", a, n * k * el, float(n), False),
                 ("C", c, n * n * el, 1.0, True),
-            )))
+            ), callsite_id=site))
 
     def panel(self, prec: str, m: int, nb: int, a: int) -> None:
         """Unblocked LU panel factorization (getf2) — host-only work."""

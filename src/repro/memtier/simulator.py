@@ -80,6 +80,15 @@ class PolicyReport:
     device_bytes_peak: int = 0
     # multi-device replay: H2D bytes landing on each device tier
     per_device_h2d: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # per-call-site time, keyed by BlasCall.callsite_id (traces recorded
+    # before call-site identity existed simply leave this empty)
+    per_site_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def moved_bytes(self) -> int:
+        """Total link traffic, both directions (the autotuner's second
+        objective after predicted time)."""
+        return self.bytes_host_to_dev + self.bytes_dev_to_host
 
     def row(self) -> Dict[str, float]:
         return {
@@ -391,6 +400,9 @@ class MemTierSimulator:
             key = call.routine
             self.report.per_routine_s[key] = (
                 self.report.per_routine_s.get(key, 0.0) + t)
+            if call.callsite_id:
+                self.report.per_site_s[call.callsite_id] = (
+                    self.report.per_site_s.get(call.callsite_id, 0.0) + t)
             self.report.device_bytes_peak = max(
                 self.report.device_bytes_peak, self.pt.device_bytes_used())
         reuse = self.pt.reuse_report()

@@ -1,0 +1,6 @@
+"""Operator-facing tools built on the runtime's traces and simulator.
+
+* :mod:`repro.tools.autotune` — trace-replay autotuner: grid-search the
+  ``SCILIB_*`` knobs against the memtier simulator and print recommended
+  settings (``python -m repro.tools.autotune trace.json``).
+"""

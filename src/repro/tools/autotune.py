@@ -1,0 +1,266 @@
+"""Trace-replay autotuner: tune ``SCILIB_*`` knobs from a recorded workload.
+
+The paper notes the optimal offload threshold is device- and
+workload-dependent (§3.3) — there is no constant that is right for both a
+reuse-heavy LSMS run and a movement-bound skinny-gemm stream.  This tool
+closes the loop without touching application code, mirroring the paper
+tool's no-recompile ethos:
+
+1. record a trace from any run (``SCILIB_TRACE=/path.json``, dumped
+   automatically at ``uninstall()``),
+2. replay it through the memtier N-device DFU simulator across a
+   threshold x policy x device-count grid,
+3. print the grid, the recommended ``SCILIB_*`` settings, and the
+   predicted time/moved-bytes deltas against the paper-default baseline.
+
+Command line::
+
+    python -m repro.tools.autotune trace.json
+    python -m repro.tools.autotune trace.json --spec tpu-v5e \
+        --policies dfu,memcopy --thresholds 300,500,1000 --devices 1,2,4
+
+The threshold grid defaults to :func:`repro.core.threshold.threshold_grid`
+over the trace's observed N_avg values — only thresholds that flip at
+least one call's decision are worth simulating.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import threshold as thr
+from repro.core.trace import Trace
+from repro.memtier.simulator import MemTierSimulator, PolicyReport
+from repro.memtier.spec import SPECS, HardwareSpec
+
+#: policies the grid sweeps by default; ``pinned`` is a capacity bracket,
+#: not a deployable setting, and ``cpu`` is implied by a huge threshold.
+DEFAULT_POLICIES = ("dfu", "memcopy", "counter")
+DEFAULT_DEVICE_COUNTS = (1, 2, 4)
+
+#: the comparison point: the paper's conservative default configuration.
+BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1)
+
+
+def _fmt_threshold(t: float) -> str:
+    return str(int(t)) if float(t).is_integer() else f"{t:.1f}"
+
+
+@dataclasses.dataclass
+class GridPoint:
+    """One simulated (policy, threshold, n_devices) configuration."""
+
+    policy: str
+    threshold: float
+    n_devices: int
+    report: PolicyReport
+
+    @property
+    def total_s(self) -> float:
+        return self.report.total_s
+
+    @property
+    def moved_bytes(self) -> int:
+        return self.report.moved_bytes
+
+    def env(self) -> Dict[str, str]:
+        """The ``SCILIB_*`` settings that realize this point."""
+        settings = {"SCILIB_POLICY": self.policy,
+                    "SCILIB_THRESHOLD": _fmt_threshold(self.threshold)}
+        if self.n_devices > 1:
+            settings["SCILIB_DEVICES"] = str(self.n_devices)
+        return settings
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    """Everything :func:`autotune` learned from one trace."""
+
+    points: List[GridPoint]
+    baseline: GridPoint
+    best: GridPoint
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline.total_s / max(1e-12, self.best.total_s)
+
+    @property
+    def moved_delta(self) -> int:
+        """Moved-byte change of the recommendation (negative = less)."""
+        return self.best.moved_bytes - self.baseline.moved_bytes
+
+
+def _simulate(trace: Trace, spec: HardwareSpec, policy: str,
+              threshold: float, n_devices: int) -> GridPoint:
+    sim = MemTierSimulator(spec, policy=policy, threshold=threshold,
+                           n_devices=n_devices)
+    return GridPoint(policy, threshold, n_devices, sim.run(trace))
+
+
+def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
+             policies: Sequence[str] = DEFAULT_POLICIES,
+             thresholds: Optional[Sequence[float]] = None,
+             device_counts: Sequence[int] = DEFAULT_DEVICE_COUNTS,
+             ) -> AutotuneResult:
+    """Sweep the grid and pick the fastest point (moved bytes break ties).
+
+    Multi-device replay only exists for the ``dfu`` policy (the runtime's
+    tile scheduler never shards the others), so non-dfu policies are
+    swept at one device only.
+    """
+    if thresholds is None:
+        thresholds = thr.threshold_grid(c.n_avg for c in trace)
+    points: List[GridPoint] = []
+    for policy in policies:
+        for t in thresholds:
+            for nd in device_counts:
+                if nd > 1 and policy != "dfu":
+                    continue
+                points.append(_simulate(trace, spec, policy, float(t), nd))
+    baseline = next((p for p in points
+                     if (p.policy, p.threshold, p.n_devices) == BASELINE),
+                    None)
+    if baseline is None:
+        baseline = _simulate(trace, spec, BASELINE[0], BASELINE[1],
+                             BASELINE[2])
+        points.append(baseline)
+    # fastest first; among points within 2% of it, least movement wins —
+    # a config that moves gigabytes for a sub-noise predicted gain is
+    # not a recommendation
+    fastest = min(p.total_s for p in points)
+    near = [p for p in points if p.total_s <= fastest * 1.02]
+    best = min(near, key=lambda p: (p.moved_bytes, p.total_s))
+    return AutotuneResult(points=points, baseline=baseline, best=best)
+
+
+# --------------------------------------------------------------------- #
+# presentation                                                           #
+# --------------------------------------------------------------------- #
+def _grid_row(p: GridPoint, mark: str = "") -> str:
+    return (f"{p.policy:<9}{_fmt_threshold(p.threshold):>10}"
+            f"{p.n_devices:>6}{p.total_s:>10.4f}"
+            f"{p.moved_bytes / 1e9:>10.3f}"
+            f"{p.report.offloaded_calls:>9}"
+            f"{p.report.host_calls:>6}{mark}")
+
+
+def format_grid(result: AutotuneResult, top: int = 12) -> str:
+    lines = [f"{'policy':<9}{'threshold':>10}{'ndev':>6}{'pred_s':>10}"
+             f"{'moved_GB':>10}{'offload':>9}{'host':>6}"]
+    ranked = sorted(result.points,
+                    key=lambda p: (p.total_s, p.moved_bytes))[:top]
+    for p in ranked:
+        mark = " <- baseline" if p is result.baseline else (
+            " <- best" if p is result.best else "")
+        lines.append(_grid_row(p, mark))
+    # the two rows the operator must be able to cross-check are always
+    # shown, even when they rank below the top-N cut
+    for p, mark in ((result.best, " <- best"),
+                    (result.baseline, " <- baseline")):
+        if p not in ranked:
+            lines.append(_grid_row(p, mark))
+            ranked.append(p)
+    return "\n".join(lines)
+
+
+def format_sites(trace: Trace, result: AutotuneResult,
+                 top: int = 6) -> str:
+    """Per-site baseline vs recommended predicted seconds (needs a trace
+    recorded after call-site identity existed; silent otherwise)."""
+    flops: Dict[str, float] = {}
+    calls: Dict[str, int] = {}
+    for c in trace:
+        if not c.callsite_id:
+            continue
+        flops[c.callsite_id] = flops.get(c.callsite_id, 0.0) + c.flops
+        calls[c.callsite_id] = calls.get(c.callsite_id, 0) + 1
+    if not flops:
+        return ""
+    base_s = result.baseline.report.per_site_s
+    best_s = result.best.report.per_site_s
+    lines = ["call sites (predicted seconds, baseline -> recommended)",
+             f"{'site':<44}{'calls':>7}{'GFLOP':>9}{'base_s':>9}"
+             f"{'best_s':>9}"]
+    for site in sorted(flops, key=lambda s: -flops[s])[:top]:
+        label = site if len(site) <= 43 else site[:40] + "..."
+        lines.append(f"{label:<44}{calls[site]:>7}"
+                     f"{flops[site] / 1e9:>9.2f}"
+                     f"{base_s.get(site, 0.0):>9.4f}"
+                     f"{best_s.get(site, 0.0):>9.4f}")
+    return "\n".join(lines)
+
+
+def format_recommendation(result: AutotuneResult) -> str:
+    env = " ".join(f"{k}={v}" for k, v in result.best.env().items())
+    if result.baseline.moved_bytes > 0:
+        delta = (f"({100.0 * result.moved_delta / result.baseline.moved_bytes:+.0f}%)")
+    else:
+        delta = f"({result.moved_delta / 1e9:+.3f} GB)"
+    lines = [
+        f"baseline  (dfu @ {_fmt_threshold(result.baseline.threshold)}, "
+        f"1 device): {result.baseline.total_s:.4f} s predicted, "
+        f"{result.baseline.moved_bytes / 1e9:.3f} GB moved",
+        f"recommended: {env}",
+        f"  predicted {result.best.total_s:.4f} s "
+        f"({result.speedup:.2f}x vs baseline), "
+        f"{result.best.moved_bytes / 1e9:.3f} GB moved {delta}",
+    ]
+    if result.best is result.baseline:
+        lines.append("  the default configuration is already optimal "
+                     "for this workload")
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------------- #
+# CLI                                                                    #
+# --------------------------------------------------------------------- #
+def _parse_floats(raw: str) -> Tuple[float, ...]:
+    return tuple(float(v) for v in raw.split(",") if v)
+
+
+def _parse_ints(raw: str) -> Tuple[int, ...]:
+    return tuple(int(v) for v in raw.split(",") if v)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tools.autotune",
+        description="Replay a recorded BLAS trace across a threshold x "
+                    "policy x device grid and recommend SCILIB_* settings.")
+    ap.add_argument("trace", help="trace JSON (SCILIB_TRACE=... dump)")
+    ap.add_argument("--spec", default="gh200", choices=sorted(SPECS),
+                    help="hardware spec to simulate (default: gh200)")
+    ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES),
+                    help="comma list of policies to sweep")
+    ap.add_argument("--thresholds", default="",
+                    help="comma list of thresholds (default: derived "
+                         "from the trace's N_avg distribution)")
+    ap.add_argument("--devices", default=",".join(
+        str(d) for d in DEFAULT_DEVICE_COUNTS),
+        help="comma list of device counts (dfu only beyond 1)")
+    ap.add_argument("--top", type=int, default=12,
+                    help="grid rows to print")
+    args = ap.parse_args(argv)
+
+    trace = Trace.load(args.trace)
+    thresholds = _parse_floats(args.thresholds) or None
+    result = autotune(trace, spec=SPECS[args.spec],
+                      policies=tuple(args.policies.split(",")),
+                      thresholds=thresholds,
+                      device_counts=_parse_ints(args.devices))
+    n_sites = len({c.callsite_id for c in trace if c.callsite_id})
+    print(f"autotune: {len(result.points)}-point grid, spec={args.spec}, "
+          f"{len(trace)} calls, {n_sites} sites, "
+          f"{trace.total_flops / 1e9:.2f} GFLOP")
+    print(format_grid(result, top=args.top))
+    sites = format_sites(trace, result)
+    if sites:
+        print(sites)
+    print(format_recommendation(result))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

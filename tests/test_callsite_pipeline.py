@@ -1,0 +1,350 @@
+"""Per-call-site dispatch pipeline: fingerprints, adaptive lock-in,
+trace round-trip with the new fields, tensordot interception, the
+SCILIB_TRACE dump knob, and the trace-replay autotuner."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import blas, callsite
+from repro.core import runtime as rtm
+from repro.core import threshold as thr
+from repro.core.policy import host_array
+from repro.core.trace import BlasCall, Trace
+
+RNG = np.random.default_rng(11)
+
+MINI_TRACE = os.path.join(os.path.dirname(__file__), "data",
+                          "mini_trace.json")
+
+
+def _f32(shape):
+    return RNG.standard_normal(shape).astype("float32")
+
+
+def _gemm_site_a(a, b):
+    return blas.gemm(a, b)
+
+
+def _gemm_site_b(a, b):
+    return blas.gemm(a, b)
+
+
+# --------------------------------------------------------------------- #
+# call-site fingerprints                                                 #
+# --------------------------------------------------------------------- #
+def test_fingerprint_distinguishes_call_sites():
+    with core.offload("dfu", threshold=100) as rt:
+        a = host_array(_f32((64, 64)))
+        for _ in range(3):
+            _gemm_site_a(a, a)
+        _gemm_site_b(a, a)
+    sites = {p.site: p for p in rt.callsites}
+    assert len(sites) == 2
+    (sa,) = [p for s, p in sites.items() if "_gemm_site_a" in s]
+    (sb,) = [p for s, p in sites.items() if "_gemm_site_b" in s]
+    assert sa.calls == 3 and sb.calls == 1
+    # entry point (routine) prefixes the id; machinery frames are skipped
+    assert sa.site.startswith("sgemm@")
+    assert "blas.py" not in sa.site and "runtime.py" not in sa.site
+
+
+def test_site_profile_distribution_and_hits():
+    with core.offload("dfu", threshold=100) as rt:
+        a = host_array(_f32((256, 256)))
+        for _ in range(4):
+            _gemm_site_a(a, a)       # DFU: first call moves, rest hit
+    (prof,) = [p for p in rt.callsites if "_gemm_site_a" in p.site]
+    assert prof.calls == 4
+    assert prof.offloaded == 4
+    assert prof.n_avg_min == pytest.approx(256.0)
+    assert prof.n_avg_max == pytest.approx(256.0)
+    assert prof.lookups == 8          # 2 operands x 4 calls
+    assert prof.hits == 7             # all but the first A(=B) placement
+    assert 0.8 < prof.hit_rate <= 1.0
+    assert prof.flops == pytest.approx(4 * 2.0 * 256 ** 3)
+
+
+def test_report_contains_callsite_table():
+    with core.offload("dfu", threshold=100) as rt:
+        a = host_array(_f32((128, 128)))
+        _gemm_site_a(a, a)
+    rep = rt.stats.report()
+    assert "call sites" in rep
+    # long ids truncate in the table; the file prefix must survive
+    assert "sgemm@test_callsite_pipeline.py" in rep
+
+
+def test_callsite_disable_env(monkeypatch):
+    monkeypatch.setenv("SCILIB_CALLSITE", "0")
+    with core.offload("dfu", threshold=100) as rt:
+        a = host_array(_f32((128, 128)))
+        _gemm_site_a(a, a)
+    assert len(rt.callsites) == 0
+    assert rt.trace.calls[-1].callsite_id == ""
+
+
+# --------------------------------------------------------------------- #
+# pipeline equivalence with SCILIB_ADAPTIVE=0 (the default)              #
+# --------------------------------------------------------------------- #
+def test_pipeline_decisions_match_threshold_rule():
+    """The staged pipeline must reproduce the flat dispatch exactly:
+    same decisions, same dispatch counters."""
+    with core.offload("dfu", threshold=200) as rt:
+        small = host_array(_f32((64, 64)))
+        big = host_array(_f32((300, 300)))
+        for _ in range(3):
+            _gemm_site_a(small, small)     # n_avg 64  < 200 -> host
+        for _ in range(3):
+            _gemm_site_b(big, big)         # n_avg 300 > 200 -> offload
+    st = rt.stats.per_routine["sgemm"]
+    assert st.calls == 6
+    assert st.on_host == 3 and st.offloaded == 3
+    assert st.dispatch_misses == 2         # one derivation per shape
+    assert st.dispatch_hits == 4
+
+
+# --------------------------------------------------------------------- #
+# adaptive per-site mode                                                 #
+# --------------------------------------------------------------------- #
+def test_adaptive_probe_schedule_deterministic(monkeypatch):
+    """Warmup alternates host/offload deterministically and locks after
+    exactly SCILIB_ADAPTIVE_WARMUP probes — run twice, same schedule."""
+    monkeypatch.setenv("SCILIB_ADAPTIVE", "1")
+    monkeypatch.setenv("SCILIB_ADAPTIVE_WARMUP", "4")
+    monkeypatch.setenv("SCILIB_SYNC", "1")
+    counts = []
+    for _ in range(2):
+        with core.offload("dfu", threshold=100) as rt:
+            a = host_array(_f32((64, 64)))
+            for _ in range(4):
+                _gemm_site_a(a, a)
+            (prof,) = list(rt.callsites)
+            counts.append((prof.host_timed, prof.device_timed,
+                           prof.locked))
+            st = rt.stats.per_routine["sgemm"]
+            assert (st.on_host, st.offloaded) == (2, 2)
+            assert st.dispatch_misses == 4     # every probe derives
+    assert counts[0][:2] == counts[1][:2] == (2, 2)
+    assert counts[0][2] is None                # not locked mid-warmup
+
+
+def test_adaptive_locks_faster_path_and_stays(monkeypatch):
+    monkeypatch.setenv("SCILIB_ADAPTIVE", "1")
+    monkeypatch.setenv("SCILIB_ADAPTIVE_WARMUP", "2")
+    monkeypatch.setenv("SCILIB_SYNC", "1")
+    with core.offload("dfu", threshold=100) as rt:
+        a = host_array(_f32((64, 64)))
+        _gemm_site_a(a, a)                     # probe host
+        _gemm_site_a(a, a)                     # probe offload
+        (prof,) = list(rt.callsites)
+        # force the measurement so the lock decision is deterministic
+        prof.host_best = 1e-6
+        prof.device_best = 1e-3
+        for _ in range(5):
+            _gemm_site_a(a, a)                 # locks host on first call
+        assert prof.locked is False
+        assert "device" in prof.locked_why
+        st = rt.stats.per_routine["sgemm"]
+        # 1 host probe + 5 locked host calls; 1 offload probe
+        assert st.on_host == 6 and st.offloaded == 1
+        assert st.dispatch_hits == 5           # locked calls are hits
+        assert prof.decision_label() == "host*"
+
+
+def test_adaptive_lock_rule_unit():
+    p = callsite.CallSiteProfile("x")
+    p.observe_probe(False, 2e-3)
+    p.observe_probe(True, 1e-3)
+    assert p.lock() is True                    # device min wins
+    q = callsite.CallSiteProfile("y")
+    q.observe_probe(False, 1e-3)
+    q.observe_probe(True, 2e-3)
+    assert q.lock() is False
+    r = callsite.CallSiteProfile("z")          # no probes: fallback
+    assert r.lock(fallback=True) is True
+
+
+def test_adaptive_off_is_default():
+    with core.offload("dfu", threshold=100) as rt:
+        assert rt.adaptive is False
+
+
+# --------------------------------------------------------------------- #
+# trace round-trip with the new fields                                   #
+# --------------------------------------------------------------------- #
+def test_trace_roundtrip_callsite_timing_devices(tmp_path):
+    t = Trace()
+    a = t.new_buffer(1024, "A")
+    b = t.new_buffer(1024, "B")
+    c = t.new_buffer(1024, "C")
+    t.gemm("s", 16, 16, 16, a, b, c, site="sgemm@app.py:f:1")
+    t.calls.append(BlasCall(
+        routine="dgemm", m=512, n=512, k=512,
+        operands=(("A", a, 512 * 512 * 8, 512.0, False),
+                  ("C", c, 512 * 512 * 8, 1.0, True)),
+        devices=(0, 1, 1, 0), callsite_id="dgemm@app.py:g:2",
+        seconds=0.125))
+    path = tmp_path / "trace.json"
+    t.dump(str(path))
+    back = Trace.load(str(path))
+    assert len(back) == 2
+    assert back.calls[0].callsite_id == "sgemm@app.py:f:1"
+    assert back.calls[0].seconds == 0.0
+    assert back.calls[1].devices == (0, 1, 1, 0)
+    assert back.calls[1].callsite_id == "dgemm@app.py:g:2"
+    assert back.calls[1].seconds == 0.125
+    assert back.total_flops == pytest.approx(t.total_flops)
+
+
+def test_trace_load_pre_callsite_format(tmp_path):
+    """Traces dumped before the callsite/timing/devices fields existed
+    must still load (defaults fill in)."""
+    raw = {"buffers": {"1": [64, "A"]},
+           "calls": [{"routine": "sgemm", "m": 8, "n": 8, "k": 8,
+                      "batch": 1,
+                      "operands": [["A", 1, 256, 8.0, False]]}]}
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps(raw))
+    t = Trace.load(str(path))
+    assert t.calls[0].devices == ()
+    assert t.calls[0].callsite_id == ""
+    assert t.calls[0].seconds == 0.0
+
+
+def test_runtime_trace_records_site_and_seconds():
+    with core.offload("dfu", threshold=100) as rt:
+        a = host_array(_f32((128, 128)))
+        _gemm_site_a(a, a)
+    call = rt.trace.calls[-1]
+    assert "_gemm_site_a" in call.callsite_id
+    assert call.seconds > 0.0
+
+
+# --------------------------------------------------------------------- #
+# SCILIB_TRACE auto-dump                                                 #
+# --------------------------------------------------------------------- #
+def test_scilib_trace_dump_at_uninstall(tmp_path, monkeypatch):
+    path = tmp_path / "auto.json"
+    monkeypatch.setenv("SCILIB_TRACE", str(path))
+    core.install("dfu", threshold=100)
+    a = host_array(_f32((128, 128)))
+    jnp.matmul(a, a)
+    core.uninstall()
+    assert path.exists()
+    back = Trace.load(str(path))
+    assert len(back) == 1
+    assert back.calls[0].routine == "sgemm"
+    assert back.calls[0].callsite_id  # fingerprint survived the dump
+
+
+# --------------------------------------------------------------------- #
+# tensordot interception                                                 #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("axes", [1, (1, 0), ([1], [0]), (0, 0),
+                                  (1, 1), (0, 1), ((-1,), (0,))])
+def test_tensordot_intercepted(axes):
+    a = jnp.asarray(_f32((48, 48)))
+    b = jnp.asarray(_f32((48, 48)))
+    with core.offload("dfu", threshold=10) as rt:
+        out = jnp.tensordot(a, b, axes=axes)
+        st = rt.stats.per_routine["sgemm"]
+        assert st.calls == 1
+    want = np.tensordot(np.asarray(a), np.asarray(b), axes=axes)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_tensordot_non_gemm_falls_through():
+    a = jnp.asarray(_f32((8, 8)))
+    t3 = jnp.asarray(_f32((4, 8, 8)))
+    with core.offload("dfu", threshold=10) as rt:
+        jnp.tensordot(a, a, axes=2)            # full contraction: scalar
+        jnp.tensordot(t3, a, axes=(2, 0))      # rank-3 operand
+        assert "sgemm" not in rt.stats.per_routine
+        assert rt.stats.uninstrumented_calls == 2
+
+
+def test_tensordot_flags_unit():
+    assert blas.tensordot_flags(1) == ("N", "N")
+    assert blas.tensordot_flags((1, 0)) == ("N", "N")
+    assert blas.tensordot_flags((0, 0)) == ("T", "N")
+    assert blas.tensordot_flags((1, 1)) == ("N", "T")
+    assert blas.tensordot_flags((0, 1)) == ("T", "T")
+    assert blas.tensordot_flags(((-1,), (-2,))) == ("N", "N")
+    assert blas.tensordot_flags(2) is None
+    assert blas.tensordot_flags(([0, 1], [0, 1])) is None
+    assert blas.tensordot_flags((3, 0)) is None
+    # numpy integer axes (common when axes come from computed indices)
+    assert blas.tensordot_flags(
+        (np.int64(1), np.int64(0))) == ("N", "N")
+    assert blas.tensordot_flags((np.int32(0), [np.int64(1)])) == ("T", "T")
+    assert blas.tensordot_flags(("x", 0)) is None
+
+
+def test_site_flops_match_trace_model():
+    """Per-site flops must agree with BlasCall.flops — including the
+    syrk family (lstrip('sdcz') used to mangle 'dsyrk' to 'yrk') and
+    the 4x complex multiplier."""
+    with core.offload("dfu", threshold=10) as rt:
+        a = host_array(_f32((96, 64)))
+        blas.syrk(a)
+        z = host_array((_f32((64, 64)) + 1j * _f32((64, 64)))
+                       .astype("complex64"))
+        blas.gemm(z, z)
+    profs = {p.site: p for p in rt.callsites}
+    (syrk_p,) = [p for s, p in profs.items() if s.startswith("ssyrk@")]
+    assert syrk_p.flops == pytest.approx(1.0 * 96 * 96 * 64)
+    (zg_p,) = [p for s, p in profs.items() if s.startswith("cgemm@")]
+    assert zg_p.flops == pytest.approx(4.0 * 2.0 * 64 ** 3)
+    for call in rt.trace.calls:
+        site = profs[call.callsite_id]
+        assert site.flops == pytest.approx(call.flops)
+
+
+def test_tensordot_uninstall_restores():
+    orig = jnp.tensordot
+    with core.offload("dfu", threshold=10):
+        assert jnp.tensordot is not orig
+    assert jnp.tensordot is orig
+
+
+# --------------------------------------------------------------------- #
+# threshold grid + autotuner                                             #
+# --------------------------------------------------------------------- #
+def test_threshold_grid_flips_decisions():
+    grid = thr.threshold_grid([128.0, 621.4, 1000.0])
+    assert thr.DEFAULT_THRESHOLD in grid
+    assert any(621.4 < t < 1000.0 for t in grid)   # the useful midpoint
+    assert grid == tuple(sorted(grid))
+    assert len(thr.threshold_grid(range(1, 100), limit=8)) <= 8
+    assert thr.threshold_grid([]) == (thr.DEFAULT_THRESHOLD,)
+
+
+def test_autotune_mini_trace_recommends_fewer_moved_bytes():
+    """The bundled workload's acceptance check: the recommended
+    threshold beats the paper-default baseline on predicted time AND
+    moved bytes (the skinny-gemm site stops offloading)."""
+    from repro.tools import autotune as at
+    trace = Trace.load(MINI_TRACE)
+    result = at.autotune(trace)
+    assert result.best.threshold > thr.DEFAULT_THRESHOLD
+    assert result.speedup > 1.5
+    assert result.best.moved_bytes < result.baseline.moved_bytes
+    env = result.best.env()
+    assert set(env) >= {"SCILIB_POLICY", "SCILIB_THRESHOLD"}
+    # per-site accounting flowed through the simulator
+    assert "dgemm@parsec_dft.py:update_rho:88" in \
+        result.baseline.report.per_site_s
+
+
+def test_autotune_cli_runs(capsys):
+    from repro.tools.autotune import main
+    assert main([MINI_TRACE, "--devices", "1,2"]) == 0
+    out = capsys.readouterr().out
+    assert "recommended: SCILIB_POLICY=" in out
+    assert "<- baseline" in out
+    assert "call sites" in out
