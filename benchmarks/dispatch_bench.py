@@ -16,6 +16,11 @@ cached) runtime, on the two workloads the tentpole targets.
 * ``adaptive`` — the small-gemm loop under ``SCILIB_ADAPTIVE=1``: the
   per-site warmup probes both paths, locks, and steady state should
   approach the fast path (the lock costs two dict hops per call).
+* ``evict`` — eviction pressure: a round-robin working set sized at
+  2x ``SCILIB_DEVICE_BYTES``, run once per eviction policy
+  (``SCILIB_EVICT`` in lru/lfu/refetch).  Reports calls/sec plus the
+  refetched GB the cap cost — how each policy's victim choice trades
+  throughput against link traffic under constant pressure.
 
 Modes are selected with the runtime's own knobs so the comparison runs
 the *same* code path the library ships:
@@ -48,6 +53,15 @@ CHAIN_N = 256
 CHAIN_CALLS = 20 if _QUICK else 100
 SHARD_N = 512
 SHARD_CALLS = 6 if _QUICK else 30
+#: eviction-pressure working set: a hot set of small matrices reused
+#: every phase + a cold set of big matrices streamed once per phase.
+#: Uniform sizes/frequencies make every policy degenerate to LRU order;
+#: this mix makes recency (lru), frequency (lfu) and refetch cost
+#: (refetch) rank victims differently, which is the comparison's point.
+EVICT_HOT_N, EVICT_HOT = 160, 4
+EVICT_COLD_N, EVICT_COLD = 320, 6
+EVICT_PHASES = 2 if _QUICK else 8
+EVICT_CALLS = EVICT_PHASES * (3 * EVICT_HOT + EVICT_COLD)
 REPS = 1 if _QUICK else 3
 
 
@@ -153,6 +167,42 @@ def _bench_shardscale(n_dev: int) -> Tuple[float, float, int, int]:
         os.environ.pop("SCILIB_DEVICE_BYTES", None)
 
 
+def _bench_eviction(evict_policy: str) -> Tuple[float, int, int]:
+    """Round-robin gemms over a working set 2x SCILIB_DEVICE_BYTES:
+    constant cap pressure, every policy choosing different victims.
+    Returns (calls/sec, evictions, refetched bytes) summed over reps."""
+    rtm = _install("fast")
+    working = (EVICT_HOT * EVICT_HOT_N ** 2
+               + EVICT_COLD * EVICT_COLD_N ** 2) * 4
+    os.environ["SCILIB_DEVICE_BYTES"] = str(working // 2)
+    os.environ["SCILIB_EVICT"] = evict_policy
+    from repro.core import blas
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(5)
+    rt = rtm.install("dfu", threshold=100, record_trace=False)
+    try:
+        hot = [host_array(rng.standard_normal((EVICT_HOT_N, EVICT_HOT_N))
+                          .astype("float32")) for _ in range(EVICT_HOT)]
+        cold = [host_array(rng.standard_normal(
+            (EVICT_COLD_N, EVICT_COLD_N)).astype("float32"))
+            for _ in range(EVICT_COLD)]
+
+        def loop():
+            for _ in range(EVICT_PHASES):
+                for _ in range(3):          # hot phase: reuse to exploit
+                    for h in hot:
+                        blas.gemm(h, h)
+                for c in cold:              # cold scan: streams through
+                    blas.gemm(c, c)
+
+        cps = _sweep(loop, rt, EVICT_CALLS)
+        return cps, rt.stats.evictions, rt.stats.refetched_bytes
+    finally:
+        rtm.uninstall()
+        os.environ.pop("SCILIB_DEVICE_BYTES", None)
+        os.environ.pop("SCILIB_EVICT", None)
+
+
 def _record_chain_trace(path: str) -> None:
     """Run the dfuchain workload with trace recording on and dump the
     trace for the autotuner walkthrough (docs/PERF.md)."""
@@ -179,12 +229,14 @@ def bench() -> List[Row]:
     saved = {k: os.environ.get(k)
              for k in ("SCILIB_SYNC", "SCILIB_DISPATCH_CACHE",
                        "SCILIB_DEVICES", "SCILIB_DEVICE_BYTES",
-                       "SCILIB_ADAPTIVE")}
+                       "SCILIB_ADAPTIVE", "SCILIB_EVICT")}
     try:
         small = {m: _bench_smallgemm(m)
                  for m in ("seed", "fast", "adaptive")}
         chain = {m: _bench_dfuchain(m) for m in ("seed", "fast")}
         shard = {n: _bench_shardscale(n) for n in (1, 2, 4)}
+        evict = {p: _bench_eviction(p)
+                 for p in ("lru", "lfu", "refetch")}
     finally:
         for k, v in saved.items():
             if v is None:
@@ -219,6 +271,14 @@ def bench() -> List[Row]:
         rows.append((f"dispatch.shard.gemm512.d{n}_moved_mb",
                      round(moved / 1e6, 1),
                      "block bytes moved to device tiers (summed)"))
+    for pol, (cps, evs, refetched) in evict.items():
+        rows.append((f"dispatch.evict.mixed.{pol}_cps", round(cps, 0),
+                     f"working set 2x cap, SCILIB_EVICT={pol}"))
+        rows.append((f"dispatch.evict.mixed.{pol}_evictions", evs,
+                     "cap-pressure evictions (all reps)"))
+        rows.append((f"dispatch.evict.mixed.{pol}_refetched_gb",
+                     round(refetched / 1e9, 3),
+                     "GB re-moved for evicted-then-reused buffers"))
     return rows
 
 

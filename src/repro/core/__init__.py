@@ -15,13 +15,19 @@ Public surface:
   fallback on single-kind backends).
 * :mod:`repro.core.callsite` — per-call-site fingerprints and profiles
   (the paper's patched call sites; drives ``SCILIB_ADAPTIVE=1``).
+* :mod:`repro.core.residency` — the residency engine: the one byte-
+  capped, policy-evicting, pinnable block store behind the runtime's
+  registries and the memtier simulator (``SCILIB_EVICT``,
+  ``SCILIB_PIN``; :func:`pin`/:func:`unpin` pin live buffers).
 """
-from repro.core import blas, callsite, lapack, memspace
+from repro.core import blas, callsite, lapack, memspace, residency
 from repro.core.intercept import install, offload, uninstall
 from repro.core.policy import host_array
-from repro.core.runtime import OffloadRuntime, active
+from repro.core.residency import ResidencyStore
+from repro.core.runtime import OffloadRuntime, active, pin, unpin
 from repro.core.trace import BlasCall, Trace
 
-__all__ = ["blas", "callsite", "lapack", "memspace", "install",
-           "offload", "uninstall", "OffloadRuntime", "active",
-           "BlasCall", "Trace", "host_array"]
+__all__ = ["blas", "callsite", "lapack", "memspace", "residency",
+           "install", "offload", "uninstall", "OffloadRuntime", "active",
+           "BlasCall", "Trace", "host_array", "ResidencyStore",
+           "pin", "unpin"]

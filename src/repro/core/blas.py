@@ -270,7 +270,9 @@ def _syr2k_kernel(a, b, c, alpha, beta, *, uplo, trans, conj, has_c):
     n = upd.shape[-1]
     mask = _tri_mask(n, uplo)
     if has_c:
-        tri = jnp.where(mask, upd + beta.astype(acc.dtype) * c, c)
+        # upd.dtype, not acc.dtype: the her2k branch above never binds
+        # acc, and referencing it crashed every her2k call with a C
+        tri = jnp.where(mask, upd + beta.astype(upd.dtype) * c, c)
     else:
         tri = jnp.where(mask, upd, jnp.zeros_like(upd))
     return tri.astype(a.dtype)
@@ -287,6 +289,33 @@ def _syrk_block_kernel(ai, aj, c, alpha, beta, *, trans, conj, has_c):
         jt = jnp.conj(jt)
     acc = kops.matmul(opi, jt)
     out = alpha.astype(acc.dtype) * acc
+    if has_c:
+        out = out + beta.astype(acc.dtype) * c
+    return out.astype(ai.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("trans", "conj", "has_c"))
+def _syr2k_block_kernel(ai, bi, aj, bj, c, alpha, beta, *, trans, conj,
+                        has_c):
+    """Off-diagonal block of a tiled syr2k/her2k — the two-term rank-2k
+    analogue of :func:`_syrk_block_kernel`:
+
+    C[i,j] := alpha op(A)_i op(B)_j^T + alpha op(B)_i op(A)_j^T + beta C
+    (her2k conjugate-transposes and uses conj(alpha) on the second term).
+    """
+    from repro.kernels import ops as kops
+    opai, opbi = _op(ai, trans), _op(bi, trans)
+    bjt = jnp.swapaxes(_op(bj, trans), -1, -2)
+    ajt = jnp.swapaxes(_op(aj, trans), -1, -2)
+    if conj:
+        bjt, ajt = jnp.conj(bjt), jnp.conj(ajt)
+        al = alpha.astype(opai.dtype)
+        acc = (al * kops.matmul(opai, bjt)
+               + jnp.conj(al) * kops.matmul(opbi, ajt))
+    else:
+        acc = kops.matmul(opai, bjt) + kops.matmul(opbi, ajt)
+        acc = alpha.astype(acc.dtype) * acc
+    out = acc
     if has_c:
         out = out + beta.astype(acc.dtype) * c
     return out.astype(ai.dtype)
@@ -320,7 +349,8 @@ def _trsm_kernel(a, b, alpha, *, side, uplo, trans, diag):
 # output 2-D; symm/trmm/trsm split the rectangular panel along its free    #
 # dimension (the triangle replicates); syrk/herk tile the stored triangle  #
 # of C by block, diagonal blocks through the syrk kernel, off-diagonal     #
-# through a gemm-shaped block kernel.  syr2k/her2k stay single-device.     #
+# through a gemm-shaped block kernel; syr2k/her2k ride the same triangle   #
+# grid with a two-term block kernel (the last level-3 gap closed).         #
 # Builders return None when the matrix is too small to split               #
 # (``SCILIB_TILE_MIN``), which falls back to the single-device path.       #
 # ----------------------------------------------------------------------- #
@@ -517,6 +547,84 @@ def _shard_syrk(a, c, alpha, beta, uplo, trans, conj,
             else:
                 ops = [TileOp("A", a, _rowblock_coords(a, trans, r0, r1)),
                        TileOp("A", a, _rowblock_coords(a, trans, q0, q1))]
+                fn = off_fn
+            if has_c:
+                ops.append(TileOp("C", c, coords, written=True))
+            stored[(i, j)] = len(tiles)
+            tiles.append(Tile(tuple(ops), fn, coords))
+
+    def gather(outs):
+        grid = []
+        for i in range(g):
+            row = []
+            for j in range(g):
+                idx = stored.get((i, j))
+                if idx is not None:
+                    row.append(outs[idx])
+                    continue
+                (r0, r1), (q0, q1) = blocks[i], blocks[j]
+                if has_c:          # untouched triangle keeps C verbatim
+                    row.append(c[r0:r1, q0:q1].astype(dt))
+                else:
+                    row.append(jnp.zeros((r1 - r0, q1 - q0), dt))
+            grid.append(row)
+        return _assemble(grid)
+
+    return TilePlan((g, g), tuple(tiles), gather)
+
+
+def _shard_syr2k(a, b, c, alpha, beta, uplo, trans, conj,
+                 n_dev) -> Optional[TilePlan]:
+    """syr2k/her2k on the syrk triangle grid: the stored triangle of C
+    tiles by block — diagonal blocks run the full rank-2k kernel on the
+    matching op-row blocks of A and B, off-diagonal blocks the two-term
+    block kernel.  A and B row blocks steer affinity exactly like syrk's
+    single operand (each block appears in one grid row and one column)."""
+    n = a.shape[-2] if trans == "N" else a.shape[-1]
+    g = 2
+    while g * (g + 1) // 2 < n_dev:
+        g += 1
+    g = min(g, max(1, n // _tile_min()))
+    if g < 2:
+        return None
+    blocks = _splits(n, g)
+    dt = a.dtype
+    has_c = c is not None
+    alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
+    czero = _scalar(0.0, dt)
+    if has_c:
+        def diag_fn(a_, b_, c_):
+            return _syr2k_kernel(a_, b_, c_, alpha_, beta_, uplo=uplo,
+                                 trans=trans, conj=conj, has_c=True)
+
+        def off_fn(ai, bi, aj, bj, cij):
+            return _syr2k_block_kernel(ai, bi, aj, bj, cij, alpha_, beta_,
+                                       trans=trans, conj=conj, has_c=True)
+    else:
+        def diag_fn(a_, b_):
+            return _syr2k_kernel(a_, b_, czero, alpha_, beta_, uplo=uplo,
+                                 trans=trans, conj=conj, has_c=False)
+
+        def off_fn(ai, bi, aj, bj):
+            return _syr2k_block_kernel(ai, bi, aj, bj, czero, alpha_,
+                                       beta_, trans=trans, conj=conj,
+                                       has_c=False)
+    tiles, stored = [], {}
+    for i in range(g):
+        for j in range(g):
+            if not (i >= j if uplo == "L" else i <= j):
+                continue
+            (r0, r1), (q0, q1) = blocks[i], blocks[j]
+            coords = (r0, r1, q0, q1)
+            if i == j:
+                ops = [TileOp("A", a, _rowblock_coords(a, trans, r0, r1)),
+                       TileOp("B", b, _rowblock_coords(b, trans, r0, r1))]
+                fn = diag_fn
+            else:
+                ops = [TileOp("A", a, _rowblock_coords(a, trans, r0, r1)),
+                       TileOp("B", b, _rowblock_coords(b, trans, r0, r1)),
+                       TileOp("A", a, _rowblock_coords(a, trans, q0, q1)),
+                       TileOp("B", b, _rowblock_coords(b, trans, q0, q1))]
                 fn = off_fn
             if has_c:
                 ops.append(TileOp("C", c, coords, written=True))
@@ -765,8 +873,12 @@ def _syr2k_like(a, b, c, *, uplo, trans, alpha, beta, conj, base):
     ops = [("A", a, float(n), False), ("B", b, float(n), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
+    shard = (functools.partial(_shard_syr2k, a, b, c, alpha, beta, uplo,
+                               trans, conj)
+             if _shard_active(batch, a, b, c) else None)
     return _dispatch(routine_name(base, dt), n, n, k, ops, compute,
-                     batch, key=_call_key(bkey, n, n, k, batch))
+                     batch, key=_call_key(bkey, n, n, k, batch),
+                     shard=shard)
 
 
 def trmm(a, b, *, side="L", uplo="L", trans="N", diag="N", alpha=1.0):

@@ -113,6 +113,16 @@ class CallSiteProfile:
             self.n_avg_sum += n_avg
             self.n_avg_count += 1
 
+    def observe_residency(self, hit: bool) -> None:
+        """Residency hit-rate source: one operand placement attempt at
+        this site found (or missed) a resident entry in the runtime's
+        residency store.  The per-site ``hit%`` column and the adaptive
+        mode's view of locality both read these counters — sites whose
+        operands are always resident are exactly the sites DFU wins on.
+        """
+        self.lookups += 1
+        self.hits += int(hit)
+
     def observe_probe(self, offload: bool, seconds: float) -> None:
         """Record one timed adaptive-warmup probe on one path."""
         if offload:

@@ -53,8 +53,28 @@ def _blasable(*arrays) -> bool:
 # --------------------------------------------------------------------- #
 # trampolines                                                            #
 # --------------------------------------------------------------------- #
+def _benign_kwargs(a, b, kw) -> bool:
+    """NumPy-style callers routinely pass ``precision=None`` and/or a
+    ``preferred_element_type`` that merely restates the operand dtype —
+    both are no-ops for same-dtype operands.  Bailing to the original on
+    *any* kwarg sent those calls around the offload path entirely; the
+    benign ones are accepted (and dropped — they request exactly what
+    the offload kernels already do).  A real precision override or an
+    accumulation-type change still falls through to the original."""
+    for key, val in kw.items():
+        if key == "precision" and val is None:
+            continue
+        if key == "preferred_element_type" and (
+                val is None
+                or (a.dtype == b.dtype and jnp.dtype(val) == a.dtype)):
+            continue
+        return False
+    return True
+
+
 def _matmul(a, b, **kw):
-    if _blasable(a, b) and not kw and a.ndim >= 2 and b.ndim >= 2:
+    if (_blasable(a, b) and a.ndim >= 2 and b.ndim >= 2
+            and _benign_kwargs(a, b, kw)):
         return blas.gemm(a, b)
     if rt.active() is not None:
         rt.active().stats.uninstrumented_calls += 1
@@ -62,7 +82,8 @@ def _matmul(a, b, **kw):
 
 
 def _dot(a, b, **kw):
-    if _blasable(a, b) and not kw and a.ndim == 2 and b.ndim == 2:
+    if (_blasable(a, b) and a.ndim == 2 and b.ndim == 2
+            and _benign_kwargs(a, b, kw)):
         return blas.gemm(a, b)
     if rt.active() is not None:
         rt.active().stats.uninstrumented_calls += 1

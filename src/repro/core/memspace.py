@@ -68,6 +68,20 @@ def _env_devices() -> Optional[int]:
         return None
 
 
+def device_bytes_from_env() -> Optional[int]:
+    """``SCILIB_DEVICE_BYTES``: the per-device-tier byte cap the
+    residency stores enforce (None = uncapped).  Lives here because the
+    cap is a property of the memory tier, consumed by the runtime's
+    stores and by the simulator's replay alike."""
+    raw = os.environ.get("SCILIB_DEVICE_BYTES", "")
+    if not raw:
+        return None
+    try:
+        return int(float(raw))
+    except ValueError:
+        return None
+
+
 def probe(device: Optional[jax.Device] = None) -> MemSpace:
     """Inspect the backend once and resolve the tier mapping."""
     d = device if device is not None else jax.devices()[0]

@@ -11,6 +11,13 @@ Buffer identity follows the source array object (the JAX analogue of the
 paper's virtual-address identity): placement is cached per buffer, so a
 matrix moved by Device First-Use stays device-resident for all later calls
 that pass the same array — that cache *is* the page table remap of Fig. 2.
+
+Placement state lives in the runtime's residency stores
+(:mod:`repro.core.residency`): ``runtime.placements`` for whole-buffer
+placements and ``runtime.block_stores[d]`` per device tier for tile
+blocks.  Policies read and write those stores directly — the stores own
+byte caps, eviction, pinning and event accounting, so every policy gets
+them for free and none keeps private residency state.
 """
 from __future__ import annotations
 
@@ -109,8 +116,9 @@ class PolicyBase:
             for key, nbytes, shared in blocks:
                 if shared:
                     continue
-                for home in runtime.block_homes(key):
-                    scores[home] = scores.get(home, 0) + nbytes
+                for home, store in enumerate(runtime.block_stores):
+                    if key in store:
+                        scores[home] = scores.get(home, 0) + nbytes
             if scores:
                 return min(scores, key=lambda d: (-scores[d],
                                                   runtime.scheduled_load(d),
@@ -146,19 +154,20 @@ class DeviceFirstUsePolicy(PolicyBase):
     persistent = True
 
     def place_operand(self, runtime, x):
-        cached = runtime.lookup_placement(x)
+        store = runtime.placements
+        cached = store.get(id(x))
         if cached is not None:
             return Placement(cached, cache_hit=True)
         if memspace.tier_of(x) == DEVICE_KIND:
-            runtime.register_placement(x, x)
+            store.put(id(x), x, x.nbytes, anchor=x)
             return Placement(x, cache_hit=False)
         moved = _put(x, DEVICE_KIND)
-        runtime.register_placement(x, moved)
+        store.put(id(x), moved, moved.nbytes, anchor=x)
         return Placement(moved, moved_bytes=x.nbytes)
 
     def place_output(self, runtime, y):
         memspace.tag_device(y)
-        runtime.register_placement(y, y)
+        runtime.placements.put(id(y), y, y.nbytes, anchor=y)
         return Placement(y)
 
 
@@ -183,11 +192,12 @@ class CounterPolicy(PolicyBase):
     def place_operand(self, runtime, x, *, reads_per_elem: float = 1.0,
                       written: bool = False, ai: float = 0.0,
                       budget_used: int = 0) -> Placement:
-        cached = runtime.lookup_placement(x)
+        store = runtime.placements
+        cached = store.get(id(x))
         if cached is not None:
             return Placement(cached, cache_hit=True)
         if memspace.tier_of(x) == DEVICE_KIND:
-            runtime.register_placement(x, x)
+            store.put(id(x), x, x.nbytes, anchor=x)
             return Placement(x)
         if written:
             ok = x.nbytes <= self.c_small and ai >= 30.0
@@ -197,7 +207,7 @@ class CounterPolicy(PolicyBase):
         if not ok:
             return Placement(x)         # stays host: remote-streamed reads
         moved = _put(x, DEVICE_KIND)
-        runtime.register_placement(x, moved)
+        store.put(id(x), moved, moved.nbytes, anchor=x)
         return Placement(moved, moved_bytes=x.nbytes)
 
 
@@ -208,14 +218,15 @@ class PinnedDevicePolicy(PolicyBase):
     copy_back = False
 
     def place_operand(self, runtime, x):
-        cached = runtime.lookup_placement(x)
+        store = runtime.placements
+        cached = store.get(id(x))
         if cached is not None:
             return Placement(cached, cache_hit=True)
         if memspace.tier_of(x) == DEVICE_KIND:
-            runtime.register_placement(x, x)
+            store.put(id(x), x, x.nbytes, anchor=x)
             return Placement(x)
         moved = _put(x, DEVICE_KIND)
-        runtime.register_placement(x, moved)
+        store.put(id(x), moved, moved.nbytes, anchor=x)
         return Placement(moved, moved_bytes=x.nbytes)
 
 

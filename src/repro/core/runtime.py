@@ -5,9 +5,18 @@ One ``OffloadRuntime`` owns
 * the **placement registry** — buffer identity -> device-tier placement.
   This is the JAX analogue of the remapped page table (Fig. 2): the caller
   keeps its handle, the physical home changes once, later uses are free.
-  The registry is a byte-capped LRU (``SCILIB_DEVICE_BYTES``): when device
-  residency exceeds the cap, the least-recently-used placement is evicted
-  back to the host tier so DFU cannot grow HBM use unboundedly.
+  The registry is a byte-capped :class:`~repro.core.residency.
+  ResidencyStore` (``SCILIB_DEVICE_BYTES``): when device residency
+  exceeds the cap, the eviction policy (``SCILIB_EVICT`` — ``lru``
+  default, ``lfu``, or cost-aware ``refetch``) pushes placements back
+  to the host tier so DFU cannot grow HBM use unboundedly.  Pinned
+  entries (``runtime.pin(x)``, or ``SCILIB_PIN=never-evict`` for
+  everything) survive arbitrary pressure.  The same store class backs
+  the per-device tile-block registries, the trace-id table, and the
+  memtier simulator's replay, so live runs and simulation share one
+  accounting implementation — residency events (place/hit/evict/
+  refetch) are recorded into the trace and can be checked
+  count-for-count against a replay.
 * the **offload decision** (threshold logic of §3.3), memoized per call
   site in the **dispatch cache** — steady-state calls re-derive nothing,
 * the **statistics** the paper's ``.fini_array`` hook prints (per-routine
@@ -66,13 +75,13 @@ import collections
 import dataclasses
 import os
 import time
-import weakref
 from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 import jax
 
 from repro.core import callsite as cs
 from repro.core import memspace
+from repro.core import residency as res
 from repro.core import threshold as thr
 from repro.core.policy import CounterPolicy, PolicyBase, make_policy
 from repro.core.trace import Trace
@@ -215,9 +224,13 @@ class RuntimeStats:
     per_device: Dict[int, DeviceStats] = dataclasses.field(
         default_factory=dict)
     uninstrumented_calls: int = 0
-    # LRU registry pressure
+    # placement-registry cap pressure (mirrors the residency store)
     evictions: int = 0
     evicted_bytes: int = 0
+    # evicted entries placed again later: the cap's real cost in link
+    # traffic (summed over the placement and per-device block stores)
+    refetches: int = 0
+    refetched_bytes: int = 0
     # per-call-site profiles (shared with the owning runtime's registry)
     callsites: Optional[cs.CallSiteRegistry] = None
 
@@ -259,6 +272,9 @@ class RuntimeStats:
         if self.evictions:
             lines.append(f"evictions: {self.evictions} "
                          f"({self.evicted_bytes / 1e9:.3f} GB)")
+        if self.refetches:
+            lines.append(f"refetches: {self.refetches} "
+                         f"({self.refetched_bytes / 1e9:.3f} GB)")
         if self.per_device:
             lines.append(f"{'device':<10}{'tiles':>8}{'GB moved':>10}"
                          f"{'affinity':>10}{'evict':>7}")
@@ -278,16 +294,6 @@ class RuntimeStats:
                              f"{p.decision_label():>10}"
                              f"{100 * p.hit_rate:>6.0f}{p.seconds:>9.3f}")
         return "\n".join(lines)
-
-
-def _env_bytes(name: str) -> Optional[int]:
-    raw = os.environ.get(name, "")
-    if not raw:
-        return None
-    try:
-        return int(float(raw))
-    except ValueError:
-        return None
 
 
 #: real-FLOP factors per base routine (shared by the access-counter
@@ -358,26 +364,33 @@ class OffloadRuntime:
         # when a runtime is constructed directly (not via install())
         from repro.core import blas
         blas.refresh_cache_flag()
-        cap = _env_bytes("SCILIB_DEVICE_BYTES")
+        cap = memspace.device_bytes_from_env()
         self.device_bytes_cap: Optional[int] = (
             device_bytes if device_bytes is not None else cap)
+        if self.device_bytes_cap == 0:      # explicit "uncapped" sentinel
+            self.device_bytes_cap = None
+        # the residency engine: every registry below is one ResidencyStore
+        # (repro.core.residency) — the same class the memtier simulator
+        # replays, so live and simulated eviction accounting agree.
+        self.evict_policy = res.evict_policy_from_env()
+        self.pin_all = res.pin_all_from_env()
         # per-call-site dispatch cache: key -> (offload, n_avg)
         self._decisions: Dict[Hashable, Tuple[bool, float]] = {}
-        # placement registry (LRU order): id(src) -> (weakref, placed)
-        self._placements: "collections.OrderedDict[int, Tuple[weakref.ref, jax.Array]]" = (
-            collections.OrderedDict())
-        self._resident_bytes = 0
-        # multi-device tile scheduler: one block registry (LRU order) per
-        # device tier, block key -> (weakref(parent), placed block), plus
-        # the affinity map block key -> home device and the round-robin
-        # cursor for blocks with no residency anywhere.
+        # placement registry: id(src) -> placed device-tier buffer
+        self.placements = res.ResidencyStore(
+            "placements", cap=self.device_bytes_cap,
+            policy=self.evict_policy, pin_new=self.pin_all,
+            on_evict=self._on_placement_evict, emit=self._emit_event)
+        # multi-device tile scheduler: one block store per device tier,
+        # block key -> placed block, plus the round-robin cursor for
+        # blocks with no residency anywhere.
         self.n_devices = int(self.memspace.n_devices)
-        self._tile_caches: list = [collections.OrderedDict()
-                                   for _ in range(self.n_devices)]
-        self._tile_resident: list = [0] * self.n_devices
-        # block key -> set of device tiers where the block is resident
-        # (blocks shared by tiles on different devices replicate)
-        self._block_homes: Dict[Tuple, set] = {}
+        self.block_stores = [
+            res.ResidencyStore(
+                f"dev{d}", cap=self.device_bytes_cap,
+                policy=self.evict_policy, pin_new=self.pin_all,
+                on_evict=self._block_evict_hook(d), emit=self._emit_event)
+            for d in range(self.n_devices)]
         self._rr_cursor = 0
         # tiles assigned to each device within the call being scheduled
         # (tie-breaker: replicated blocks score several devices equally)
@@ -385,81 +398,75 @@ class OffloadRuntime:
         # async mode: recent in-flight outputs, drained by sync()
         self._pending: "collections.deque[jax.Array]" = collections.deque(
             maxlen=_PENDING_WINDOW)
-        # trace-buffer ids: id(arr) -> trace buffer id
-        self._trace_ids: Dict[int, Tuple[weakref.ref, int]] = {}
+        # trace-buffer ids: id(arr) -> trace buffer id (uncapped store:
+        # entries live exactly as long as their anchor array)
+        self._trace_ids = res.ResidencyStore("traceids")
         self._reuse_by_buffer: Dict[int, int] = {}
 
     # ------------------------------------------------------------------ #
-    # placement registry (byte-capped LRU)                                #
+    # the residency engine: event + eviction hooks, pinning               #
     # ------------------------------------------------------------------ #
-    def lookup_placement(self, x: jax.Array) -> Optional[jax.Array]:
-        ent = self._placements.get(id(x))
-        if ent is None:
-            return None
-        ref, placed = ent
-        if ref() is None:       # stale id collision after GC
-            self._drop_placement(id(x))
-            return None
-        self._placements.move_to_end(id(x))
+    def _emit_event(self, kind: str, store: str, nbytes: int) -> None:
+        """Mirror one residency transition into the trace and the
+        refetch statistics (place/hit/evict/refetch)."""
+        if kind == "refetch":
+            self.stats.refetches += 1
+            self.stats.refetched_bytes += nbytes
+        if self.trace is not None:
+            self.trace.record_event(kind, store, nbytes)
+
+    def _on_placement_evict(self, key, placed, nbytes: int) -> None:
+        """Cap pressure pushed a placement out: re-tag the buffer
+        host-side so the next use re-migrates (and is counted again).
+        JAX arrays are immutable: on real-tier backends the HBM itself
+        is released once the application's own references die — the
+        registry cannot forcibly move a borrowed handle — while the
+        simulated tier models the re-migration cost with a real copy."""
+        memspace.tag_host(placed)
+        self.stats.evictions += 1
+        self.stats.evicted_bytes += nbytes
+        if self.debug >= 1:
+            print(f"[scilib] evict {nbytes} B "
+                  f"(resident {self.placements.resident_bytes} B)")
+
+    def _block_evict_hook(self, device: int):
+        """Per-device eviction callback for the tile-block stores."""
+        def _on_evict(key, placed, nbytes, device=device, self=self):
+            memspace.tag_host(placed)
+            dst = self.stats.device(device)
+            dst.evictions += 1
+            dst.evicted_bytes += nbytes
+            if self.debug >= 1:
+                print(f"[scilib] dev{device} evict block {nbytes} B "
+                      f"(resident "
+                      f"{self.block_stores[device].resident_bytes} B)")
+        return _on_evict
+
+    def pin(self, x: jax.Array) -> jax.Array:
+        """Pin a buffer on the device tier: place it now if needed and
+        mark it never-evictable — it survives arbitrary cap pressure
+        until :meth:`unpin` or the buffer dies.  Returns the placed
+        device-tier buffer (the pinned residency the next calls hit)."""
+        placed = self.placements.get(id(x))
+        if placed is None:
+            placed = (x if memspace.tier_of(x) == memspace.DEVICE
+                      else memspace.put(x, memspace.DEVICE))
+            self.placements.put(id(x), placed, placed.nbytes, anchor=x)
+            self.alias_trace_id(x, placed)
+        self.placements.pin(id(x))
         return placed
 
-    def register_placement(self, src: jax.Array, placed: jax.Array) -> None:
-        key = id(src)
-        nbytes = placed.nbytes
-
-        def _drop(_ref, key=key, self=self):
-            self._drop_placement(key)
-
-        if key in self._placements:
-            self._drop_placement(key)
-        self._placements[key] = (weakref.ref(src, _drop), placed)
-        self._resident_bytes += nbytes
-        self._evict_over_cap(protect=key)
-
-    def _drop_placement(self, key: int) -> None:
-        ent = self._placements.pop(key, None)
-        if ent is not None:
-            self._resident_bytes -= ent[1].nbytes
-
-    def _evict_over_cap(self, protect: int) -> None:
-        """Evict LRU placements back to the host tier until under the cap.
-
-        The just-registered placement is protected: its operand is in use
-        by the current call, so a single oversized buffer is admitted and
-        the *next* registration pushes it out.
-
-        Eviction drops the registry's strong reference and re-tags the
-        buffer host-side, so the next use re-migrates (and is counted
-        again).  JAX arrays are immutable: on real-tier backends the HBM
-        itself is released once the application's own references die —
-        the registry cannot forcibly move a borrowed handle — while the
-        simulated tier models the re-migration cost with a real copy."""
-        cap = self.device_bytes_cap
-        if cap is None:
-            return
-        while self._resident_bytes > cap and len(self._placements) > 1:
-            key = next(iter(self._placements))
-            if key == protect:
-                break
-            _ref, placed = self._placements.pop(key)
-            self._resident_bytes -= placed.nbytes
-            memspace.tag_host(placed)
-            self.stats.evictions += 1
-            self.stats.evicted_bytes += placed.nbytes
-            if self.debug >= 1:
-                print(f"[scilib] evict {placed.nbytes} B "
-                      f"(resident {self._resident_bytes} B)")
+    def unpin(self, x: jax.Array) -> None:
+        """Make a pinned buffer evictable again (it stays resident until
+        cap pressure actually selects it)."""
+        self.placements.unpin(id(x))
 
     def resident_bytes(self) -> int:
-        return self._resident_bytes
+        return self.placements.resident_bytes
 
     # ------------------------------------------------------------------ #
-    # multi-device block registries + tile scheduler                      #
+    # multi-device block stores + tile scheduler                          #
     # ------------------------------------------------------------------ #
-    def block_homes(self, key: Tuple) -> frozenset:
-        """Device tiers where a block is currently resident."""
-        return frozenset(self._block_homes.get(key, ()))
-
     def next_device(self) -> int:
         """Round-robin cursor for blocks with no residency anywhere."""
         dev = self._rr_cursor % self.n_devices
@@ -472,68 +479,7 @@ class OffloadRuntime:
         return self._sched_load[device]
 
     def device_resident_bytes(self, device: int) -> int:
-        return self._tile_resident[device]
-
-    def _lookup_block(self, device: int, key: Tuple) -> Optional[jax.Array]:
-        cache = self._tile_caches[device]
-        ent = cache.get(key)
-        if ent is None:
-            return None
-        if ent[0]() is None:            # parent died, id may be recycled
-            self._drop_block(device, key)
-            return None
-        cache.move_to_end(key)
-        return ent[1]
-
-    def _register_block(self, device: int, key: Tuple,
-                        parent: jax.Array, placed: jax.Array) -> None:
-        cache = self._tile_caches[device]
-
-        def _drop(_ref, device=device, key=key, self=self):
-            self._drop_block(device, key)
-
-        if key in cache:
-            self._drop_block(device, key)
-        cache[key] = (weakref.ref(parent, _drop), placed)
-        self._tile_resident[device] += placed.nbytes
-        self._block_homes.setdefault(key, set()).add(device)
-        self._evict_device_over_cap(device, protect=key)
-
-    def _drop_block(self, device: int, key: Tuple) -> None:
-        ent = self._tile_caches[device].pop(key, None)
-        if ent is not None:
-            self._tile_resident[device] -= ent[1].nbytes
-            homes = self._block_homes.get(key)
-            if homes is not None:
-                homes.discard(device)
-                if not homes:
-                    del self._block_homes[key]
-
-    def _evict_device_over_cap(self, device: int, protect: Tuple) -> None:
-        """Per-device byte-cap LRU, mirroring :meth:`_evict_over_cap`:
-        the cap applies to *each* device tier's block residency."""
-        cap = self.device_bytes_cap
-        if cap is None:
-            return
-        cache = self._tile_caches[device]
-        dst = self.stats.device(device)
-        while self._tile_resident[device] > cap and len(cache) > 1:
-            key = next(iter(cache))
-            if key == protect:
-                break
-            _ref, placed = cache.pop(key)
-            self._tile_resident[device] -= placed.nbytes
-            homes = self._block_homes.get(key)
-            if homes is not None:
-                homes.discard(device)
-                if not homes:
-                    del self._block_homes[key]
-            memspace.tag_host(placed)
-            dst.evictions += 1
-            dst.evicted_bytes += placed.nbytes
-            if self.debug >= 1:
-                print(f"[scilib] dev{device} evict block {placed.nbytes} B "
-                      f"(resident {self._tile_resident[device]} B)")
+        return self.block_stores[device].resident_bytes
 
     def _place_block(self, device: int, op: TileOp) -> Tuple[jax.Array, int,
                                                              bool]:
@@ -543,9 +489,10 @@ class OffloadRuntime:
         policies (DFU/counter/pinned) register the block so later calls
         find it resident; Mem-Copy stages fresh every call."""
         key = op.key()
+        store = self.block_stores[device]
         persistent = self.policy.persistent
         if persistent:
-            cached = self._lookup_block(device, key)
+            cached = store.get(key)
             if cached is not None:
                 return cached, 0, True
         block = op.materialize()
@@ -554,7 +501,7 @@ class OffloadRuntime:
         # output reused whole) moved nothing — keep the stats honest
         moved = 0 if placed is block else op.nbytes
         if persistent:
-            self._register_block(device, key, op.parent, placed)
+            store.put(key, placed, placed.nbytes, anchor=op.parent)
         return placed, moved, False
 
     def _sharded_call(self, st: RoutineStats, plan: TilePlan,
@@ -590,16 +537,16 @@ class OffloadRuntime:
                 st.cache_misses += int(not hit)
                 dst.affinity_hits += int(hit)
                 if site is not None:
-                    site.lookups += 1
-                    site.hits += int(hit)
+                    site.observe_residency(hit)
                 placed.append(arr)
             outs.append(tile.compute(*placed))
             dst.tiles += 1
         out = plan.gather(outs)
         if self.policy.persistent:
             for tile, dev, block in zip(plan.tiles, devices, outs):
-                self._register_block(dev, (id(out),) + tile.out_coords,
-                                     out, block)
+                self.block_stores[dev].put(
+                    (id(out),) + tile.out_coords, block, block.nbytes,
+                    anchor=out)
         if self.policy.copy_back:
             st.bytes_out += out.nbytes
             out = memspace.put(out, memspace.HOST)
@@ -627,31 +574,21 @@ class OffloadRuntime:
     def _trace_id(self, x: jax.Array, name: str = "") -> int:
         if self.trace is None:
             return -1
-        ent = self._trace_ids.get(id(x))
-        if ent is not None and ent[0]() is not None:
-            return ent[1]
+        bid = self._trace_ids.get(id(x))
+        if bid is not None:
+            return bid
         bid = self.trace.new_buffer(x.nbytes, name)
-        key = id(x)
-
-        def _drop(_ref, key=key, self=self):
-            self._trace_ids.pop(key, None)
-
-        self._trace_ids[key] = (weakref.ref(x, _drop), bid)
+        self._trace_ids.put(id(x), bid, x.nbytes, anchor=x)
         return bid
 
     def alias_trace_id(self, src: jax.Array, dst: jax.Array) -> None:
         """Source and its device placement are the same logical buffer."""
         if self.trace is None or id(dst) in self._trace_ids:
             return
-        ent = self._trace_ids.get(id(src))
-        if ent is None:
+        bid = self._trace_ids.get(id(src))
+        if bid is None:
             return
-        key = id(dst)
-
-        def _drop(_ref, key=key, self=self):
-            self._trace_ids.pop(key, None)
-
-        self._trace_ids[key] = (weakref.ref(dst, _drop), ent[1])
+        self._trace_ids.put(id(dst), bid, dst.nbytes, anchor=dst)
 
     # ------------------------------------------------------------------ #
     # the intercepted-call entry point: the staged dispatch pipeline      #
@@ -834,8 +771,7 @@ class OffloadRuntime:
             st.cache_hits += int(p.cache_hit)
             st.cache_misses += int(not p.cache_hit)
             if site is not None:
-                site.lookups += 1
-                site.hits += int(p.cache_hit)
+                site.observe_residency(p.cache_hit)
             if p.cache_hit:
                 self._count_reuse(x)
             if p.moved_bytes or p.cache_hit:
@@ -890,9 +826,8 @@ class OffloadRuntime:
 
     # ------------------------------------------------------------------ #
     def _count_reuse(self, x: jax.Array) -> None:
-        ent = self._trace_ids.get(id(x))
-        if ent is not None:
-            bid = ent[1]
+        bid = self._trace_ids.get(id(x))
+        if bid is not None:
             self._reuse_by_buffer[bid] = self._reuse_by_buffer.get(bid, 0) + 1
 
     def mean_buffer_reuse(self) -> float:
@@ -914,18 +849,24 @@ class OffloadRuntime:
         for (role, x, reads, written) in operands:
             bid = self._trace_id(x, role)
             ops.append((role, bid, x.nbytes // max(1, batch), reads, written))
-        # the output aliases the written operand's logical buffer
+        # the output aliases the written operand's logical buffer; a
+        # fresh output gets its own buffer and is recorded on the call,
+        # so replay can account its device-born residency like the live
+        # placement store does
+        out_buf, out_nbytes = -1, 0
         for (role, x, reads, written) in operands:
             if written:
                 self.alias_trace_id(x, out)
                 break
         else:
-            self._trace_id(out, "OUT")
+            out_buf = self._trace_id(out, "OUT")
+            out_nbytes = out.nbytes
         from repro.core.trace import BlasCall
         self.trace.calls.append(BlasCall(
             routine=routine, m=m, n=n, k=k, batch=batch,
             operands=tuple(ops), devices=tuple(devices),
-            callsite_id=site_id, seconds=seconds))
+            callsite_id=site_id, seconds=seconds,
+            out_buf=out_buf, out_nbytes=out_nbytes))
 
 
 # --------------------------------------------------------------------- #
@@ -968,3 +909,16 @@ def uninstall() -> Optional[RuntimeStats]:
 
 def active() -> Optional[OffloadRuntime]:
     return _ACTIVE
+
+
+def pin(x: jax.Array) -> jax.Array:
+    """Pin a buffer on the active runtime's device tier (no-op when no
+    runtime is installed).  See :meth:`OffloadRuntime.pin`."""
+    rt = _ACTIVE
+    return x if rt is None else rt.pin(x)
+
+
+def unpin(x: jax.Array) -> None:
+    """Release a :func:`pin` (no-op when no runtime is installed)."""
+    if _ACTIVE is not None:
+        _ACTIVE.unpin(x)

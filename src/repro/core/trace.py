@@ -12,6 +12,8 @@ import dataclasses
 import json
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from repro.core.residency import ResidencyEvent
+
 # FLOP multipliers: complex arithmetic costs 4 real mul + 4 real add per
 # complex multiply-add -> 4x the real FLOP count at equal dimensions.
 _COMPLEX = {"c": 4.0, "z": 4.0, "s": 1.0, "d": 1.0}
@@ -36,6 +38,13 @@ class BlasCall:
     the runtime's measured per-call wall time (dispatch/submission time
     in async mode, device wall time under ``SCILIB_SYNC=1``).  Both
     default empty/zero so older traces load unchanged.
+
+    ``out_buf``/``out_nbytes`` identify the call's *output* buffer when
+    it is a fresh allocation (no written operand to alias).  Offloaded
+    outputs are born device-resident and occupy residency-store bytes
+    in the live runtime, so the simulator must account them too or its
+    cap-eviction replay drifts from the live run.  Default -1/0 keeps
+    older traces loading unchanged (and replaying exactly as before).
     """
 
     routine: str                     # e.g. "zgemm", "dtrsm"
@@ -48,6 +57,8 @@ class BlasCall:
     devices: Tuple[int, ...] = ()    # device tier per scheduled tile
     callsite_id: str = ""            # per-site fingerprint (may be "")
     seconds: float = 0.0             # measured per-call wall time
+    out_buf: int = -1                # fresh-output buffer id (or -1)
+    out_nbytes: int = 0              # its size (0 when out_buf is -1)
 
     # ------------------------------------------------------------------ #
     @property
@@ -96,13 +107,36 @@ class BlasCall:
 
 
 class Trace:
-    """Append-only BLAS trace with named buffer registry."""
+    """Append-only BLAS trace with named buffer registry.
+
+    ``events`` carries the residency history of the recording run —
+    ``place``/``hit``/``evict``/``refetch`` transitions of the runtime's
+    residency stores (:mod:`repro.core.residency`), each stamped with
+    the call index it interleaves at.  A replay of the same trace under
+    the same cap and eviction policy can therefore be checked
+    count-for-count against what the live run actually did.
+    """
 
     def __init__(self) -> None:
         self.calls: List[BlasCall] = []
         self.buffer_sizes: Dict[int, int] = {}
         self.buffer_names: Dict[int, str] = {}
+        self.events: List[ResidencyEvent] = []
         self._next_buf = 1
+
+    # ------------------------------------------------------------------ #
+    def record_event(self, kind: str, store: str, nbytes: int) -> None:
+        """Append one residency transition, stamped at the current call
+        position (the runtime's residency stores point here)."""
+        self.events.append(ResidencyEvent(kind=kind, store=store,
+                                          nbytes=int(nbytes),
+                                          call_index=len(self.calls)))
+
+    def event_count(self, kind: str) -> int:
+        return sum(1 for e in self.events if e.kind == kind)
+
+    def event_bytes(self, kind: str) -> int:
+        return sum(e.nbytes for e in self.events if e.kind == kind)
 
     # ------------------------------------------------------------------ #
     def new_buffer(self, nbytes: int, name: str = "") -> int:
@@ -174,12 +208,15 @@ class Trace:
         return sum(c.flops for c in self.calls)
 
     def dump(self, path: str) -> None:
+        payload = {
+            "buffers": {str(k): [v, self.buffer_names[k]]
+                        for k, v in self.buffer_sizes.items()},
+            "calls": [c.to_json() for c in self.calls],
+        }
+        if self.events:
+            payload["events"] = [e.to_json() for e in self.events]
         with open(path, "w") as f:
-            json.dump({
-                "buffers": {str(k): [v, self.buffer_names[k]]
-                            for k, v in self.buffer_sizes.items()},
-                "calls": [c.to_json() for c in self.calls],
-            }, f)
+            json.dump(payload, f)
 
     @classmethod
     def load(cls, path: str) -> "Trace":
@@ -195,4 +232,6 @@ class Trace:
             if "devices" in c:
                 c["devices"] = tuple(c["devices"])
             t.calls.append(BlasCall(**c))
+        for e in raw.get("events", ()):
+            t.events.append(ResidencyEvent(**e))
         return t

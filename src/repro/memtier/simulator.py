@@ -41,6 +41,22 @@ each device with its own HBM capacity and H2D accounting
 (``per_device_h2d``).  Read operands replicate along one grid axis (the
 tile-communication amplification of 2-D decompositions); migration links
 to different devices run in parallel.
+
+**Residency accounting** is the live runtime's own engine: one
+:class:`repro.core.residency.ResidencyStore` per device tier tracks
+which buffers are device-resident, under two admission semantics —
+
+* ``spec.device_capacity`` is the *HBM* limit: a migration that cannot
+  fit is refused and the buffer stays remote (``evict_lru=True``
+  restores residents to host to make room, the pre-engine behaviour);
+* ``device_bytes`` models the runtime's ``SCILIB_DEVICE_BYTES`` registry
+  cap: admissions always succeed and the eviction policy (``evict`` —
+  ``lru``/``lfu``/``refetch``) pushes other residents back to host,
+  exactly like the live store.  Fresh outputs of offloaded calls
+  (``BlasCall.out_buf``) are born device-resident and occupy cap bytes,
+  again like the live run — which is what makes the replayed eviction
+  and refetch counts comparable, count-for-count, with a live capped
+  run's trace events.
 """
 from __future__ import annotations
 
@@ -50,6 +66,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.residency import ResidencyStore
 from repro.core.trace import BlasCall, Trace
 from repro.memtier.pagetable import Buffer, PageTable
 from repro.memtier.spec import GH200, HardwareSpec, MemKind
@@ -65,6 +82,12 @@ class PolicyReport:
     spec: str
     threshold: float
     n_devices: int = 1
+    # residency-engine configuration + counters of this replay
+    device_bytes: Optional[int] = None   # SCILIB_DEVICE_BYTES cap model
+    evict: str = "lru"                   # SCILIB_EVICT policy model
+    evictions: int = 0                   # cap-pressure evictions
+    refetches: int = 0                   # evicted entries placed again
+    refetched_bytes: int = 0
     total_s: float = 0.0
     blas_device_s: float = 0.0
     blas_host_s: float = 0.0
@@ -115,7 +138,9 @@ class MemTierSimulator:
     def __init__(self, spec: HardwareSpec = GH200, *, policy: str = "dfu",
                  threshold: float = 500.0, aligned_alloc: bool = False,
                  seed: int = 0, evict_lru: bool = False,
-                 n_devices: int = 1):
+                 n_devices: int = 1,
+                 device_bytes: Optional[int] = None,
+                 evict: str = "lru"):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
         self.spec = spec
@@ -126,20 +151,63 @@ class MemTierSimulator:
         self.rng = np.random.default_rng(seed)
         self.evict_lru = evict_lru
         self.n_devices = max(1, int(n_devices))
+        self.device_bytes = device_bytes if device_bytes else None
         self.report = PolicyReport(policy=policy, spec=spec.name,
                                    threshold=threshold,
-                                   n_devices=self.n_devices)
+                                   n_devices=self.n_devices,
+                                   device_bytes=self.device_bytes,
+                                   evict=evict)
         self._bufs: Dict[int, Buffer] = {}       # trace buf id -> Buffer
-        self._staged: Dict[int, bool] = {}       # memcopy staging cache
         self._delayed: Dict[int, int] = {}       # counter: deferred once
         self._denied: set = set()                # counter: budget-refused
-        self._lru: Dict[int, int] = {}           # buf id -> last use step
-        self._step = 0
+        # the residency engine, one store per device tier: the same
+        # ResidencyStore class the live runtime's registries use, so
+        # capacity checks, cap evictions, refetch detection, LRU order
+        # and the counters all share one implementation.
+        self._stores = [
+            ResidencyStore(f"dev{d}" if self.n_devices > 1
+                           else "placements",
+                           cap=self.device_bytes, policy=evict,
+                           on_evict=self._evict_to_host(d))
+            for d in range(self.n_devices)]
         # multi-device DFU: buffer -> assigned device (round-robin with
-        # affinity — first placement sticks), per-device HBM usage
+        # affinity — first placement sticks)
         self._dev_of: Dict[int, int] = {}
-        self._dev_bytes: Dict[int, int] = {}
         self._rr_dev = 0
+        self._out_seq = 0            # synthetic keys for aliased outputs
+
+    def _evict_to_host(self, dev: int):
+        """Cap pressure on one device store: bounce the victim's pages
+        back to host and bill the link, like the live store re-tagging
+        plus the next refetch the evicted buffer will pay."""
+        def _on_evict(key, buf, nbytes):
+            # one Buffer can back two entries — the operand placement
+            # and its aliased-output twin, like the live registry's
+            # id(c)/id(out) pair.  Only the last entry standing moves
+            # the pages; evicting a twin bills the link without
+            # un-homing the still-resident sibling.
+            if any(s.entry(k).payload is buf
+                   for s in self._stores for k in s.keys()):
+                spec = self.spec
+                self.report.movement_s += nbytes / spec.effective_migrate_bw()
+                self.report.bytes_dev_to_host += nbytes
+                return
+            moved, secs = self.pt.move_pages(buf, MemKind.HOST)
+            self.report.movement_s += secs
+            self.report.bytes_dev_to_host += moved
+        return _on_evict
+
+    def _assign_dev(self, bid: int) -> int:
+        """The device tier a buffer belongs to (round-robin assignment
+        on first device use, sticky thereafter — the affinity rule)."""
+        if self.n_devices == 1:
+            return 0
+        dev = self._dev_of.get(bid)
+        if dev is None:
+            dev = self._rr_dev % self.n_devices
+            self._rr_dev += 1
+            self._dev_of[bid] = dev
+        return dev
 
     # ------------------------------------------------------------------ #
     def _buffer(self, trace: Trace, bid: int) -> Buffer:
@@ -152,6 +220,10 @@ class MemTierSimulator:
                 # numactl binding happens at allocation: free placement.
                 buf.migrations = 0
                 buf.bytes_migrated = 0
+                # pinned entries survive any cap: numactl bindings are
+                # not evictable, and the store knows it
+                self._stores[self._assign_dev(bid)].put(
+                    bid, buf, buf.size, pinned=True)
             self._bufs[bid] = buf
         return self._bufs[bid]
 
@@ -191,7 +263,6 @@ class MemTierSimulator:
         for b in bufs:
             if b.fully_on(MemKind.DEVICE):
                 b.device_uses += 1
-            self._lru[b.buf_id] = self._step
         return t
 
     # ------------------------------------------------------------------ #
@@ -217,15 +288,27 @@ class MemTierSimulator:
         return t_k + t_move
 
     def _dfu(self, call: BlasCall, bufs: List[Buffer]) -> float:
-        """Device First-Use: move_pages() everything on first device use."""
+        """Device First-Use: move_pages() everything on first device use.
+
+        The residency store is the arbiter: a hit is a free reuse, a
+        miss migrates (HBM capacity permitting) and registers — under a
+        ``device_bytes`` cap the registration itself may evict other
+        residents, exactly like the live placement store.
+        """
         t_move = 0.0
+        store = self._stores[0]
         for b in bufs:
+            if store.get(b.buf_id) is not None:
+                continue                        # resident: reuse is free
             if not b.fully_on(MemKind.DEVICE):
-                if not self._fits(b):
+                if not store.reserve(b.size,
+                                     limit=self.spec.device_capacity,
+                                     evict=self.evict_lru):
                     continue                    # HBM full: stay remote
                 moved, secs = self.pt.move_pages(b, MemKind.DEVICE)
                 t_move += secs
                 self.report.bytes_host_to_dev += moved
+            store.put(b.buf_id, b, b.size)
         self.report.movement_s += t_move
         return self._device_kernel(call, bufs) + t_move
 
@@ -241,21 +324,21 @@ class MemTierSimulator:
         spec, n_dev = self.spec, self.n_devices
         t_move_dev: Dict[int, float] = {}
         for b in bufs:
-            if b.fully_on(MemKind.DEVICE):
+            dev = self._assign_dev(b.buf_id)
+            store = self._stores[dev]
+            if store.get(b.buf_id) is not None:
                 continue
-            dev = self._dev_of.get(b.buf_id)
-            if dev is None:
-                dev = self._rr_dev % n_dev
-                self._rr_dev += 1
-                self._dev_of[b.buf_id] = dev
-            if not self._fits_dev(b, dev):
-                continue
-            moved, secs = self.pt.move_pages(b, MemKind.DEVICE)
-            self._dev_bytes[dev] = self._dev_bytes.get(dev, 0) + moved
-            self.report.per_device_h2d[dev] = (
-                self.report.per_device_h2d.get(dev, 0) + moved)
-            self.report.bytes_host_to_dev += moved
-            t_move_dev[dev] = t_move_dev.get(dev, 0.0) + secs
+            if not b.fully_on(MemKind.DEVICE):
+                if not store.reserve(b.size,
+                                     limit=spec.device_capacity,
+                                     evict=self.evict_lru):
+                    continue
+                moved, secs = self.pt.move_pages(b, MemKind.DEVICE)
+                self.report.per_device_h2d[dev] = (
+                    self.report.per_device_h2d.get(dev, 0) + moved)
+                self.report.bytes_host_to_dev += moved
+                t_move_dev[dev] = t_move_dev.get(dev, 0.0) + secs
+            store.put(b.buf_id, b, b.size)
         # links to distinct devices run in parallel: the slowest one gates
         t_move = max(t_move_dev.values(), default=0.0)
         self.report.movement_s += t_move
@@ -286,42 +369,19 @@ class MemTierSimulator:
         for b in bufs:
             if b.fully_on(MemKind.DEVICE):
                 b.device_uses += 1
-            self._lru[b.buf_id] = self._step
         return t_k + t_move
-
-    def _fits_dev(self, b: Buffer, dev: int) -> bool:
-        """Per-device capacity check, honoring ``evict_lru`` exactly like
-        the single-device :meth:`_fits` (victims limited to the buffers
-        assigned to this device)."""
-        need = b.n_pages * b.page_size
-        free = self.spec.device_capacity - self._dev_bytes.get(dev, 0)
-        if need <= free:
-            return True
-        if not self.evict_lru:
-            return False
-        victims = sorted(
-            (bb for bb in self._bufs.values()
-             if self._dev_of.get(bb.buf_id) == dev and bb is not b
-             and bb.resident_bytes(MemKind.DEVICE) > 0),
-            key=lambda bb: self._lru.get(bb.buf_id, -1))
-        for v in victims:
-            moved, secs = self.pt.move_pages(v, MemKind.HOST)
-            self.report.movement_s += secs
-            self.report.bytes_dev_to_host += moved
-            self._dev_bytes[dev] = self._dev_bytes.get(dev, 0) - moved
-            free += moved
-            if need <= free:
-                return True
-        return need <= free
 
     def _counter(self, call: BlasCall, bufs: List[Buffer]) -> float:
         """Model of Hopper's access-counter migration (§4.4.1, Table 6)."""
         spec = self.spec
+        store = self._stores[0]
         migrated_this_call = 0
         t_mig = 0.0
         ai = call.flops / max(1, call.bytes_touched)   # arithmetic intensity
         for b, (_, _, nb, reads, written) in zip(bufs, call.operands):
             nbytes = nb * call.batch
+            if store.get(b.buf_id) is not None:
+                continue                         # resident: recency touch
             if b.fully_on(MemKind.DEVICE):
                 continue
             self.pt.record_device_reads(b, reads)
@@ -341,43 +401,64 @@ class MemTierSimulator:
                 self._delayed[b.buf_id] = seen + 1
                 if seen == 0 and self.rng.random() < self.counter_delay_prob:
                     ok = False
-            if ok and self._fits(b):
+            if ok and store.reserve(b.size, limit=spec.device_capacity,
+                                    evict=self.evict_lru):
                 moved, secs = self.pt.move_pages(b, MemKind.DEVICE)
                 t_mig += secs
                 migrated_this_call += moved
                 self.report.bytes_host_to_dev += moved
+                store.put(b.buf_id, b, b.size)
         # counter migration happens behind the kernel: its cost is billed
         # to BLAS time, exactly how the paper reports it ("included").
         t_k = self._device_kernel(call, bufs)
         self.report.blas_device_s += t_mig
         return t_k + t_mig
 
-    def _fits(self, b: Buffer) -> bool:
-        spec = self.spec
-        need = b.n_pages * b.page_size
-        free = spec.device_capacity - self.pt.device_bytes_used()
-        if need <= free:
-            return True
-        if not self.evict_lru:
-            return False
-        # Beyond-paper: evict least-recently-used device buffers to host.
-        victims = sorted(
-            (bb for bb in self._bufs.values()
-             if bb.resident_bytes(MemKind.DEVICE) > 0 and bb is not b),
-            key=lambda bb: self._lru.get(bb.buf_id, -1))
-        for v in victims:
-            moved, secs = self.pt.move_pages(v, MemKind.HOST)
-            self.report.movement_s += secs
-            self.report.bytes_dev_to_host += moved
-            free += moved
-            if need <= free:
-                return True
-        return need <= free
+    # ------------------------------------------------------------------ #
+    def _born_on_device(self, buf: Buffer) -> None:
+        """Mark a fresh output buffer device-resident with no link cost
+        and no migration event: offloaded outputs are device-born, the
+        exact analogue of the live runtime's ``place_output``."""
+        mask = buf.numa != int(MemKind.DEVICE)
+        n = int(np.count_nonzero(mask))
+        if n == 0:
+            return
+        self.pt.used[MemKind.HOST] -= n * buf.page_size
+        self.pt.used[MemKind.DEVICE] += n * buf.page_size
+        buf.numa[mask] = int(MemKind.DEVICE)
+        buf.dev_pages = buf.n_pages
+
+    def _register_output(self, trace: Trace, call: BlasCall) -> None:
+        """DFU only: the live runtime registers *every* offloaded
+        output, so the replay must too or capped eviction counts drift.
+
+        A fresh output (no written operand) carries its own trace
+        buffer (``out_buf``).  An output that aliases a written operand
+        shares that operand's trace buffer — but the live registry
+        still holds two entries (the operand's placed copy under
+        ``id(c)`` and the output under ``id(out)``; the caller's old C
+        stays valid and cached), so the replay adds a synthetic twin
+        entry of the same size backed by the same Buffer."""
+        if call.out_buf >= 0 and call.out_buf in trace.buffer_sizes:
+            buf = self._buffer(trace, call.out_buf)
+            self._born_on_device(buf)
+            dev = self._assign_dev(call.out_buf)
+            self._stores[dev].put(call.out_buf, buf,
+                                  call.out_nbytes or buf.size)
+            return
+        for _, bid, nb, _, written in call.operands:
+            if written:
+                buf = self._buffer(trace, bid)
+                self._born_on_device(buf)
+                dev = self._assign_dev(bid)
+                self._out_seq += 1
+                self._stores[dev].put(("out", self._out_seq), buf,
+                                      nb * call.batch)
+                return
 
     # ------------------------------------------------------------------ #
     def run(self, trace: Trace) -> PolicyReport:
         for call in trace:
-            self._step += 1
             bufs = [self._buffer(trace, bid)
                     for _, bid, _, _, _ in call.operands]
             # panel factorization (getf2) is not level-3: never offloaded,
@@ -392,6 +473,7 @@ class MemTierSimulator:
             elif self.policy == "dfu":
                 t = (self._dfu(call, bufs) if self.n_devices == 1
                      else self._dfu_multi(call, bufs))
+                self._register_output(trace, call)
             elif self.policy == "counter":
                 t = self._counter(call, bufs)
             else:                                   # pinned
@@ -410,6 +492,11 @@ class MemTierSimulator:
         self.report.max_reuse = reuse.get("max_reuse", 0.0)
         self.report.n_migrated_buffers = int(
             reuse.get("n_migrated_buffers", 0))
+        # residency-engine counters, straight off the shared stores
+        self.report.evictions = sum(s.evictions for s in self._stores)
+        self.report.refetches = sum(s.refetches for s in self._stores)
+        self.report.refetched_bytes = sum(s.refetched_bytes
+                                          for s in self._stores)
         return self.report
 
     # convenience: residency of a trace buffer after the run
@@ -428,12 +515,15 @@ def replay_trace(trace: Trace, *, spec: HardwareSpec = GH200,
                  policies=POLICIES, threshold: float = 500.0,
                  aligned_alloc: bool = False,
                  evict_lru: bool = False,
-                 n_devices: int = 1) -> Dict[str, PolicyReport]:
+                 n_devices: int = 1,
+                 device_bytes: Optional[int] = None,
+                 evict: str = "lru") -> Dict[str, PolicyReport]:
     """Run one trace under several policies (the paper's Tables 3/5)."""
     out = {}
     for p in policies:
         sim = MemTierSimulator(spec, policy=p, threshold=threshold,
                                aligned_alloc=aligned_alloc,
-                               evict_lru=evict_lru, n_devices=n_devices)
+                               evict_lru=evict_lru, n_devices=n_devices,
+                               device_bytes=device_bytes, evict=evict)
         out[p] = sim.run(trace)
     return out

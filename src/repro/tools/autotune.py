@@ -9,7 +9,8 @@ tool's no-recompile ethos:
 1. record a trace from any run (``SCILIB_TRACE=/path.json``, dumped
    automatically at ``uninstall()``),
 2. replay it through the memtier N-device DFU simulator across a
-   threshold x policy x device-count grid,
+   threshold x policy x device-count x device-bytes-cap x
+   eviction-policy grid,
 3. print the grid, the recommended ``SCILIB_*`` settings, and the
    predicted time/moved-bytes deltas against the paper-default baseline.
 
@@ -17,11 +18,18 @@ Command line::
 
     python -m repro.tools.autotune trace.json
     python -m repro.tools.autotune trace.json --spec tpu-v5e \
-        --policies dfu,memcopy --thresholds 300,500,1000 --devices 1,2,4
+        --policies dfu,memcopy --thresholds 300,500,1000 --devices 1,2,4 \
+        --device-bytes auto --evict lru,lfu,refetch
 
 The threshold grid defaults to :func:`repro.core.threshold.threshold_grid`
 over the trace's observed N_avg values — only thresholds that flip at
-least one call's decision are worth simulating.
+least one call's decision are worth simulating.  The device-bytes grid
+defaults to ``auto``: fractions of the uncapped replay's peak device
+residency, because both the live runtime and the simulator now run the
+same :class:`repro.core.residency.ResidencyStore`, a capped replay's
+eviction/refetch counts are directly comparable to a live capped run —
+so the tool can recommend a *cap* (how much HBM the workload actually
+needs), not just a threshold.
 """
 from __future__ import annotations
 
@@ -39,23 +47,42 @@ from repro.memtier.spec import SPECS, HardwareSpec
 #: not a deployable setting, and ``cpu`` is implied by a huge threshold.
 DEFAULT_POLICIES = ("dfu", "memcopy", "counter")
 DEFAULT_DEVICE_COUNTS = (1, 2, 4)
+#: eviction policies swept at each capped point (lru alone is pointless
+#: to sweep uncapped: no cap, no eviction, identical replay).
+DEFAULT_EVICTS = ("lru", "lfu", "refetch")
 
-#: the comparison point: the paper's conservative default configuration.
-BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1)
+#: the comparison point: the paper's conservative default configuration
+#: (policy, threshold, n_devices, device_bytes cap, eviction policy).
+BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1, None, "lru")
 
 
 def _fmt_threshold(t: float) -> str:
     return str(int(t)) if float(t).is_integer() else f"{t:.1f}"
 
 
+def _fmt_cap(cap: Optional[int]) -> str:
+    if cap is None:
+        return "-"
+    if cap >= 1 << 30:
+        return f"{cap / (1 << 30):.1f}G"
+    return f"{cap / (1 << 20):.0f}M"
+
+
 @dataclasses.dataclass
 class GridPoint:
-    """One simulated (policy, threshold, n_devices) configuration."""
+    """One simulated (policy, threshold, n_devices, cap, evict) config."""
 
     policy: str
     threshold: float
     n_devices: int
     report: PolicyReport
+    device_bytes: Optional[int] = None
+    evict: str = "lru"
+
+    @property
+    def config(self) -> Tuple:
+        return (self.policy, self.threshold, self.n_devices,
+                self.device_bytes, self.evict)
 
     @property
     def total_s(self) -> float:
@@ -71,6 +98,10 @@ class GridPoint:
                     "SCILIB_THRESHOLD": _fmt_threshold(self.threshold)}
         if self.n_devices > 1:
             settings["SCILIB_DEVICES"] = str(self.n_devices)
+        if self.device_bytes is not None:
+            settings["SCILIB_DEVICE_BYTES"] = str(self.device_bytes)
+        if self.evict != "lru":
+            settings["SCILIB_EVICT"] = self.evict
         return settings
 
 
@@ -91,44 +122,85 @@ class AutotuneResult:
         """Moved-byte change of the recommendation (negative = less)."""
         return self.best.moved_bytes - self.baseline.moved_bytes
 
+    def recommended_cap(self) -> Optional[GridPoint]:
+        """The tightest swept ``SCILIB_DEVICE_BYTES`` that keeps the
+        best configuration within 2% of its uncapped predicted time —
+        how much device residency this workload actually needs.  None
+        when no capped point stays near (or none was swept)."""
+        twin = [p for p in self.points
+                if p.device_bytes is not None
+                and (p.policy, p.threshold, p.n_devices) ==
+                    (self.best.policy, self.best.threshold,
+                     self.best.n_devices)
+                and p.total_s <= self.best.total_s * 1.02]
+        if not twin:
+            return None
+        return min(twin, key=lambda p: (p.device_bytes, p.total_s))
+
 
 def _simulate(trace: Trace, spec: HardwareSpec, policy: str,
-              threshold: float, n_devices: int) -> GridPoint:
+              threshold: float, n_devices: int,
+              device_bytes: Optional[int] = None,
+              evict: str = "lru") -> GridPoint:
     sim = MemTierSimulator(spec, policy=policy, threshold=threshold,
-                           n_devices=n_devices)
-    return GridPoint(policy, threshold, n_devices, sim.run(trace))
+                           n_devices=n_devices, device_bytes=device_bytes,
+                           evict=evict)
+    return GridPoint(policy, threshold, n_devices, sim.run(trace),
+                     device_bytes, evict)
+
+
+def _cap_grid(device_bytes, baseline: GridPoint) -> List[Optional[int]]:
+    """Resolve the device-bytes sweep.  ``"auto"`` derives candidates
+    from the uncapped baseline replay's peak device residency — the only
+    caps that change anything are the ones below what DFU would use."""
+    if device_bytes is None:
+        return [None]
+    if device_bytes == "auto":
+        peak = baseline.report.device_bytes_peak
+        if not peak:
+            return [None]
+        return [None, peak // 2, peak // 4]
+    caps: List[Optional[int]] = []
+    for c in device_bytes:
+        caps.append(None if not c else int(c))
+    return caps or [None]
 
 
 def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
              policies: Sequence[str] = DEFAULT_POLICIES,
              thresholds: Optional[Sequence[float]] = None,
              device_counts: Sequence[int] = DEFAULT_DEVICE_COUNTS,
+             device_bytes="auto",
+             evicts: Sequence[str] = DEFAULT_EVICTS,
              ) -> AutotuneResult:
     """Sweep the grid and pick the fastest point (moved bytes break ties).
 
     Multi-device replay only exists for the ``dfu`` policy (the runtime's
     tile scheduler never shards the others), so non-dfu policies are
-    swept at one device only.
+    swept at one device only.  Likewise the device-bytes cap and the
+    eviction policy model the runtime's DFU residency store, so only
+    ``dfu`` sweeps them (and eviction policies only matter under a cap).
     """
     if thresholds is None:
         thresholds = thr.threshold_grid(c.n_avg for c in trace)
-    points: List[GridPoint] = []
+    baseline = _simulate(trace, spec, *BASELINE)
+    caps = _cap_grid(device_bytes, baseline)
+    points: List[GridPoint] = [baseline]
     for policy in policies:
         for t in thresholds:
             for nd in device_counts:
                 if nd > 1 and policy != "dfu":
                     continue
-                points.append(_simulate(trace, spec, policy, float(t), nd))
-    baseline = next((p for p in points
-                     if (p.policy, p.threshold, p.n_devices) == BASELINE),
-                    None)
-    if baseline is None:
-        baseline = _simulate(trace, spec, BASELINE[0], BASELINE[1],
-                             BASELINE[2])
-        points.append(baseline)
+                for cap in (caps if policy == "dfu" else [None]):
+                    for ev in (evicts if cap is not None else ["lru"]):
+                        cfg = (policy, float(t), nd, cap, ev)
+                        if cfg == BASELINE:
+                            continue        # already simulated
+                        points.append(_simulate(trace, spec, *cfg))
     # fastest first; among points within 2% of it, least movement wins —
     # a config that moves gigabytes for a sub-noise predicted gain is
-    # not a recommendation
+    # not a recommendation.  Uncapped points precede capped twins in the
+    # list, so an exact tie recommends the simpler configuration.
     fastest = min(p.total_s for p in points)
     near = [p for p in points if p.total_s <= fastest * 1.02]
     best = min(near, key=lambda p: (p.moved_bytes, p.total_s))
@@ -140,15 +212,17 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
 # --------------------------------------------------------------------- #
 def _grid_row(p: GridPoint, mark: str = "") -> str:
     return (f"{p.policy:<9}{_fmt_threshold(p.threshold):>10}"
-            f"{p.n_devices:>6}{p.total_s:>10.4f}"
+            f"{p.n_devices:>6}{_fmt_cap(p.device_bytes):>8}"
+            f"{p.evict:>9}{p.total_s:>10.4f}"
             f"{p.moved_bytes / 1e9:>10.3f}"
             f"{p.report.offloaded_calls:>9}"
-            f"{p.report.host_calls:>6}{mark}")
+            f"{p.report.evictions:>7}{mark}")
 
 
 def format_grid(result: AutotuneResult, top: int = 12) -> str:
-    lines = [f"{'policy':<9}{'threshold':>10}{'ndev':>6}{'pred_s':>10}"
-             f"{'moved_GB':>10}{'offload':>9}{'host':>6}"]
+    lines = [f"{'policy':<9}{'threshold':>10}{'ndev':>6}{'cap':>8}"
+             f"{'evict':>9}{'pred_s':>10}"
+             f"{'moved_GB':>10}{'offload':>9}{'evict#':>7}"]
     ranked = sorted(result.points,
                     key=lambda p: (p.total_s, p.moved_bytes))[:top]
     for p in ranked:
@@ -207,6 +281,14 @@ def format_recommendation(result: AutotuneResult) -> str:
         f"({result.speedup:.2f}x vs baseline), "
         f"{result.best.moved_bytes / 1e9:.3f} GB moved {delta}",
     ]
+    cap = result.recommended_cap()
+    if cap is not None:
+        lines.append(
+            f"  cap: SCILIB_DEVICE_BYTES={cap.device_bytes} "
+            f"(SCILIB_EVICT={cap.evict}) stays within 2% — "
+            f"{cap.report.evictions} evictions, "
+            f"{cap.report.refetched_bytes / 1e9:.3f} GB refetched; "
+            f"the workload needs no more device memory than this")
     if result.best is result.baseline:
         lines.append("  the default configuration is already optimal "
                      "for this workload")
@@ -240,16 +322,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--devices", default=",".join(
         str(d) for d in DEFAULT_DEVICE_COUNTS),
         help="comma list of device counts (dfu only beyond 1)")
+    ap.add_argument("--device-bytes", default="auto",
+                    help="comma list of SCILIB_DEVICE_BYTES caps to "
+                         "sweep (0 = uncapped), or 'auto' to derive "
+                         "fractions of the uncapped replay's peak "
+                         "device residency (dfu only)")
+    ap.add_argument("--evict", default=",".join(DEFAULT_EVICTS),
+                    help="comma list of eviction policies to sweep at "
+                         "each capped point (lru, lfu, refetch)")
     ap.add_argument("--top", type=int, default=12,
                     help="grid rows to print")
     args = ap.parse_args(argv)
 
     trace = Trace.load(args.trace)
     thresholds = _parse_floats(args.thresholds) or None
+    device_bytes = (args.device_bytes if args.device_bytes == "auto"
+                    else _parse_ints(args.device_bytes))
     result = autotune(trace, spec=SPECS[args.spec],
                       policies=tuple(args.policies.split(",")),
                       thresholds=thresholds,
-                      device_counts=_parse_ints(args.devices))
+                      device_counts=_parse_ints(args.devices),
+                      device_bytes=device_bytes,
+                      evicts=tuple(args.evict.split(",")))
     n_sites = len({c.callsite_id for c in trace if c.callsite_id})
     print(f"autotune: {len(result.points)}-point grid, spec={args.spec}, "
           f"{len(trace)} calls, {n_sites} sites, "

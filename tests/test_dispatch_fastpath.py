@@ -259,6 +259,36 @@ def test_batched_einsum_intercepted(spec, ta, tb):
                                atol=1e-4)
 
 
+def test_matmul_benign_kwargs_still_offload():
+    """precision=None / preferred_element_type == operand dtype are
+    no-ops; NumPy-style callers passing them must still hit the offload
+    path instead of bailing to the original symbol."""
+    a_np = _f32((256, 256))
+    with core.offload("dfu", threshold=100) as rt:
+        a = host_array(a_np)
+        out1 = jnp.matmul(a, a, precision=None)
+        out2 = jnp.matmul(a, a, preferred_element_type=jnp.float32)
+        out3 = jnp.dot(a, a, precision=None,
+                       preferred_element_type=jnp.float32)
+        # explicit None defaults (what NumPy-style wrappers forward)
+        jnp.matmul(a, a, precision=None, preferred_element_type=None)
+        st = rt.stats.per_routine["sgemm"]
+        assert st.calls == 4             # all four routed to offload
+        # (uninstrumented may be nonzero from jit-compile pass-throughs
+        # of the kernels themselves — count deltas, not absolutes)
+        before = rt.stats.uninstrumented_calls
+        # a genuine accumulation-type change is NOT benign: fall through
+        out4 = jnp.matmul(a, a, preferred_element_type=jnp.float64)
+        assert st.calls == 4
+        assert rt.stats.uninstrumented_calls == before + 1
+    want = np.asarray(a) @ np.asarray(a)
+    # out4 went through the original symbol (x64 may be disabled, so
+    # dtype promotion is backend-dependent; the routing is what matters)
+    for out in (out1, out2, out3, out4):
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4,
+                                   atol=1e-4)
+
+
 def test_non_gemm_batched_einsum_falls_through():
     a = jnp.asarray(_f32((3, 8, 8)))
     with core.offload("dfu", threshold=10) as rt:

@@ -123,6 +123,42 @@ def test_syrk_tiles_match_single_device(dtype, conj, uplo, trans):
     assert st.sharded == 1 and st.tiles >= 4   # g=3: 6 stored-tri tiles
 
 
+@pytest.mark.parametrize("dtype,conj", [("float32", False),
+                                        ("complex64", False),
+                                        ("complex64", True)])
+@pytest.mark.parametrize("uplo,trans", [("L", "N"), ("U", "T")])
+def test_syr2k_tiles_match_single_device(dtype, conj, uplo, trans):
+    """syr2k/her2k ride the syrk triangle grid (the last level-3 gap in
+    the tile scheduler): sharded result must match the single-device
+    path bit-for-bit in structure and within tolerance in values."""
+    a_np, b_np, c_np = _mat(360, dtype), _mat(360, dtype), _mat(360, dtype)
+    routine = blas.her2k if conj else blas.syr2k
+
+    def fn():
+        return routine(host_array(a_np), host_array(b_np),
+                       host_array(c_np), uplo=uplo, trans=trans,
+                       alpha=1.25, beta=0.75)
+
+    ref, got, rt = _single_then_sharded(fn)
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+    pre = "s" if dtype == "float32" else "c"
+    st = rt.stats.per_routine[pre + ("her2k" if conj else "syr2k")]
+    assert st.sharded == 1 and st.tiles >= 4   # g=3: 6 stored-tri tiles
+    assert len(rt.stats.per_device) == 4
+
+
+def test_syr2k_no_c_tiles_match_single_device():
+    a_np, b_np = _mat(360), _mat(360)
+
+    def fn():
+        return blas.syr2k(host_array(a_np), host_array(b_np), uplo="L",
+                          alpha=0.5)
+
+    ref, got, rt = _single_then_sharded(fn)
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+    assert rt.stats.per_routine["ssyr2k"].sharded == 1
+
+
 @pytest.mark.parametrize("dtype", ["float32", "complex64"])
 @pytest.mark.parametrize("side", ["L", "R"])
 def test_trsm_tiles_match_single_device(dtype, side):

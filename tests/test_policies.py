@@ -25,7 +25,10 @@ def test_threshold_below_stays_host():
     assert rt.stats.per_routine["sgemm"].on_host == 1
 
 
-def test_dfu_migrates_once_and_reuses():
+def test_dfu_migrates_once_and_reuses(monkeypatch):
+    # asserts uncapped move-once semantics: pin the cap off so the CI
+    # eviction-stress job's global SCILIB_DEVICE_BYTES can't evict here
+    monkeypatch.delenv("SCILIB_DEVICE_BYTES", raising=False)
     with core.offload("dfu", threshold=100) as rt:
         a = host_array(RNG.standard_normal((512, 512)).astype("float32"))
         b = host_array(RNG.standard_normal((512, 512)).astype("float32"))

@@ -1,0 +1,430 @@
+"""The residency engine: ResidencyStore invariants (property-tested),
+eviction policies, pinning, refetch accounting, PR3-HEAD behavior
+identity in lru mode, residency events in the trace, and the
+live-capped-run vs simulator-replay eviction-count match the autotuner
+relies on."""
+import gc
+import os
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import blas
+from repro.core import runtime as rtm
+from repro.core.policy import host_array
+from repro.core.residency import (EVICTION_POLICIES, ResidencyStore,
+                                  evict_policy_from_env, pin_all_from_env)
+from repro.core.trace import Trace
+from repro.memtier.simulator import MemTierSimulator, replay_trace
+
+RNG = np.random.default_rng(21)
+
+MINI_TRACE = os.path.join(os.path.dirname(__file__), "data",
+                          "mini_trace.json")
+
+
+def _f32(shape):
+    return RNG.standard_normal(shape).astype("float32")
+
+
+# --------------------------------------------------------------------- #
+# store unit behavior                                                    #
+# --------------------------------------------------------------------- #
+def test_lru_eviction_order_matches_pre_refactor_semantics():
+    """lru mode must reproduce the old OrderedDict registries exactly:
+    evict from the front, newest registration protected, a get() hit
+    refreshes recency."""
+    s = ResidencyStore("t", cap=300, policy="lru")
+    s.put("a", "A", 100)
+    s.put("b", "B", 100)
+    s.put("c", "C", 100)
+    assert s.evictions == 0
+    s.get("a")                       # refresh: b is now LRU
+    s.put("d", "D", 100)             # over cap: b evicted, not a
+    assert s.evictions == 1
+    assert "b" not in s and "a" in s and "d" in s
+    assert s.resident_bytes == 300
+
+
+def test_oversized_entry_admitted_once():
+    """The just-registered entry is protected: one oversized buffer is
+    admitted (evicting everyone else) and the next registration pushes
+    it out — the old _evict_over_cap contract."""
+    s = ResidencyStore("t", cap=100, policy="lru")
+    s.put("small", "S", 80)
+    s.put("big", "B", 500)
+    assert "big" in s and "small" not in s
+    assert s.resident_bytes == 500   # over cap, but protected
+    s.put("next", "N", 80)
+    assert "big" not in s and "next" in s
+
+
+def test_lfu_evicts_least_used():
+    s = ResidencyStore("t", cap=300, policy="lfu")
+    s.put("a", "A", 100)
+    s.put("b", "B", 100)
+    s.put("c", "C", 100)
+    s.get("a"), s.get("a"), s.get("c")
+    s.put("d", "D", 100)             # b has 0 uses -> victim
+    assert "b" not in s and "a" in s and "c" in s
+
+
+def test_refetch_policy_evicts_cheapest_bytes_per_use():
+    """Cost-aware: the victim is the entry with the smallest
+    nbytes/uses — a big block used once outlives a small hot one only
+    if re-fetching the small one is cheaper per use."""
+    s = ResidencyStore("t", cap=1000, policy="refetch")
+    s.put("big_once", "X", 800)              # 800 B / 1 use = 800
+    s.put("small_hot", "Y", 100)
+    for _ in range(9):
+        s.get("small_hot")                   # 100 B / 10 uses = 10
+    s.get("big_once")
+    s.put("new", "Z", 200)                   # small_hot is cheapest
+    assert "small_hot" not in s and "big_once" in s
+
+
+def test_pinned_entries_survive_pressure():
+    s = ResidencyStore("t", cap=200, policy="lru")
+    s.put("p", "P", 150, pinned=True)
+    for i in range(10):
+        s.put(f"x{i}", "X", 150)
+    assert "p" in s                  # survived ten rounds of pressure
+    assert s.entry("p").pinned
+    s.unpin("p")
+    s.put("y", "Y", 150)
+    assert "p" not in s              # unpinned: evictable again
+
+
+def test_refetch_counters_track_evicted_then_replaced():
+    s = ResidencyStore("t", cap=100, policy="lru")
+    s.put("a", "A", 80)
+    s.put("b", "B", 80)              # a evicted
+    assert s.evictions == 1
+    s.put("a", "A", 80)              # refetch of a
+    assert s.refetches == 1 and s.refetched_bytes == 80
+    s.put("fresh", "F", 80)          # b evicted... then a fresh place
+    assert s.refetches == 1          # fresh was never evicted
+
+
+def test_reserve_refusal_semantics():
+    """The simulator's HBM-capacity admission: refuse (not thrash) when
+    eviction is off, make room when it is on."""
+    s = ResidencyStore("t", policy="lru")
+    s.put("a", "A", 80)
+    assert not s.reserve(50, limit=100, evict=False)
+    assert "a" in s                  # refusal evicted nothing
+    assert s.reserve(50, limit=100, evict=True)
+    assert "a" not in s and s.evictions == 1
+    assert not s.reserve(500, limit=100)     # can never fit: refused
+
+
+def test_weakref_lifecycle_drops_entries():
+    class Anchor:
+        pass
+    s = ResidencyStore("t")
+    a = Anchor()
+    s.put(id(a), "payload", 64, anchor=a)
+    assert s.resident_bytes == 64
+    del a
+    gc.collect()
+    assert len(s) == 0 and s.resident_bytes == 0
+
+
+def test_env_knob_parsing(monkeypatch):
+    monkeypatch.setenv("SCILIB_EVICT", "refetch")
+    assert evict_policy_from_env() == "refetch"
+    monkeypatch.setenv("SCILIB_EVICT", "typo")
+    assert evict_policy_from_env() == "lru"   # unknown: safe default
+    monkeypatch.setenv("SCILIB_PIN", "never-evict")
+    assert pin_all_from_env()
+    monkeypatch.delenv("SCILIB_PIN")
+    assert not pin_all_from_env()
+    assert sorted(EVICTION_POLICIES) == ["lfu", "lru", "refetch"]
+
+
+# --------------------------------------------------------------------- #
+# property tests (hypothesis optional: unit + integration tests above   #
+# and below must run even where it is not installed)                     #
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    ops = st.lists(
+        st.tuples(st.integers(0, 7),             # key
+                  st.integers(1, 100),           # nbytes (<= cap)
+                  st.booleans()),                # get-after-put?
+        min_size=1, max_size=60)
+
+    @given(ops=ops, policy=st.sampled_from(sorted(EVICTION_POLICIES)))
+    @settings(max_examples=60, deadline=None)
+    def test_resident_bytes_never_exceed_cap(ops, policy):
+        """With every entry no larger than the cap and no pins, the
+        store is never over cap after any put (the protected entry
+        fits, so the sweep always gets back under)."""
+        cap = 100
+        s = ResidencyStore("t", cap=cap, policy=policy)
+        for key, nbytes, touch in ops:
+            s.put(key, f"p{key}", nbytes)
+            assert s.resident_bytes <= cap
+            assert sum(s.entry(k).nbytes
+                       for k in s.keys()) == s.resident_bytes
+            if touch:
+                assert s.get(key) == f"p{key}"
+
+    @given(ops=ops, policy=st.sampled_from(sorted(EVICTION_POLICIES)),
+           pinned_key=st.integers(100, 101))
+    @settings(max_examples=60, deadline=None)
+    def test_pins_survive_arbitrary_pressure(ops, policy, pinned_key):
+        cap = 100
+        s = ResidencyStore("t", cap=cap, policy=policy)
+        s.put(pinned_key, "PIN", 60, pinned=True)
+        for key, nbytes, touch in ops:
+            s.put(key, f"p{key}", nbytes)
+            assert pinned_key in s
+            # unpinned residency still honors the cap up to the
+            # protected entry (which may exceed the headroom by itself)
+            unpinned = [s.entry(k) for k in s.keys()
+                        if not s.entry(k).pinned]
+            if len(unpinned) > 1:
+                assert s.resident_bytes <= cap + max(e.nbytes
+                                                     for e in unpinned)
+        assert s.get(pinned_key) == "PIN"
+else:                                            # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_resident_bytes_never_exceed_cap():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_pins_survive_arbitrary_pressure():
+        pass
+
+
+# --------------------------------------------------------------------- #
+# runtime integration                                                    #
+# --------------------------------------------------------------------- #
+def _capped_workload(cap_mats, n=128, mats=5, reps=3, **install_kw):
+    """The scripted capped DFU workload whose PR3-HEAD counters are the
+    identity baseline: round-robin gemms over `mats` buffers under a
+    cap of `cap_mats` matrices."""
+    nbytes = n * n * 4
+    rng = np.random.default_rng(42)
+    rt = rtm.install("dfu", threshold=10,
+                     device_bytes=cap_mats * nbytes, **install_kw)
+    try:
+        xs = [host_array(rng.standard_normal((n, n)).astype("float32"))
+              for _ in range(mats)]
+        outs = []
+        for _ in range(reps):
+            for x in xs:
+                outs.append(blas.gemm(x, x))
+        rt.sync()
+        return rt, xs, outs
+    finally:
+        rtm.uninstall()
+
+
+def test_lru_counters_match_pr3_head_live():
+    """Golden identity: with SCILIB_EVICT=lru and no pins the refactored
+    runtime's decisions and eviction counters are exactly what PR3 HEAD
+    produced on this workload (captured before the refactor)."""
+    rt, xs, outs = _capped_workload(2, record_trace=False)
+    st = rt.stats.per_routine["sgemm"]
+    assert rt.stats.evictions == 28
+    assert rt.stats.evicted_bytes == 1835008
+    assert st.bytes_in == 983040
+    assert (st.cache_hits, st.cache_misses) == (15, 15)
+    assert (st.offloaded, st.on_host) == (15, 0)
+    # anchors (xs/outs) still alive here, so no lifecycle drops yet
+    assert rt.resident_bytes() == 131072
+    del xs, outs
+    rt, xs, outs = _capped_workload(3, record_trace=False)
+    assert rt.stats.evictions == 27
+    assert rt.stats.evicted_bytes == 1769472
+
+
+def test_lru_replay_matches_pr3_head_on_mini_trace():
+    """Golden identity for the simulator half: the uncapped lru replay
+    of the bundled mini trace reproduces PR3 HEAD's Tables-3/5 numbers
+    for every policy (captured before the refactor)."""
+    reports = replay_trace(Trace.load(MINI_TRACE), threshold=500.0)
+    want = {
+        "cpu": (0.0, 0, 40),
+        "memcopy": (1925760000, 30, 10),
+        "counter": (54460416, 30, 10),
+        "dfu": (822804480, 30, 10),
+        "pinned": (0, 30, 10),
+    }
+    for policy, (h2d, off, host) in want.items():
+        r = reports[policy]
+        assert r.bytes_host_to_dev == h2d, policy
+        assert (r.offloaded_calls, r.host_calls) == (off, host), policy
+        assert r.evictions == 0, policy       # uncapped: engine is idle
+    assert abs(reports["dfu"].total_s - 0.026482285318641288) < 1e-12
+    assert abs(reports["pinned"].total_s - 0.008685036968682825) < 1e-12
+
+
+def test_live_capped_run_matches_simulator_replay():
+    """The acceptance loop: a live capped run records residency events;
+    replaying its trace through the simulator at the same cap and
+    eviction policy reproduces the eviction AND refetch counts — live
+    and simulation share one accounting implementation."""
+    cap = 2 * 128 * 128 * 4
+    rt, _, _ = _capped_workload(2, record_trace=True)
+    trace = rt.trace
+    assert rt.stats.evictions == trace.event_count("evict") == 28
+    assert rt.stats.refetches == trace.event_count("refetch") == 10
+    rep = MemTierSimulator(policy="dfu", threshold=10,
+                           device_bytes=cap, evict="lru").run(trace)
+    assert rep.evictions == rt.stats.evictions
+    assert rep.refetches == rt.stats.refetches
+    assert rep.device_bytes == cap and rep.evict == "lru"
+
+
+def test_live_capped_match_with_written_operands():
+    """The count-for-count guarantee must hold for routines whose
+    output aliases a written operand (syrk's C): the live registry
+    keeps both the operand's placed copy and the output entry, and the
+    replay mirrors that with a synthetic twin of the same size."""
+    cap = 2 * 128 * 128 * 4
+    rng = np.random.default_rng(42)
+    rt = rtm.install("dfu", threshold=10, record_trace=True,
+                     device_bytes=cap)
+    try:
+        xs = [host_array(rng.standard_normal((128, 128))
+                         .astype("float32")) for _ in range(5)]
+        outs = []
+        for _ in range(3):
+            for x in xs:
+                outs.append(blas.syrk(x, x))
+        rt.sync()
+    finally:
+        rtm.uninstall()
+    rep = MemTierSimulator(policy="dfu", threshold=10,
+                           device_bytes=cap, evict="lru").run(rt.trace)
+    assert rep.evictions == rt.stats.evictions == 28
+    assert rep.refetches == rt.stats.refetches == 10
+
+
+def test_trace_events_roundtrip(tmp_path):
+    rt, _, _ = _capped_workload(2, record_trace=True)
+    path = str(tmp_path / "trace.json")
+    rt.trace.dump(path)
+    loaded = Trace.load(path)
+    assert len(loaded.events) == len(rt.trace.events)
+    assert loaded.event_count("evict") == rt.trace.event_count("evict")
+    assert loaded.events[0] == rt.trace.events[0]
+    # calls carry the fresh-output buffer for replay accounting
+    assert all(c.out_buf > 0 and c.out_nbytes == 128 * 128 * 4
+               for c in loaded.calls)
+
+
+def test_pin_survives_pressure_live():
+    """runtime.pin(x): the pinned placement outlives arbitrary cap
+    pressure and keeps serving hits."""
+    nbytes = 128 * 128 * 4
+    rt = rtm.install("dfu", threshold=10, record_trace=False,
+                     device_bytes=2 * nbytes)
+    try:
+        hot = host_array(_f32((128, 128)))
+        rt.pin(hot)
+        for _ in range(6):
+            blas.gemm(host_array(_f32((128, 128))),
+                      host_array(_f32((128, 128))))
+        st = rt.stats.per_routine["sgemm"]
+        before_in = st.bytes_in
+        blas.gemm(hot, hot)
+        # both operand lookups hit the pinned placement: nothing moved
+        assert st.bytes_in == before_in
+        assert rt.stats.evictions > 0         # pressure was real
+    finally:
+        rtm.uninstall()
+
+
+def test_pin_env_never_evict(monkeypatch):
+    """SCILIB_PIN=never-evict pins every placement: the cap stops
+    evicting entirely (residency only grows, the paper's plain DFU)."""
+    monkeypatch.setenv("SCILIB_PIN", "never-evict")
+    rt, _, _ = _capped_workload(2, record_trace=False)
+    assert rt.stats.evictions == 0
+    assert rt.resident_bytes() > rt.placements.cap
+
+
+def test_post_eviction_refetch_bit_identical():
+    """An evicted-then-refetched operand must produce bit-identical
+    results — eviction is an accounting event, never a data hazard."""
+    nbytes = 128 * 128 * 4
+    a_np = _f32((128, 128))
+    with core.offload("dfu", threshold=10) as rt:
+        a = host_array(a_np)
+        want = np.asarray(blas.gemm(a, a))
+    rt = rtm.install("dfu", threshold=10, record_trace=False,
+                     device_bytes=2 * nbytes)
+    try:
+        a = host_array(a_np)
+        first = np.asarray(blas.gemm(a, a))
+        for _ in range(4):                    # flush a out of residency
+            blas.gemm(host_array(_f32((128, 128))),
+                      host_array(_f32((128, 128))))
+        assert id(a) not in rt.placements     # it was really evicted
+        again = np.asarray(blas.gemm(a, a))   # refetch
+        np.testing.assert_array_equal(first, again)
+        np.testing.assert_array_equal(first, want)
+        assert rt.stats.refetches >= 1
+    finally:
+        rtm.uninstall()
+
+
+def test_evict_env_selects_policy(monkeypatch):
+    monkeypatch.setenv("SCILIB_EVICT", "refetch")
+    rt = rtm.install("dfu", threshold=10, record_trace=False,
+                     device_bytes=1 << 20)
+    try:
+        assert rt.evict_policy == "refetch"
+        assert rt.placements.policy.name == "refetch"
+        assert all(s.policy.name == "refetch" for s in rt.block_stores)
+    finally:
+        rtm.uninstall()
+
+
+# --------------------------------------------------------------------- #
+# autotune sweep over cap x eviction policy                              #
+# --------------------------------------------------------------------- #
+def test_autotune_sweeps_cap_and_evict_dimensions():
+    from repro.tools import autotune as at
+    trace = Trace.load(MINI_TRACE)
+    result = at.autotune(trace)
+    caps = {p.device_bytes for p in result.points}
+    evicts = {p.evict for p in result.points}
+    assert len(caps) >= 3                 # None + auto-derived fractions
+    assert evicts == {"lru", "lfu", "refetch"}
+    # the original acceptance invariants survive the wider grid
+    assert result.speedup > 1.5
+    assert result.best.moved_bytes < result.baseline.moved_bytes
+    # env rendering includes the new knobs on capped points
+    capped = next(p for p in result.points
+                  if p.device_bytes is not None and p.evict != "lru")
+    env = capped.env()
+    assert env["SCILIB_DEVICE_BYTES"] == str(capped.device_bytes)
+    assert env["SCILIB_EVICT"] == capped.evict
+
+
+def test_autotune_replayed_evictions_match_live_capped_run():
+    """End-to-end acceptance: record a live capped run, hand its trace
+    to the autotuner sweeping the same cap — the grid point at the live
+    configuration reports the same eviction count the live run paid."""
+    from repro.tools import autotune as at
+    cap = 2 * 128 * 128 * 4
+    rt, _, _ = _capped_workload(2, record_trace=True)
+    live_evictions = rt.stats.evictions
+    result = at.autotune(rt.trace, thresholds=(10.0,),
+                         policies=("dfu",), device_counts=(1,),
+                         device_bytes=(0, cap), evicts=("lru",))
+    point = next(p for p in result.points
+                 if p.device_bytes == cap and p.evict == "lru"
+                 and p.threshold == 10.0 and p.n_devices == 1)
+    assert point.report.evictions == live_evictions == 28
