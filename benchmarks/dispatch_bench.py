@@ -9,24 +9,25 @@ cached) runtime, on the two workloads the tentpole targets.
 * ``dfuchain`` — a 100-call chained DFU workload (``C = A @ C``) above
   the threshold: placement-registry hits plus async submission.
 * ``shardscale`` — the same chained workload under the multi-device
-  tile scheduler (``SCILIB_DEVICES`` in 1/2/4): tiles/sec, per-device
+  tile scheduler (``devices`` in 1/2/4): tiles/sec, per-device
   moved bytes and byte-cap eviction counters.  On this CPU container
   every logical device tier shares one physical CPU, so the numbers
   measure scheduler overhead and movement accounting, not speedup.
-* ``adaptive`` — the small-gemm loop under ``SCILIB_ADAPTIVE=1``: the
+* ``adaptive`` — the small-gemm loop under ``adaptive=True``: the
   per-site warmup probes both paths, locks, and steady state should
   approach the fast path (the lock costs two dict hops per call).
 * ``evict`` — eviction pressure: a round-robin working set sized at
-  2x ``SCILIB_DEVICE_BYTES``, run once per eviction policy
-  (``SCILIB_EVICT`` in lru/lfu/refetch).  Reports calls/sec plus the
+  2x the ``device_bytes`` cap, run once per eviction policy
+  (``evict`` in lru/lfu/refetch).  Reports calls/sec plus the
   refetched GB the cap cost — how each policy's victim choice trades
   throughput against link traffic under constant pressure.
 
-Modes are selected with the runtime's own knobs so the comparison runs
+Modes are selected with the runtime's own knobs — typed
+``OffloadConfig`` objects, no env mutation — so the comparison runs
 the *same* code path the library ships:
 
-* seed: ``SCILIB_SYNC=1`` + ``SCILIB_DISPATCH_CACHE=0`` (per-call
-  blocking + per-call re-derivation, the seed's behaviour),
+* seed: ``sync=True`` + ``dispatch_cache=False`` (per-call blocking +
+  per-call re-derivation, the seed's behaviour),
 * fast: the defaults (async + dispatch cache).
 
     PYTHONPATH=src python -m benchmarks.dispatch_bench
@@ -65,20 +66,19 @@ EVICT_CALLS = EVICT_PHASES * (3 * EVICT_HOT + EVICT_COLD)
 REPS = 1 if _QUICK else 3
 
 
-def _install(mode: str):
-    from repro.core import runtime as rtm
-    os.environ.pop("SCILIB_ADAPTIVE", None)
-    if mode == "seed":
-        os.environ["SCILIB_SYNC"] = "1"
-        os.environ["SCILIB_DISPATCH_CACHE"] = "0"
-    else:
-        os.environ.pop("SCILIB_SYNC", None)
-        os.environ["SCILIB_DISPATCH_CACHE"] = "1"
-        if mode == "adaptive":
-            os.environ["SCILIB_ADAPTIVE"] = "1"
+def _mode_config(mode: str, **fields):
+    """The typed config for one benchmark mode (plus extra fields);
+    resets the blas-level caches so reps start cold."""
     from repro.core import blas
+    from repro.core.config import OffloadConfig
     blas.clear_caches()
-    return rtm
+    if mode == "seed":
+        base = OffloadConfig(sync=True, dispatch_cache=False)
+    elif mode == "adaptive":
+        base = OffloadConfig(adaptive=True)
+    else:
+        base = OffloadConfig()
+    return base.replace(**fields)
 
 
 def _sweep(fn, runtime, calls: int) -> float:
@@ -93,11 +93,12 @@ def _sweep(fn, runtime, calls: int) -> float:
 
 
 def _bench_smallgemm(mode: str) -> float:
-    rtm = _install(mode)
     from repro.core import blas
+    from repro.core import runtime as rtm
     from repro.core.policy import host_array
     rng = np.random.default_rng(0)
-    rt = rtm.install("dfu", record_trace=False)   # default threshold: host
+    # default threshold: every call stays host
+    rt = rtm.install(config=_mode_config(mode), record_trace=False)
     try:
         a = host_array(rng.standard_normal((SMALL_N, SMALL_N))
                        .astype("float32"))
@@ -114,11 +115,12 @@ def _bench_smallgemm(mode: str) -> float:
 
 
 def _bench_dfuchain(mode: str) -> float:
-    rtm = _install(mode)
     from repro.core import blas
+    from repro.core import runtime as rtm
     from repro.core.policy import host_array
     rng = np.random.default_rng(1)
-    rt = rtm.install("dfu", threshold=100, record_trace=False)
+    rt = rtm.install(config=_mode_config(mode, threshold=100.0),
+                     record_trace=False)
     try:
         a = host_array(rng.standard_normal((CHAIN_N, CHAIN_N))
                        .astype("float32") / CHAIN_N)
@@ -135,16 +137,16 @@ def _bench_dfuchain(mode: str) -> float:
 
 
 def _bench_shardscale(n_dev: int) -> Tuple[float, float, int, int]:
-    """Chained DFU gemms under SCILIB_DEVICES=n_dev with a per-device
+    """Chained DFU gemms under ``devices=n_dev`` with a per-device
     byte cap sized to put the block LRU under pressure.  Returns
     (calls/sec, tiles/sec, evictions, moved bytes) summed over devices."""
-    rtm = _install("fast")
-    os.environ["SCILIB_DEVICES"] = str(n_dev)
-    os.environ["SCILIB_DEVICE_BYTES"] = str(3 * SHARD_N * SHARD_N * 4)
     from repro.core import blas
+    from repro.core import runtime as rtm
     from repro.core.policy import host_array
     rng = np.random.default_rng(2)
-    rt = rtm.install("dfu", threshold=100, record_trace=False)
+    rt = rtm.install(config=_mode_config(
+        "fast", threshold=100.0, devices=n_dev,
+        device_bytes=3 * SHARD_N * SHARD_N * 4), record_trace=False)
     try:
         a = host_array(rng.standard_normal((SHARD_N, SHARD_N))
                        .astype("float32") / SHARD_N)
@@ -163,23 +165,21 @@ def _bench_shardscale(n_dev: int) -> Tuple[float, float, int, int]:
         return cps, cps * tiles_per_call, evs, moved
     finally:
         rtm.uninstall()
-        os.environ.pop("SCILIB_DEVICES", None)
-        os.environ.pop("SCILIB_DEVICE_BYTES", None)
 
 
 def _bench_eviction(evict_policy: str) -> Tuple[float, int, int]:
-    """Round-robin gemms over a working set 2x SCILIB_DEVICE_BYTES:
-    constant cap pressure, every policy choosing different victims.
+    """Round-robin gemms over a working set 2x the ``device_bytes``
+    cap: constant pressure, every policy choosing different victims.
     Returns (calls/sec, evictions, refetched bytes) summed over reps."""
-    rtm = _install("fast")
+    from repro.core import blas
+    from repro.core import runtime as rtm
+    from repro.core.policy import host_array
     working = (EVICT_HOT * EVICT_HOT_N ** 2
                + EVICT_COLD * EVICT_COLD_N ** 2) * 4
-    os.environ["SCILIB_DEVICE_BYTES"] = str(working // 2)
-    os.environ["SCILIB_EVICT"] = evict_policy
-    from repro.core import blas
-    from repro.core.policy import host_array
     rng = np.random.default_rng(5)
-    rt = rtm.install("dfu", threshold=100, record_trace=False)
+    rt = rtm.install(config=_mode_config(
+        "fast", threshold=100.0, device_bytes=working // 2,
+        evict=evict_policy), record_trace=False)
     try:
         hot = [host_array(rng.standard_normal((EVICT_HOT_N, EVICT_HOT_N))
                           .astype("float32")) for _ in range(EVICT_HOT)]
@@ -199,18 +199,17 @@ def _bench_eviction(evict_policy: str) -> Tuple[float, int, int]:
         return cps, rt.stats.evictions, rt.stats.refetched_bytes
     finally:
         rtm.uninstall()
-        os.environ.pop("SCILIB_DEVICE_BYTES", None)
-        os.environ.pop("SCILIB_EVICT", None)
 
 
 def _record_chain_trace(path: str) -> None:
     """Run the dfuchain workload with trace recording on and dump the
     trace for the autotuner walkthrough (docs/PERF.md)."""
-    rtm = _install("fast")
     from repro.core import blas
+    from repro.core import runtime as rtm
     from repro.core.policy import host_array
     rng = np.random.default_rng(3)
-    rt = rtm.install("dfu", threshold=100, record_trace=True)
+    rt = rtm.install(config=_mode_config("fast", threshold=100.0),
+                     record_trace=True)
     try:
         a = host_array(rng.standard_normal((CHAIN_N, CHAIN_N))
                        .astype("float32") / CHAIN_N)
@@ -226,23 +225,14 @@ def _record_chain_trace(path: str) -> None:
 
 def bench() -> List[Row]:
     rows: List[Row] = []
-    saved = {k: os.environ.get(k)
-             for k in ("SCILIB_SYNC", "SCILIB_DISPATCH_CACHE",
-                       "SCILIB_DEVICES", "SCILIB_DEVICE_BYTES",
-                       "SCILIB_ADAPTIVE", "SCILIB_EVICT")}
-    try:
-        small = {m: _bench_smallgemm(m)
-                 for m in ("seed", "fast", "adaptive")}
-        chain = {m: _bench_dfuchain(m) for m in ("seed", "fast")}
-        shard = {n: _bench_shardscale(n) for n in (1, 2, 4)}
-        evict = {p: _bench_eviction(p)
-                 for p in ("lru", "lfu", "refetch")}
-    finally:
-        for k, v in saved.items():
-            if v is None:
-                os.environ.pop(k, None)
-            else:
-                os.environ[k] = v
+    # each bench builds its own typed OffloadConfig: no env mutation,
+    # nothing to save/restore
+    small = {m: _bench_smallgemm(m)
+             for m in ("seed", "fast", "adaptive")}
+    chain = {m: _bench_dfuchain(m) for m in ("seed", "fast")}
+    shard = {n: _bench_shardscale(n) for n in (1, 2, 4)}
+    evict = {p: _bench_eviction(p)
+             for p in ("lru", "lfu", "refetch")}
     rows.append(("dispatch.smallgemm64.seed_cps", round(small["seed"], 0),
                  "sync + uncached (seed runtime)"))
     rows.append(("dispatch.smallgemm64.fast_cps", round(small["fast"], 0),
@@ -252,7 +242,7 @@ def bench() -> List[Row]:
                  "acceptance: >= 2x"))
     rows.append(("dispatch.smallgemm64.adaptive_cps",
                  round(small["adaptive"], 0),
-                 "SCILIB_ADAPTIVE=1: warmup probes + locked steady state"))
+                 "adaptive=True: warmup probes + locked steady state"))
     rows.append(("dispatch.dfuchain100.seed_cps", round(chain["seed"], 0),
                  "sync + uncached (seed runtime)"))
     rows.append(("dispatch.dfuchain100.fast_cps", round(chain["fast"], 0),
@@ -262,7 +252,7 @@ def bench() -> List[Row]:
                  "chained DFU workload"))
     for n, (cps, tps, evs, moved) in sorted(shard.items()):
         rows.append((f"dispatch.shard.gemm512.d{n}_cps", round(cps, 0),
-                     f"chained gemm, SCILIB_DEVICES={n}"))
+                     f"chained gemm, devices={n}"))
         rows.append((f"dispatch.shard.gemm512.d{n}_tiles_ps",
                      round(tps, 0),
                      "tile kernels/sec across device tiers"))
@@ -273,7 +263,7 @@ def bench() -> List[Row]:
                      "block bytes moved to device tiers (summed)"))
     for pol, (cps, evs, refetched) in evict.items():
         rows.append((f"dispatch.evict.mixed.{pol}_cps", round(cps, 0),
-                     f"working set 2x cap, SCILIB_EVICT={pol}"))
+                     f"working set 2x cap, evict={pol}"))
         rows.append((f"dispatch.evict.mixed.{pol}_evictions", evs,
                      "cap-pressure evictions (all reps)"))
         rows.append((f"dispatch.evict.mixed.{pol}_refetched_gb",

@@ -1,0 +1,54 @@
+"""SCILIB-Accel reproduction: automatic BLAS offload as a library.
+
+The public surface is the session API:
+
+    import repro
+    from repro import OffloadConfig
+
+    with repro.session(OffloadConfig.preset("throughput")) as s:
+        ...                       # jnp.dot/matmul/einsum intercepted
+        print(s.report())
+
+``repro.session(...)`` opens a :class:`repro.core.session.Session` —
+a first-class object owning its runtime, interceptors, statistics and
+trace, configured by a typed :class:`repro.core.config.OffloadConfig`
+instead of ambient ``SCILIB_*`` env vars (which remain supported: they
+layer over the defaults through ``OffloadConfig.from_env()``, the one
+env-ingestion boundary).  Sessions nest; the legacy
+``install()``/``uninstall()``/``offload()`` surface is a shim over an
+implicit default session.
+
+Attributes are resolved lazily so ``import repro`` stays cheap: nothing
+(including jax) is imported until the first attribute access.
+"""
+from typing import TYPE_CHECKING
+
+__all__ = ["OffloadConfig", "Session", "session", "active_session",
+           "install", "uninstall", "offload", "core"]
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.config import OffloadConfig
+    from repro.core.session import Session, active_session, session
+
+_CONFIG_NAMES = ("OffloadConfig",)
+_SESSION_NAMES = ("Session", "session", "active_session")
+_LEGACY_NAMES = ("install", "uninstall", "offload")
+
+
+def __getattr__(name: str):
+    import importlib
+    if name in _CONFIG_NAMES:
+        return getattr(importlib.import_module("repro.core.config"), name)
+    if name in _SESSION_NAMES:
+        return getattr(importlib.import_module("repro.core.session"), name)
+    if name in _LEGACY_NAMES:
+        from repro.core import intercept as _intercept
+        return getattr(_intercept, name)
+    if name == "core":
+        import repro.core as _core
+        return _core
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -19,15 +19,27 @@ Public surface:
   capped, policy-evicting, pinnable block store behind the runtime's
   registries and the memtier simulator (``SCILIB_EVICT``,
   ``SCILIB_PIN``; :func:`pin`/:func:`unpin` pin live buffers).
+* :mod:`repro.core.config` — :class:`OffloadConfig`: every knob as a
+  typed, validated, serializable field; ``from_env()`` is the single
+  ``SCILIB_*`` ingestion boundary.
+* :mod:`repro.core.session` — :class:`Session`: a first-class offload
+  stack (runtime + interceptors + trace) per workload; sessions nest,
+  and ``install``/``uninstall``/``offload`` above are shims over an
+  implicit default session.
 """
 from repro.core import blas, callsite, lapack, memspace, residency
+from repro.core.config import OffloadConfig
 from repro.core.intercept import install, offload, uninstall
 from repro.core.policy import host_array
 from repro.core.residency import ResidencyStore
 from repro.core.runtime import OffloadRuntime, active, pin, unpin
+# NOTE: the session() helper is NOT re-exported here — that name is the
+# repro.core.session submodule; the helper lives at the top level as
+# repro.session().
+from repro.core.session import Session, active_session
 from repro.core.trace import BlasCall, Trace
 
 __all__ = ["blas", "callsite", "lapack", "memspace", "residency",
            "install", "offload", "uninstall", "OffloadRuntime", "active",
            "BlasCall", "Trace", "host_array", "ResidencyStore",
-           "pin", "unpin"]
+           "pin", "unpin", "OffloadConfig", "Session", "active_session"]

@@ -17,7 +17,6 @@ from __future__ import annotations
 import functools
 import math
 import operator
-import os
 from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
@@ -52,16 +51,22 @@ def routine_name(base: str, dtype) -> str:
 # hit these tables instead and re-derive nothing; ``SCILIB_DISPATCH_CACHE  #
 # =0`` restores the per-call re-derivation for A/B benchmarking.           #
 # ----------------------------------------------------------------------- #
-_CACHE_ON = os.environ.get("SCILIB_DISPATCH_CACHE", "1") != "0"
-_SCALARS: Dict[Tuple, jax.Array] = {}
+_CACHE_ON = True        # re-resolved at import (module bottom) and on
+_SCALARS: Dict[Tuple, jax.Array] = {}   # every runtime construction
 _BOUND: Dict[Hashable, Callable] = {}
 _CACHE_LIMIT = 4096
 
 
-def refresh_cache_flag() -> None:
-    """Re-read SCILIB_DISPATCH_CACHE (called from runtime.install)."""
+def refresh_cache_flag(enabled: Optional[bool] = None) -> None:
+    """Sync the module-level cache flag with the owning config's
+    ``dispatch_cache`` field (called from runtime construction /
+    reconfigure).  With no argument, re-resolves through the config
+    env boundary — the dlsym-mode path with no runtime installed."""
     global _CACHE_ON
-    _CACHE_ON = os.environ.get("SCILIB_DISPATCH_CACHE", "1") != "0"
+    if enabled is None:
+        from repro.core.config import OffloadConfig
+        enabled = OffloadConfig.from_env().dispatch_cache
+    _CACHE_ON = bool(enabled)
 
 
 def clear_caches() -> None:
@@ -355,11 +360,10 @@ def _trsm_kernel(a, b, alpha, *, side, uplo, trans, diag):
 # (``SCILIB_TILE_MIN``), which falls back to the single-device path.       #
 # ----------------------------------------------------------------------- #
 def _tile_min() -> int:
-    raw = os.environ.get("SCILIB_TILE_MIN", "")
-    try:
-        return max(1, int(raw)) if raw else 64
-    except ValueError:
-        return 64
+    """Minimum tile edge, from the active runtime's config (the
+    ``tile_min`` field replacing ``SCILIB_TILE_MIN``)."""
+    runtime = rt.active()
+    return runtime.config.tile_min if runtime is not None else 64
 
 
 def _shard_active(batch: int, *arrays) -> bool:
@@ -737,6 +741,43 @@ def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
                      shard=shard)
 
 
+@jax.jit
+def _gemv_kernel_n(a, x):
+    return a @ x
+
+
+@jax.jit
+def _gemv_kernel_t(a, x):
+    return jnp.swapaxes(a, -1, -2) @ x
+
+
+def gemv(a: jax.Array, x: jax.Array, *, trans: str = "N") -> jax.Array:
+    """y := op(A) x — the matrix-vector (level-2) interception surface.
+
+    The paper's tool intercepts level-3 BLAS; matrix-vector products
+    used to bypass interception entirely and vanish from the report.
+    They are now recorded and counted as gemv-shaped calls and routed
+    through the same dispatch pipeline with the ordinary threshold
+    rule: N_avg = (m*n)^(1/3) sits below any level-3 threshold until
+    the matrix alone is ~0.5 GB, so dispatch stays host below the
+    threshold — i.e. at realistic sizes — while the call is visible
+    everywhere: per-routine counts, call-site profiles and the trace
+    all see it.  (Above the threshold a gemv offloads like any other
+    call; DFU placement makes a *repeated* huge gemv pay its migration
+    once, and the adaptive mode's measured probes will lock host when
+    offload loses.)
+    """
+    m, n = a.shape[-2], a.shape[-1]
+    opm, opn = (m, n) if trans == "N" else (n, m)
+    dt = a.dtype
+    bkey = ("gemv", dt.name, trans)
+    compute = _gemv_kernel_t if trans == "T" else _gemv_kernel_n
+    # A streams once; x is re-read for every one of the opm output rows.
+    ops = [("A", a, 1.0, False), ("X", x, float(opm), False)]
+    return _dispatch(routine_name("gemv", dt), opm, opn, 0, ops, compute,
+                     key=_call_key(bkey, opm, opn, 0, 1))
+
+
 def symm(a, b, c=None, *, side="L", uplo="L", alpha=1.0, beta=0.0):
     """C := alpha A B + beta C with A symmetric (one triangle referenced)."""
     return _symm_like(a, b, c, side=side, uplo=uplo, alpha=alpha,
@@ -920,3 +961,9 @@ def _tri_like(a, b, *, side, uplo, trans, diag, alpha, base, kernel):
     return _dispatch(routine_name(base, dt), tri_n, opn, 0, ops, compute,
                      batch, key=_call_key(bkey, tri_n, opn, 0, batch),
                      shard=shard)
+
+
+# dlsym mode with no runtime installed still honors the env-derived
+# dispatch_cache knob: resolve it once at import through the config
+# boundary (runtime construction re-resolves it from its own config).
+refresh_cache_flag()

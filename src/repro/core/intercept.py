@@ -10,10 +10,19 @@ the original for everything else — no caller changes, no re-"linking".
 
 Two usage modes mirror the paper's two library builds:
 
-* **DBI mode** (``install()``): patch the public symbols; works for any
-  caller importing ``jax.numpy`` — the analogue of ``scilib-dbi.so``.
+* **DBI mode** (``repro.session(...)`` or the legacy ``install()``
+  shim): patch the public symbols; works for any caller importing
+  ``jax.numpy`` — the analogue of ``scilib-dbi.so``.
 * **dlsym mode**: call ``repro.core.blas`` directly — the analogue of
   ``scilib-dl.so``'s same-name wrappers (profiler-friendly, explicit).
+
+The patch itself is refcounted (``patch_symbols``/``unpatch_symbols``)
+so nested sessions share one set of trampolines; ``install()`` /
+``uninstall()`` / ``offload()`` below are thin shims over an implicit
+default :class:`repro.core.session.Session`.  Matrix-vector ``dot`` /
+``matmul`` calls are intercepted as gemv-shaped level-2 calls (counted,
+traced, threshold-dispatched — they stay host at realistic sizes)
+instead of silently bypassing the runtime.
 
 Inside jit traces the trampolines pass straight through to the original
 functions: placement is a runtime concept; traced code gets its offload
@@ -72,19 +81,36 @@ def _benign_kwargs(a, b, kw) -> bool:
     return True
 
 
+def _gemv_shaped(a, b) -> Optional[tuple]:
+    """Matrix-vector operands of ``dot``/``matmul``, canonicalized to
+    ``(matrix, vector, trans)`` — ``A @ x`` is a plain gemv, ``x @ A``
+    is the transposed one (same result as ``A.T @ x``)."""
+    if a.ndim == 2 and b.ndim == 1 and a.shape[1] == b.shape[0]:
+        return a, b, "N"
+    if a.ndim == 1 and b.ndim == 2 and b.shape[0] == a.shape[0]:
+        return b, a, "T"
+    return None
+
+
 def _matmul(a, b, **kw):
-    if (_blasable(a, b) and a.ndim >= 2 and b.ndim >= 2
-            and _benign_kwargs(a, b, kw)):
-        return blas.gemm(a, b)
+    if _blasable(a, b) and _benign_kwargs(a, b, kw):
+        if a.ndim >= 2 and b.ndim >= 2:
+            return blas.gemm(a, b)
+        mv = _gemv_shaped(a, b)
+        if mv is not None:
+            return blas.gemv(mv[0], mv[1], trans=mv[2])
     if rt.active() is not None:
         rt.active().stats.uninstrumented_calls += 1
     return _ORIG["matmul"](a, b, **kw)
 
 
 def _dot(a, b, **kw):
-    if (_blasable(a, b) and a.ndim == 2 and b.ndim == 2
-            and _benign_kwargs(a, b, kw)):
-        return blas.gemm(a, b)
+    if _blasable(a, b) and _benign_kwargs(a, b, kw):
+        if a.ndim == 2 and b.ndim == 2:
+            return blas.gemm(a, b)
+        mv = _gemv_shaped(a, b)
+        if mv is not None:
+            return blas.gemv(mv[0], mv[1], trans=mv[2])
     if rt.active() is not None:
         rt.active().stats.uninstrumented_calls += 1
     return _ORIG["dot"](a, b, **kw)
@@ -183,13 +209,17 @@ def _einsum(spec, *operands, **kw):
 
 
 # --------------------------------------------------------------------- #
-# install / uninstall                                                    #
+# symbol patching (refcounted: one patch serves any number of sessions)  #
 # --------------------------------------------------------------------- #
-def install(policy: str = "dfu", threshold: Optional[float] = None,
-            record_trace: bool = True) -> rt.OffloadRuntime:
-    """Activate the runtime and patch the public symbols (.init_array)."""
-    runtime = rt.install(policy=policy, threshold=threshold,
-                         record_trace=record_trace)
+_PATCHED = 0
+
+
+def patch_symbols() -> None:
+    """Install the trampolines over the public ``jnp`` symbols.
+    Refcounted: nested intercepting sessions share one patch, and the
+    originals come back only when the last one unpatches."""
+    global _PATCHED
+    _PATCHED += 1
     if not _ORIG:
         _ORIG["matmul"] = jnp.matmul
         _ORIG["dot"] = jnp.dot
@@ -199,21 +229,54 @@ def install(policy: str = "dfu", threshold: Optional[float] = None,
         jnp.dot = _dot
         jnp.einsum = _einsum
         jnp.tensordot = _tensordot
-    return runtime
 
 
-def uninstall():
-    """Restore symbols and return final stats (.fini_array)."""
-    if _ORIG:
+def unpatch_symbols() -> None:
+    """Release one patch reference; restore the originals at zero."""
+    global _PATCHED
+    _PATCHED = max(0, _PATCHED - 1)
+    if _PATCHED == 0 and _ORIG:
         jnp.matmul = _ORIG.pop("matmul")
         jnp.dot = _ORIG.pop("dot")
         jnp.einsum = _ORIG.pop("einsum")
         jnp.tensordot = _ORIG.pop("tensordot")
-    return rt.uninstall()
+
+
+# --------------------------------------------------------------------- #
+# install / uninstall — legacy shims over an implicit default Session    #
+# --------------------------------------------------------------------- #
+def install(policy: Optional[str] = None,
+            threshold: Optional[float] = None,
+            record_trace: bool = True,
+            config=None) -> rt.OffloadRuntime:
+    """Activate the runtime and patch the public symbols (.init_array).
+
+    Now a thin shim over an implicit :class:`repro.core.session.Session`
+    — behavior-identical (``SCILIB_*`` env knobs honored through
+    :meth:`~repro.core.config.OffloadConfig.legacy`), but everything it
+    does is the session object's doing.  An explicit ``config``
+    bypasses the legacy resolution (and the environment) entirely.
+    Prefer ``repro.session(...)`` for new code: it takes a typed config
+    and isolates state per workload."""
+    from repro.core import session as ses
+    from repro.core.config import OffloadConfig
+    if config is None:
+        config = OffloadConfig.legacy(policy=policy, threshold=threshold)
+    return ses.open_legacy(config, record_trace=record_trace,
+                           intercept=True).runtime
+
+
+def uninstall():
+    """Restore symbols and return final stats (.fini_array); shares one
+    legacy-session stack with ``runtime.uninstall`` so mixed-level
+    install/uninstall pairs cannot desynchronize."""
+    from repro.core import session as ses
+    return ses.close_legacy()
 
 
 @contextlib.contextmanager
-def offload(policy: str = "dfu", threshold: Optional[float] = None,
+def offload(policy: Optional[str] = None,
+            threshold: Optional[float] = None,
             record_trace: bool = True):
     """``with offload("dfu"): ...`` — scoped automatic BLAS offload."""
     runtime = install(policy=policy, threshold=threshold,

@@ -33,7 +33,6 @@ specific device tier; ``device_of`` reads the index back.
 from __future__ import annotations
 
 import dataclasses
-import os
 import weakref
 from typing import Dict, Optional, Tuple
 
@@ -58,35 +57,30 @@ class MemSpace:
         return self.host_kind if tier == HOST else self.device_kind
 
 
-def _env_devices() -> Optional[int]:
-    raw = os.environ.get("SCILIB_DEVICES", "")
-    if not raw:
-        return None
-    try:
-        return max(1, int(raw))
-    except ValueError:
-        return None
-
-
 def device_bytes_from_env() -> Optional[int]:
-    """``SCILIB_DEVICE_BYTES``: the per-device-tier byte cap the
-    residency stores enforce (None = uncapped).  Lives here because the
-    cap is a property of the memory tier, consumed by the runtime's
-    stores and by the simulator's replay alike."""
-    raw = os.environ.get("SCILIB_DEVICE_BYTES", "")
-    if not raw:
-        return None
-    try:
-        return int(float(raw))
-    except ValueError:
-        return None
+    """Back-compat wrapper: the per-device-tier byte cap, read through
+    the config boundary (:meth:`repro.core.config.OffloadConfig.
+    from_env`).  The runtime itself is plumbed from its config; this
+    exists for callers that inspect the env-derived cap directly."""
+    from repro.core.config import OffloadConfig
+    return OffloadConfig.from_env().device_bytes
 
 
-def probe(device: Optional[jax.Device] = None) -> MemSpace:
-    """Inspect the backend once and resolve the tier mapping."""
+def probe(device: Optional[jax.Device] = None,
+          n_devices: Optional[int] = None) -> MemSpace:
+    """Inspect the backend once and resolve the tier mapping.
+
+    ``n_devices`` is the logical device-tier count; the runtime passes
+    its config's resolved value.  When omitted (a bare re-probe outside
+    any runtime), it comes from the env-derived config — the single
+    ``SCILIB_*`` ingestion boundary — falling back to
+    ``len(jax.devices())``.
+    """
     d = device if device is not None else jax.devices()[0]
     backend = jax.default_backend()
-    n_devices = _env_devices()
+    if n_devices is None:
+        from repro.core.config import OffloadConfig
+        n_devices = OffloadConfig.from_env().devices
     if n_devices is None:
         try:
             n_devices = len(jax.devices())
@@ -135,10 +129,12 @@ def active() -> MemSpace:
     return _ACTIVE
 
 
-def install(space: Optional[MemSpace] = None) -> MemSpace:
-    """Re-probe (or inject, for tests) the mapping; runtime.install hook."""
+def install(space: Optional[MemSpace] = None,
+            n_devices: Optional[int] = None) -> MemSpace:
+    """Re-probe (or inject, for tests) the mapping; runtime.install hook.
+    ``n_devices`` plumbs the owning config's device-tier count through."""
     global _ACTIVE
-    _ACTIVE = probe() if space is None else space
+    _ACTIVE = probe(n_devices=n_devices) if space is None else space
     return _ACTIVE
 
 

@@ -47,7 +47,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import os
 import weakref
 from typing import Callable, Dict, Hashable, Iterator, Optional
 
@@ -174,17 +173,22 @@ def make_eviction_policy(name: str) -> EvictionPolicy:
 
 
 def evict_policy_from_env(default: str = "lru") -> str:
-    """``SCILIB_EVICT`` knob (unknown values fall back to the default
-    so a typo cannot silently disable eviction)."""
-    raw = os.environ.get("SCILIB_EVICT", "").strip().lower()
-    return raw if raw in EVICTION_POLICIES else default
+    """Back-compat wrapper: the ``SCILIB_EVICT`` knob read through the
+    config boundary (unknown values fall back to the default so a typo
+    cannot silently disable eviction).  The runtime itself is plumbed
+    from its config's ``evict`` field."""
+    from repro.core.config import OffloadConfig
+    cfg = OffloadConfig.from_env(OffloadConfig(evict=default))
+    return cfg.evict
 
 
 def pin_all_from_env() -> bool:
-    """``SCILIB_PIN=never-evict`` pins every placement at registration:
-    residency only grows (the paper's uncapped DFU), caps never evict."""
-    return os.environ.get("SCILIB_PIN", "").strip().lower() in (
-        "never-evict", "all", "1")
+    """Back-compat wrapper: ``SCILIB_PIN=never-evict`` pins every
+    placement at registration — residency only grows (the paper's
+    uncapped DFU), caps never evict.  Read through the config boundary;
+    the runtime itself is plumbed from its config's ``pin`` field."""
+    from repro.core.config import OffloadConfig
+    return OffloadConfig.from_env().pin
 
 
 # --------------------------------------------------------------------- #

@@ -1,5 +1,12 @@
 """SCILIB-Accel offload runtime: the JAX re-implementation of paper §3.
 
+Every runtime is configured by one typed
+:class:`~repro.core.config.OffloadConfig` (the ``SCILIB_*`` env names
+below remain supported spellings, ingested solely by
+``OffloadConfig.from_env()``), and normally lives inside a
+:class:`~repro.core.session.Session`; ``install()``/``uninstall()``
+below are legacy shims over an implicit session.
+
 One ``OffloadRuntime`` owns
 
 * the **placement registry** — buffer identity -> device-tier placement.
@@ -73,7 +80,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import os
 import time
 from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple
 
@@ -83,6 +89,7 @@ from repro.core import callsite as cs
 from repro.core import memspace
 from repro.core import residency as res
 from repro.core import threshold as thr
+from repro.core.config import OffloadConfig
 from repro.core.policy import CounterPolicy, PolicyBase, make_policy
 from repro.core.trace import Trace
 
@@ -300,6 +307,7 @@ class RuntimeStats:
 #: arithmetic-intensity input and the per-site flops accounting)
 _FLOP_FACTORS = {
     "gemm": lambda m, n, k: 2.0 * m * n * k,
+    "gemv": lambda m, n, k: 2.0 * m * n,
     "trsm": lambda m, n, k: 1.0 * m * m * n,
     "trmm": lambda m, n, k: 1.0 * m * m * n,
     "syrk": lambda m, n, k: 1.0 * n * n * k,
@@ -324,34 +332,35 @@ def _flops_of(routine: str, m: int, n: int, k: int, batch: int = 1) -> float:
 class OffloadRuntime:
     """Placement + dispatch brain behind the intercepted BLAS surface."""
 
-    def __init__(self, *, policy: str = "dfu",
+    def __init__(self, config: Optional[OffloadConfig] = None, *,
+                 policy: Optional[str] = None,
                  threshold: Optional[float] = None,
                  record_trace: bool = True,
                  sync: Optional[bool] = None,
                  device_bytes: Optional[int] = None):
-        policy = os.environ.get("SCILIB_POLICY", policy)
-        self.policy: PolicyBase = make_policy(policy)
-        self.memspace = memspace.install()
-        self.threshold = thr.threshold_from_env(
-            thr.default_threshold() if threshold is None else threshold)
+        # the legacy keyword surface resolves to a config with the
+        # historical precedence (env SCILIB_POLICY/THRESHOLD over args,
+        # explicit sync/device_bytes args over env); an explicit config
+        # is taken as-is — no environment is read after this line.
+        if config is None:
+            config = OffloadConfig.legacy(policy=policy,
+                                          threshold=threshold, sync=sync,
+                                          device_bytes=device_bytes)
+        self.config = config
+        self.policy: PolicyBase = make_policy(config.policy)
+        self.memspace = memspace.install(
+            n_devices=config.resolved_devices())
+        self.threshold = config.resolved_threshold()
         self.stats = RuntimeStats()
         self.trace: Optional[Trace] = Trace() if record_trace else None
-        self.debug = int(os.environ.get("SCILIB_DEBUG", "0") or 0)
-        if sync is None:
-            sync = os.environ.get("SCILIB_SYNC", "") == "1"
-        self.sync_mode = bool(sync)
-        self.dispatch_cache_enabled = (
-            os.environ.get("SCILIB_DISPATCH_CACHE", "1") != "0")
-        # per-call-site profiling (cheap fingerprint; SCILIB_CALLSITE=0
+        self.debug = config.debug
+        self.sync_mode = bool(config.sync)
+        self.dispatch_cache_enabled = config.dispatch_cache
+        # per-call-site profiling (cheap fingerprint; callsite=False
         # turns the whole site layer off) and the adaptive per-site mode
-        self.callsite_enabled = (
-            os.environ.get("SCILIB_CALLSITE", "1") != "0")
-        self.adaptive = os.environ.get("SCILIB_ADAPTIVE", "") == "1"
-        try:
-            self.adaptive_warmup = max(
-                2, int(os.environ.get("SCILIB_ADAPTIVE_WARMUP", "6")))
-        except ValueError:
-            self.adaptive_warmup = 6
+        self.callsite_enabled = config.callsite
+        self.adaptive = config.adaptive
+        self.adaptive_warmup = config.adaptive_warmup
         self.callsites = cs.CallSiteRegistry()
         self.stats.callsites = self.callsites
         # ordered decision stages: first stage to return a decision wins.
@@ -363,17 +372,13 @@ class OffloadRuntime:
         # keep the blas-level scalar/kernel caches on the same flag even
         # when a runtime is constructed directly (not via install())
         from repro.core import blas
-        blas.refresh_cache_flag()
-        cap = memspace.device_bytes_from_env()
-        self.device_bytes_cap: Optional[int] = (
-            device_bytes if device_bytes is not None else cap)
-        if self.device_bytes_cap == 0:      # explicit "uncapped" sentinel
-            self.device_bytes_cap = None
+        blas.refresh_cache_flag(config.dispatch_cache)
+        self.device_bytes_cap: Optional[int] = config.device_bytes
         # the residency engine: every registry below is one ResidencyStore
         # (repro.core.residency) — the same class the memtier simulator
         # replays, so live and simulated eviction accounting agree.
-        self.evict_policy = res.evict_policy_from_env()
-        self.pin_all = res.pin_all_from_env()
+        self.evict_policy = config.evict
+        self.pin_all = config.pin
         # per-call-site dispatch cache: key -> (offload, n_avg)
         self._decisions: Dict[Hashable, Tuple[bool, float]] = {}
         # placement registry: id(src) -> placed device-tier buffer
@@ -402,6 +407,73 @@ class OffloadRuntime:
         # entries live exactly as long as their anchor array)
         self._trace_ids = res.ResidencyStore("traceids")
         self._reuse_by_buffer: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # safe mid-run reconfiguration (Session.reconfigure lands here)       #
+    # ------------------------------------------------------------------ #
+    def apply_config(self, new: OffloadConfig) -> None:
+        """Apply a new (already validated) config to the live runtime.
+
+        Everything that can change safely changes in place; state the
+        change invalidates is flushed rather than left stale:
+
+        * the memoized dispatch cache is always cleared (its entries
+          encode threshold decisions),
+        * a policy / threshold / adaptive change resets adaptive
+          per-site locks (and a policy change also discards the probe
+          timings, which were measured under the old policy),
+        * residency caps, eviction policy and pinning update on every
+          store, with an immediate eviction sweep under a tightened cap.
+
+        The device-tier count is topology, fixed at construction:
+        changing it raises ``ValueError`` (open a new session instead).
+        """
+        old = self.config
+        if new.resolved_devices() != self.n_devices:
+            raise ValueError(
+                f"devices cannot change on a live runtime "
+                f"({self.n_devices} -> {new.resolved_devices()}); "
+                f"open a new session")
+        old_threshold = self.threshold
+        self.config = new
+        self.threshold = new.resolved_threshold()
+        self.sync_mode = bool(new.sync)
+        self.debug = new.debug
+        self.dispatch_cache_enabled = new.dispatch_cache
+        self.callsite_enabled = new.callsite
+        self.adaptive = new.adaptive
+        self.adaptive_warmup = new.adaptive_warmup
+        from repro.core import blas
+        blas.refresh_cache_flag(new.dispatch_cache)
+        self._decisions.clear()
+        policy_changed = new.policy != old.policy
+        if policy_changed:
+            self.policy = make_policy(new.policy)
+        if (policy_changed or self.threshold != old_threshold
+                or new.adaptive != old.adaptive):
+            for prof in self.callsites:
+                prof.locked = None
+                prof.locked_why = ""
+                if policy_changed:     # old timings measured a dead path
+                    prof.host_timed = prof.device_timed = 0
+                    prof.host_seconds = prof.device_seconds = 0.0
+                    prof.host_best = prof.device_best = float("inf")
+        self.device_bytes_cap = new.device_bytes
+        self.evict_policy = new.evict
+        pin_changed = new.pin != self.pin_all
+        self.pin_all = new.pin
+        for store in (self.placements, *self.block_stores):
+            store.cap = new.device_bytes
+            store.policy = res.make_eviction_policy(new.evict)
+            store.pin_new = new.pin
+            if pin_changed:
+                # pin=True pins existing residents too; pin=False makes
+                # them evictable again (entries pinned under pin-all are
+                # indistinguishable from explicit pins, and leaving them
+                # pinned would render a newly-set cap unenforceable)
+                for key in list(store.keys()):
+                    (store.pin if new.pin else store.unpin)(key)
+            store.evict_over_cap()
 
     # ------------------------------------------------------------------ #
     # the residency engine: event + eviction hooks, pinning               #
@@ -875,36 +947,41 @@ class OffloadRuntime:
 _ACTIVE: Optional[OffloadRuntime] = None
 
 
-def install(policy: str = "dfu", threshold: Optional[float] = None,
-            record_trace: bool = True, sync: Optional[bool] = None,
-            device_bytes: Optional[int] = None) -> OffloadRuntime:
-    """`.init_array` analogue: create and activate the global runtime."""
+def activate(runtime: Optional[OffloadRuntime]) -> None:
+    """Make ``runtime`` the dispatch target (None deactivates).  The
+    session layer drives this; application code opens sessions instead."""
     global _ACTIVE
-    _ACTIVE = OffloadRuntime(policy=policy, threshold=threshold,
-                             record_trace=record_trace, sync=sync,
-                             device_bytes=device_bytes)
-    return _ACTIVE
+    _ACTIVE = runtime
+
+
+def install(policy: Optional[str] = None,
+            threshold: Optional[float] = None,
+            record_trace: bool = True, sync: Optional[bool] = None,
+            device_bytes: Optional[int] = None,
+            config: Optional[OffloadConfig] = None) -> OffloadRuntime:
+    """`.init_array` analogue, now a shim over an implicit
+    :class:`~repro.core.session.Session` (without symbol interception —
+    the dlsym-mode surface).  Behavior-identical to the pre-session
+    global: env knobs are honored through
+    :meth:`OffloadConfig.legacy`, and the created runtime becomes the
+    active dispatch target.  An explicit ``config`` bypasses the legacy
+    resolution (and the environment) entirely."""
+    from repro.core import session as ses
+    if config is None:
+        config = OffloadConfig.legacy(policy=policy, threshold=threshold,
+                                      sync=sync, device_bytes=device_bytes)
+    return ses.open_legacy(config, record_trace=record_trace,
+                           intercept=False).runtime
 
 
 def uninstall() -> Optional[RuntimeStats]:
     """`.fini_array` analogue: drain in-flight work, deactivate, and
-    return final statistics.  With ``SCILIB_TRACE=/path.json`` set, the
-    recorded trace is dumped there — traces for the autotuner need no
-    code changes, mirroring the paper tool's no-recompile ethos."""
-    global _ACTIVE
-    rt, _ACTIVE = _ACTIVE, None
-    if rt is None:
-        return None
-    rt.sync()
-    path = os.environ.get("SCILIB_TRACE", "")
-    if path and rt.trace is not None:
-        try:
-            rt.trace.dump(path)
-            if rt.debug >= 1:
-                print(f"[scilib] trace ({len(rt.trace)} calls) -> {path}")
-        except OSError as exc:       # never let stats die on a bad path
-            print(f"[scilib] SCILIB_TRACE dump to {path!r} failed: {exc}")
-    return rt.stats
+    return final statistics.  With ``SCILIB_TRACE=/path.json`` set (or
+    ``config.trace_path``), the recorded trace is dumped — traces for
+    the autotuner need no code changes, mirroring the paper tool's
+    no-recompile ethos."""
+    from repro.core import session as ses
+    return ses.close_legacy()
 
 
 def active() -> Optional[OffloadRuntime]:

@@ -9,7 +9,6 @@ original tool's environment knob.
 """
 from __future__ import annotations
 
-import os
 from typing import Tuple
 
 DEFAULT_THRESHOLD = 500.0
@@ -57,13 +56,12 @@ def default_threshold() -> float:
 
 
 def threshold_from_env(default: float = DEFAULT_THRESHOLD) -> float:
-    raw = os.environ.get("SCILIB_THRESHOLD", "")
-    if not raw:
-        return default
-    try:
-        return float(raw)
-    except ValueError:
-        return default
+    """Back-compat wrapper: the ``SCILIB_THRESHOLD`` override, read
+    through the config boundary (:meth:`repro.core.config.OffloadConfig.
+    from_env`).  The runtime itself is plumbed from its config."""
+    from repro.core.config import OffloadConfig
+    t = OffloadConfig.from_env().threshold
+    return default if t is None else t
 
 
 def base_routine(routine: str) -> str:

@@ -73,6 +73,8 @@ class BlasCall:
         m, n, k = self.m, self.n, self.k
         if base == "gemm":
             return mult * 2.0 * m * n * k
+        if base == "gemv":       # level-2 matrix-vector (intercepted)
+            return mult * 2.0 * m * n
         if base in ("trsm", "trmm"):
             return mult * 1.0 * m * m * n  # side='L'; side='R' callers swap
         if base in ("syrk", "herk"):

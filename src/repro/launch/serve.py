@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2_1_3b \
         --reduced --batch 4 --prompt-len 32 --gen 64 --policy dfu
+
+``--offload-config tuned.json`` additionally opens a BLAS-offload
+session for the whole serve (the autotuner's ``--emit-config``
+artifact, loaded via ``OffloadConfig.load``): eager BLAS around the
+jitted decode step is intercepted under the tuned settings and the
+session report prints at exit.
 """
 from __future__ import annotations
 
@@ -21,6 +27,10 @@ def main():
     ap.add_argument("--policy", default="dfu",
                     choices=["dfu", "memcopy", "pinned"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--offload-config", default="",
+                    help="OffloadConfig JSON (e.g. from "
+                         "repro.tools.autotune --emit-config): serve "
+                         "inside a session running these settings")
     args = ap.parse_args()
 
     from repro.models import get_config
@@ -46,7 +56,18 @@ def main():
         extra = {"frames": jnp.ones(
             (args.batch, cfg.encoder_seq, cfg.d_model),
             jnp.dtype(cfg.dtype))}
-    out = srv.generate(prompt, args.gen, extra)
+    session = None
+    if args.offload_config:
+        from repro.core.config import OffloadConfig
+        from repro.core.session import Session
+        session = Session(
+            OffloadConfig.load(args.offload_config)).open()
+    try:
+        out = srv.generate(prompt, args.gen, extra)
+    finally:
+        if session is not None:
+            print(session.report())
+            session.close()
     s = srv.stats
     tps = s.tokens / max(1e-9, s.decode_s)
     print(f"arch={cfg.name} policy={args.policy}")

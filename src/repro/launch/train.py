@@ -34,6 +34,11 @@ def main():
                     choices=[None, "single", "multi"])
     ap.add_argument("--dry-compile", action="store_true",
                     help="lower+compile the sharded step, do not run")
+    ap.add_argument("--offload-config", default="",
+                    help="OffloadConfig JSON (e.g. from "
+                         "repro.tools.autotune --emit-config): train "
+                         "inside a BLAS-offload session running these "
+                         "settings; the session report prints at exit")
     args = ap.parse_args()
 
     if args.mesh and args.dry_compile:
@@ -74,7 +79,18 @@ def main():
                        ckpt_every=args.ckpt_every,
                        moe_impl="dense" if args.reduced else "scatter")
     trainer = Trainer(model, pipe, tcfg, ckpt_dir=args.ckpt_dir)
-    hist = trainer.fit()
+    session = None
+    if args.offload_config:
+        from repro.core.config import OffloadConfig
+        from repro.core.session import Session
+        session = Session(
+            OffloadConfig.load(args.offload_config)).open()
+    try:
+        hist = trainer.fit()
+    finally:
+        if session is not None:
+            print(session.report())
+            session.close()
     print(f"final loss {hist[-1]['loss']:.4f} after {trainer.step} steps; "
           f"straggler events: {trainer.straggler_events}")
     return 0

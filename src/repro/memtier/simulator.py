@@ -176,6 +176,20 @@ class MemTierSimulator:
         self._rr_dev = 0
         self._out_seq = 0            # synthetic keys for aliased outputs
 
+    @classmethod
+    def from_config(cls, config, spec: HardwareSpec = GH200,
+                    **kw) -> "MemTierSimulator":
+        """A simulator modeling one :class:`repro.core.config.
+        OffloadConfig` — the replay side of the tune->deploy loop: the
+        autotuner emits a config file, and this constructor predicts
+        what a session running that config will do (same policy,
+        resolved threshold, device-tier count, cap and eviction)."""
+        return cls(spec, policy=config.policy,
+                   threshold=config.resolved_threshold(),
+                   n_devices=config.resolved_devices(),
+                   device_bytes=config.device_bytes,
+                   evict=config.evict, **kw)
+
     def _evict_to_host(self, dev: int):
         """Cap pressure on one device store: bounce the victim's pages
         back to host and bill the link, like the live store re-tagging

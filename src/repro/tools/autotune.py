@@ -104,6 +104,18 @@ class GridPoint:
             settings["SCILIB_EVICT"] = self.evict
         return settings
 
+    def to_config(self):
+        """The typed :class:`~repro.core.config.OffloadConfig` that
+        realizes this point — what ``--emit-config`` writes, and what
+        ``repro.session(OffloadConfig.load(...))`` runs directly.
+        ``devices`` is always explicit (``None`` would re-resolve to
+        the deploy host's device count, which is not what was tuned)."""
+        from repro.core.config import OffloadConfig
+        return OffloadConfig(
+            policy=self.policy, threshold=self.threshold,
+            devices=self.n_devices,
+            device_bytes=self.device_bytes, evict=self.evict)
+
 
 @dataclasses.dataclass
 class AutotuneResult:
@@ -332,6 +344,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "each capped point (lru, lfu, refetch)")
     ap.add_argument("--top", type=int, default=12,
                     help="grid rows to print")
+    ap.add_argument("--emit-config", metavar="PATH", default="",
+                    help="write the recommendation as a typed "
+                         "OffloadConfig JSON file: the tune->deploy "
+                         "artifact repro.session(OffloadConfig.load("
+                         "PATH)) runs directly")
     args = ap.parse_args(argv)
 
     trace = Trace.load(args.trace)
@@ -353,6 +370,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if sites:
         print(sites)
     print(format_recommendation(result))
+    if args.emit_config:
+        result.best.to_config().save(args.emit_config)
+        print(f"config written to {args.emit_config} — run it with "
+              f"repro.session(OffloadConfig.load({args.emit_config!r}))")
     return 0
 
 

@@ -1,0 +1,621 @@
+"""Typed OffloadConfig + Session API: the env-knob parity matrix, the
+legacy install()/Session equivalence, session isolation/nesting, safe
+reconfigure, the gemv interception surface, the atexit trace fallback,
+and the autotune --emit-config tune->deploy loop."""
+import dataclasses
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+import repro  # noqa: E402
+import repro.core as core  # noqa: E402
+from repro.core import config as cfg_mod  # noqa: E402
+from repro.core import residency as res  # noqa: E402
+from repro.core import runtime as rtm  # noqa: E402
+from repro.core.config import ENV_FIELDS, OffloadConfig  # noqa: E402
+from repro.core.policy import POLICY_CLASSES, host_array  # noqa: E402
+from repro.core.trace import Trace  # noqa: E402
+
+RNG = np.random.default_rng(7)
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+def _f32(shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+@pytest.fixture
+def clean_env(monkeypatch):
+    """Scrub every SCILIB_* var (incl. the CI stress job's cap) so each
+    test controls exactly the knobs it sets."""
+    for var in list(os.environ):
+        if var.startswith("SCILIB_"):
+            monkeypatch.delenv(var)
+    return monkeypatch
+
+
+# --------------------------------------------------------------------- #
+# the config <-> env parity matrix                                       #
+# --------------------------------------------------------------------- #
+#: one sample value per field: (env string, parsed field value)
+MATRIX = {
+    "policy": ("memcopy", "memcopy"),
+    "threshold": ("123.5", 123.5),
+    "sync": ("1", True),
+    "adaptive": ("1", True),
+    "adaptive_warmup": ("4", 4),
+    "callsite": ("0", False),
+    "dispatch_cache": ("0", False),
+    "devices": ("3", 3),
+    "device_bytes": ("1048576", 1048576),
+    "tile_min": ("32", 32),
+    "evict": ("lfu", "lfu"),
+    "pin": ("never-evict", True),
+    "trace_path": ("/tmp/trace.json", "/tmp/trace.json"),
+    "debug": ("2", 2),
+}
+
+
+def test_matrix_covers_every_field():
+    """ENV_FIELDS, the sample matrix, and the dataclass cannot drift."""
+    fields = {f.name for f in dataclasses.fields(OffloadConfig)}
+    assert set(ENV_FIELDS) == fields
+    assert set(MATRIX) == fields
+
+
+def test_registries_cannot_drift():
+    assert sorted(cfg_mod.POLICY_NAMES) == sorted(POLICY_CLASSES)
+    assert sorted(cfg_mod.EVICT_NAMES) == sorted(res.EVICTION_POLICIES)
+
+
+@pytest.mark.parametrize("field", sorted(MATRIX))
+def test_env_field_roundtrip(field, clean_env):
+    """Every config field <-> env knob round-trips through from_env()
+    and save()/load()."""
+    raw, want = MATRIX[field]
+    clean_env.setenv(ENV_FIELDS[field], raw)
+    cfg = OffloadConfig.from_env()
+    assert getattr(cfg, field) == want
+    # JSON round-trip preserves the parsed value exactly
+    path = "/tmp/cfg_roundtrip.json"
+    cfg.save(path)
+    assert OffloadConfig.load(path) == cfg
+
+
+def test_env_inverse_roundtrip(clean_env):
+    """cfg.env() is the inverse of from_env() for non-default fields."""
+    cfg = OffloadConfig(policy="memcopy", threshold=123.5, sync=True,
+                        adaptive=True, adaptive_warmup=4, callsite=False,
+                        dispatch_cache=False, devices=3,
+                        device_bytes=1 << 20, tile_min=32, evict="lfu",
+                        pin=True, trace_path="/tmp/t.json", debug=2)
+    assert OffloadConfig.from_env(base=OffloadConfig(),
+                                  environ=cfg.env()) == cfg
+
+
+def test_lenient_parsing_falls_back(clean_env):
+    clean_env.setenv("SCILIB_THRESHOLD", "not-a-number")
+    clean_env.setenv("SCILIB_EVICT", "typo")
+    clean_env.setenv("SCILIB_DEVICES", "many")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        cfg = OffloadConfig.from_env(base=OffloadConfig())
+    assert cfg.threshold is None
+    assert cfg.evict == "lru"
+    assert cfg.devices is None
+
+
+def test_out_of_range_env_values_fall_back_with_warning(clean_env):
+    """Parseable-but-invalid values (negative threshold, devices=0)
+    must warn and fall back, never escape from_env as a ValueError —
+    they would otherwise crash at import time via the blas-layer
+    refresh."""
+    clean_env.setenv("SCILIB_THRESHOLD", "-5")
+    clean_env.setenv("SCILIB_ADAPTIVE_WARMUP", "0")
+    cfg_mod._WARNED.discard("SCILIB_THRESHOLD")
+    cfg_mod._WARNED.discard("SCILIB_ADAPTIVE_WARMUP")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = OffloadConfig.from_env(base=OffloadConfig())
+    assert cfg.threshold is None
+    assert cfg.adaptive_warmup == 2      # legacy clamp to the minimum
+    assert any("SCILIB_THRESHOLD" in str(x.message) for x in w)
+
+
+def test_legacy_shims_honor_set_default_base(clean_env):
+    """install() with no arguments must start from the set_default()
+    base (the CI config-file job's premise), not re-impose dfu/500."""
+    prev = cfg_mod.set_default(OffloadConfig(policy="counter",
+                                             threshold=810.7))
+    try:
+        rt = rtm.install(record_trace=False)
+        try:
+            assert rt.policy.name == "counter"
+            assert rt.threshold == 810.7
+        finally:
+            rtm.uninstall()
+        # an explicit argument still wins over the base
+        rt = rtm.install("dfu", threshold=123.0, record_trace=False)
+        try:
+            assert rt.policy.name == "dfu" and rt.threshold == 123.0
+        finally:
+            rtm.uninstall()
+    finally:
+        cfg_mod.set_default(prev)
+
+
+def test_unknown_env_var_warns_with_nearest_name(clean_env):
+    clean_env.setenv("SCILIB_THRESOLD", "99")      # the motivating typo
+    cfg_mod._WARNED.discard("SCILIB_THRESOLD")     # warn-once: re-arm
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        OffloadConfig.from_env()
+        msgs = [str(x.message) for x in w]
+    assert any("SCILIB_THRESOLD" in m and "SCILIB_THRESHOLD" in m
+               for m in msgs), msgs
+    # ... and only once per process
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        OffloadConfig.from_env()
+    assert not [x for x in w if "SCILIB_THRESOLD" in str(x.message)]
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        OffloadConfig(policy="bogus")
+    with pytest.raises(ValueError):
+        OffloadConfig(evict="bogus")
+    with pytest.raises(ValueError):
+        OffloadConfig(threshold=-1.0)
+    with pytest.raises(ValueError):
+        OffloadConfig(adaptive_warmup=1)
+    with pytest.raises(ValueError):
+        OffloadConfig(devices=0)
+    with pytest.raises(ValueError):
+        OffloadConfig(tile_min=0)
+    # explicit uncapped sentinel normalizes
+    assert OffloadConfig(device_bytes=0).device_bytes is None
+
+
+def test_load_rejects_unknown_field_with_hint(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text('{"treshold": 500}')
+    with pytest.raises(ValueError, match="threshold"):
+        OffloadConfig.load(str(p))
+
+
+def test_presets():
+    assert OffloadConfig.preset("paper").sync is True
+    assert OffloadConfig.preset("paper").threshold == 500.0
+    assert OffloadConfig.preset("throughput").adaptive is True
+    lm = OffloadConfig.preset("low-memory")
+    assert lm.device_bytes == 256 << 20 and lm.evict == "refetch"
+    with pytest.raises(ValueError):
+        OffloadConfig.preset("bogus")
+
+
+def test_set_default_is_the_env_free_base(clean_env):
+    prev = cfg_mod.set_default(OffloadConfig(threshold=321.0))
+    try:
+        assert OffloadConfig.from_env().threshold == 321.0
+        # env still layers on top of the file-supplied base
+        clean_env.setenv("SCILIB_THRESHOLD", "111")
+        assert OffloadConfig.from_env().threshold == 111.0
+    finally:
+        cfg_mod.set_default(prev)
+
+
+# --------------------------------------------------------------------- #
+# legacy install() with each knob  ==  Session(config)                   #
+# --------------------------------------------------------------------- #
+def _workload():
+    """Deterministic mixed workload: super-threshold gemm (reused),
+    sub-threshold gemm, a gemv, and an einsum-shaped gemm."""
+    big1 = host_array(_f32((520, 520)))
+    big2 = host_array(_f32((520, 520)))
+    small = host_array(_f32((64, 64)))
+    v = host_array(_f32(520))
+    keep = [big1, big2, small, v]
+    keep.append(jnp.matmul(big1, big2))
+    keep.append(jnp.matmul(big1, big2))      # operand reuse
+    keep.append(jnp.matmul(small, small))
+    keep.append(jnp.matmul(big1, v))         # gemv-shaped
+    keep.append(jnp.einsum("ij,jk->ik", big2, big1))
+    return keep
+
+
+def _counters(stats):
+    """Every deterministic counter (wall-clock seconds excluded)."""
+    per = {n: (r.calls, r.offloaded, r.on_host, r.cache_hits,
+               r.cache_misses, r.dispatch_hits, r.dispatch_misses,
+               r.bytes_in, r.bytes_out, r.transient_bytes, r.sharded,
+               r.tiles)
+           for n, r in stats.per_routine.items()}
+    dev = {d: (s.tiles, s.moved_bytes, s.affinity_hits, s.evictions,
+               s.evicted_bytes)
+           for d, s in stats.per_device.items()}
+    return {"per": per, "dev": dev,
+            "uninstrumented": stats.uninstrumented_calls,
+            "evictions": (stats.evictions, stats.evicted_bytes),
+            "refetch": (stats.refetches, stats.refetched_bytes)}
+
+
+def _trace_shape(trace):
+    return [(c.routine, c.m, c.n, c.k, c.batch, c.devices)
+            for c in trace.calls]
+
+
+#: (env assignment, equivalent config fields, exact-parity?)
+KNOB_CASES = [
+    ({}, {}, True),
+    ({"SCILIB_THRESHOLD": "123.5"}, dict(threshold=123.5), True),
+    ({"SCILIB_SYNC": "1"}, dict(sync=True), True),
+    ({"SCILIB_DISPATCH_CACHE": "0"}, dict(dispatch_cache=False), True),
+    ({"SCILIB_CALLSITE": "0"}, dict(callsite=False), True),
+    ({"SCILIB_POLICY": "memcopy"}, dict(policy="memcopy"), True),
+    ({"SCILIB_POLICY": "cpu"}, dict(policy="cpu"), True),
+    ({"SCILIB_DEVICES": "2", "SCILIB_TILE_MIN": "128"},
+     dict(devices=2, tile_min=128), True),
+    ({"SCILIB_DEVICE_BYTES": "524288"}, dict(device_bytes=524288), True),
+    ({"SCILIB_DEVICE_BYTES": "524288", "SCILIB_EVICT": "lfu"},
+     dict(device_bytes=524288, evict="lfu"), True),
+    ({"SCILIB_DEVICE_BYTES": "524288", "SCILIB_PIN": "never-evict"},
+     dict(device_bytes=524288, pin=True), True),
+    # adaptive locks on measured wall time: decisions are by design not
+    # reproducible run-to-run, so assert call/probe structure only
+    ({"SCILIB_ADAPTIVE": "1", "SCILIB_ADAPTIVE_WARMUP": "4",
+      "SCILIB_SYNC": "1"},
+     dict(adaptive=True, adaptive_warmup=4, sync=True), False),
+]
+
+
+@pytest.mark.parametrize("env,fields,exact", KNOB_CASES,
+                         ids=[" ".join(e) or "defaults"
+                              for e, _, _ in KNOB_CASES])
+def test_legacy_env_install_matches_session_config(env, fields, exact,
+                                                   clean_env):
+    """The acceptance invariant: legacy install() with each documented
+    SCILIB_* knob produces decisions, counters and trace identical to
+    the equivalent Session(config)."""
+    # warm the jit caches first: compile-time tracer pass-throughs are
+    # counted as uninstrumented calls and must not differ between the
+    # two measured runs below
+    with repro.session(OffloadConfig(**fields)):
+        _workload()
+
+    for var, val in env.items():
+        clean_env.setenv(var, val)
+    rt = core.install()
+    keep = _workload()
+    rt.sync()
+    legacy_counters = _counters(rt.stats)
+    legacy_trace = _trace_shape(rt.trace)
+    legacy_report = rt.stats.report()
+    del keep
+    core.uninstall()
+    for var in env:
+        clean_env.delenv(var)
+
+    with repro.session(OffloadConfig(**fields)) as s:
+        keep = _workload()
+        s.sync()
+        session_counters = _counters(s.stats)
+        session_trace = _trace_shape(s.trace)
+        session_report = s.stats.report()
+        del keep
+
+    assert session_trace == legacy_trace
+    if exact:
+        assert session_counters == legacy_counters
+        # the report differs only in measured seconds: compare shape
+        assert len(session_report.splitlines()) == \
+            len(legacy_report.splitlines())
+    else:
+        assert {k: v[0] for k, v in session_counters["per"].items()} == \
+            {k: v[0] for k, v in legacy_counters["per"].items()}
+
+
+def test_runtime_reads_no_env_with_explicit_config(clean_env):
+    """A session with an explicit config is immune to ambient env: the
+    single ingestion boundary is from_env(), which explicit configs
+    never pass through."""
+    clean_env.setenv("SCILIB_THRESHOLD", "10")
+    clean_env.setenv("SCILIB_POLICY", "cpu")
+    clean_env.setenv("SCILIB_DEVICE_BYTES", "4096")
+    with repro.session(OffloadConfig(threshold=800.0)) as s:
+        assert s.runtime.threshold == 800.0
+        assert s.runtime.policy.name == "dfu"
+        assert s.runtime.device_bytes_cap is None
+
+
+# --------------------------------------------------------------------- #
+# sessions: isolation, nesting, lifecycle                                #
+# --------------------------------------------------------------------- #
+def test_sequential_sessions_do_not_leak_state(clean_env):
+    a_np = _f32((520, 520))
+    with repro.session(OffloadConfig(threshold=100.0)) as s1:
+        a = host_array(a_np)
+        jnp.matmul(a, a)
+        assert s1.stats.per_routine["sgemm"].offloaded == 1
+        assert len(s1.runtime.placements) > 0
+    with repro.session(OffloadConfig(policy="cpu",
+                                     threshold=100.0)) as s2:
+        # fresh counters, fresh placement registry, different decisions
+        assert "sgemm" not in s2.stats.per_routine
+        assert len(s2.runtime.placements) == 0
+        a = host_array(a_np)
+        jnp.matmul(a, a)
+        st = s2.stats.per_routine["sgemm"]
+        assert (st.calls, st.offloaded, st.on_host) == (1, 0, 1)
+    assert rtm.active() is None
+
+
+def test_nested_session_close_restores_module_state(clean_env):
+    """Closing an inner session must restore the outer session's
+    module-level state too: the blas-layer cache flag and the resolved
+    memspace mapping, not just the active runtime."""
+    from repro.core import blas, memspace
+    with repro.session(OffloadConfig(dispatch_cache=False, devices=2)):
+        assert blas._CACHE_ON is False
+        assert memspace.active().n_devices == 2
+        with repro.session(OffloadConfig(dispatch_cache=True,
+                                         devices=2)):
+            assert blas._CACHE_ON is True
+        # outer restored: uncached baseline stays uncached
+        assert blas._CACHE_ON is False
+        assert memspace.active().n_devices == 2
+    assert blas._CACHE_ON is True        # env default (no vars set)
+
+
+def test_mixed_level_install_uninstall_share_one_stack(clean_env):
+    """intercept-level install() + runtime-level uninstall() (and vice
+    versa) drain the same legacy stack — no stale session is left."""
+    orig_matmul = jnp.matmul
+    core.install("dfu", threshold=100)
+    stats = rtm.uninstall()              # runtime-level uninstall
+    assert stats is not None
+    assert jnp.matmul is orig_matmul     # symbols restored
+    assert rtm.active() is None
+    assert core.uninstall() is None      # nothing left to pop
+
+
+def test_repeated_install_nests_documented_semantics(clean_env):
+    """Repeated install() nests (documented divergence from the old
+    orphaning globals): each uninstall() restores the previous
+    runtime; the last one tears everything down."""
+    orig_matmul = jnp.matmul
+    r1 = core.install("dfu", threshold=500)
+    r2 = core.install("dfu", threshold=100)
+    assert rtm.active() is r2
+    core.uninstall()
+    assert rtm.active() is r1            # outer install restored
+    assert jnp.matmul is not orig_matmul   # still intercepting
+    core.uninstall()
+    assert rtm.active() is None
+    assert jnp.matmul is orig_matmul
+
+
+def test_nested_sessions_inner_config_wins(clean_env):
+    with repro.session(OffloadConfig(threshold=100.0)) as outer:
+        assert rtm.active() is outer.runtime
+        with repro.session(OffloadConfig(threshold=900.0)) as inner:
+            assert rtm.active() is inner.runtime
+            a = host_array(_f32((520, 520)))
+            jnp.matmul(a, a)           # 520 < 900: stays host inside
+            assert inner.stats.per_routine["sgemm"].on_host == 1
+            assert "sgemm" not in outer.stats.per_routine
+        # outer restored on exit
+        assert rtm.active() is outer.runtime
+        a = host_array(_f32((520, 520)))
+        jnp.matmul(a, a)               # 520 > 100: offloads outside
+        assert outer.stats.per_routine["sgemm"].offloaded == 1
+    assert rtm.active() is None
+
+
+def test_session_close_is_idempotent_and_guards(clean_env):
+    s = repro.session(OffloadConfig(threshold=100.0))
+    assert s.close() is not None
+    assert s.close() is None
+    with pytest.raises(RuntimeError):
+        s.report()
+    with pytest.raises(RuntimeError):
+        s.reconfigure(threshold=200.0)
+
+
+def test_install_uninstall_restore_symbols(clean_env):
+    orig_matmul, orig_dot = jnp.matmul, jnp.dot
+    core.install("dfu", threshold=100)
+    assert jnp.matmul is not orig_matmul
+    core.uninstall()
+    assert jnp.matmul is orig_matmul and jnp.dot is orig_dot
+
+
+def test_reconfigure_flushes_invalidated_state(clean_env):
+    with repro.session(OffloadConfig(threshold=100.0)) as s:
+        a = host_array(_f32((520, 520)))
+        jnp.matmul(a, a)
+        assert s.stats.per_routine["sgemm"].offloaded == 1
+        assert len(s.runtime._decisions) > 0
+        s.reconfigure(threshold=900.0, device_bytes=1 << 20,
+                      evict="refetch")
+        # dispatch cache flushed, threshold applied, caps live
+        assert len(s.runtime._decisions) == 0
+        assert s.runtime.threshold == 900.0
+        assert s.runtime.placements.cap == 1 << 20
+        assert s.runtime.placements.policy.name == "refetch"
+        assert s.config.threshold == 900.0
+        jnp.matmul(a, a)               # same shape, new decision: host
+        assert s.stats.per_routine["sgemm"].on_host == 1
+        # topology is fixed: devices cannot change mid-run
+        with pytest.raises(ValueError):
+            s.reconfigure(devices=s.runtime.n_devices + 1)
+
+
+def test_reconfigure_pin_off_makes_residents_evictable(clean_env):
+    """Turning pin-all off mid-run must unpin existing placements, or a
+    newly-set cap could never evict anything."""
+    with repro.session(OffloadConfig(threshold=100.0, pin=True)) as s:
+        mats = [host_array(_f32((520, 520))) for _ in range(3)]
+        for m in mats:
+            jnp.matmul(m, m)
+        store = s.runtime.placements
+        assert store.pinned_bytes() == store.resident_bytes > 0
+        s.reconfigure(pin=False, device_bytes=520 * 520 * 4)
+        assert store.pinned_bytes() == 0
+        assert store.resident_bytes <= 520 * 520 * 4   # cap enforced
+        assert s.stats.evictions > 0
+        # ... and pin=True re-pins what currently resides
+        s.reconfigure(pin=True)
+        assert store.pinned_bytes() == store.resident_bytes
+
+
+def test_reconfigure_resets_adaptive_locks_on_policy_change(clean_env):
+    with repro.session(OffloadConfig(threshold=100.0, adaptive=True,
+                                     adaptive_warmup=2,
+                                     sync=True)) as s:
+        a = host_array(_f32((256, 256)))
+        for _ in range(4):
+            jnp.matmul(a, a)
+        locked = [p for p in s.runtime.callsites if p.locked is not None]
+        assert locked
+        s.reconfigure(policy="memcopy")
+        assert all(p.locked is None for p in s.runtime.callsites)
+        assert all(p.probes_done == 0 for p in s.runtime.callsites)
+
+
+# --------------------------------------------------------------------- #
+# gemv interception (satellite): mat-vec no longer bypasses the runtime  #
+# --------------------------------------------------------------------- #
+def test_gemv_intercepted_counted_and_host_below_threshold(clean_env):
+    A_np, x_np, z_np = _f32((200, 300)), _f32(300), _f32(200)
+    with repro.session(OffloadConfig(threshold=500.0)) as s:
+        A = host_array(A_np)
+        x = host_array(x_np)
+        z = host_array(z_np)
+        y1 = jnp.matmul(A, x)          # A @ x
+        y2 = jnp.dot(A, x)
+        y3 = jnp.dot(z, A)             # x @ A == A.T @ x
+        st = s.stats.per_routine["sgemv"]
+        assert st.calls == 3
+        assert st.on_host == 3 and st.offloaded == 0   # below threshold
+        trace_routines = [c.routine for c in s.trace.calls]
+        assert trace_routines.count("sgemv") == 3
+        # the trace replays through the simulator (flops defined)
+        from repro.memtier.simulator import MemTierSimulator
+        MemTierSimulator(policy="dfu").run(s.trace)
+    want1 = A_np @ x_np
+    np.testing.assert_allclose(np.asarray(y1), want1, rtol=1e-3,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y2), want1, rtol=1e-3,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y3), z_np @ A_np, rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_gemv_respects_threshold_dispatch(clean_env):
+    with repro.session(OffloadConfig(threshold=30.0)) as s:
+        A = host_array(_f32((200, 300)))      # N_avg = (200*300)^(1/3)
+        x = host_array(_f32(300))             # ~ 39 > 30: offloads
+        jnp.matmul(A, x)
+        st = s.stats.per_routine["sgemv"]
+        assert st.offloaded == 1
+
+
+# --------------------------------------------------------------------- #
+# atexit trace-dump fallback (satellite)                                 #
+# --------------------------------------------------------------------- #
+def _run_subprocess(code):
+    src = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(repro.__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(src, "src")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+
+
+def test_atexit_dumps_trace_of_unclosed_session(tmp_path):
+    path = str(tmp_path / "session_trace.json")
+    proc = _run_subprocess(f"""
+import numpy as np, jax.numpy as jnp
+import repro
+from repro import OffloadConfig
+from repro.core.policy import host_array
+s = repro.session(OffloadConfig(threshold=100.0, trace_path={path!r}))
+a = host_array(np.ones((128, 128), np.float32))
+jnp.matmul(a, a)
+# no close(), no uninstall(): the atexit fallback must dump the trace
+""")
+    assert proc.returncode == 0, proc.stderr
+    t = Trace.load(path)
+    assert len(t) == 1 and t.calls[0].routine == "sgemm"
+
+
+def test_atexit_dumps_trace_of_legacy_env_install(tmp_path):
+    path = str(tmp_path / "legacy_trace.json")
+    proc = _run_subprocess(f"""
+import os
+os.environ["SCILIB_TRACE"] = {path!r}
+import numpy as np, jax.numpy as jnp
+import repro.core as core
+from repro.core.policy import host_array
+core.install("dfu", threshold=100)
+a = host_array(np.ones((128, 128), np.float32))
+jnp.matmul(a, a)
+# no uninstall(): abnormal teardown used to lose the trace
+""")
+    assert proc.returncode == 0, proc.stderr
+    t = Trace.load(path)
+    assert len(t) == 1 and t.calls[0].routine == "sgemm"
+
+
+def test_close_dump_not_duplicated_by_atexit(tmp_path, clean_env):
+    """A session closed normally dumps exactly once (close wins)."""
+    path = str(tmp_path / "t.json")
+    with repro.session(OffloadConfig(threshold=100.0,
+                                     trace_path=path)) as s:
+        a = host_array(_f32((128, 128)))
+        jnp.matmul(a, a)
+    t = Trace.load(path)
+    assert len(t) == 1
+    from repro.core import session as ses
+    ses._atexit_dump()                  # would double-dump if unguarded
+    assert len(Trace.load(path)) == 1
+
+
+# --------------------------------------------------------------------- #
+# autotune --emit-config: the tune->deploy loop (satellite + acceptance) #
+# --------------------------------------------------------------------- #
+def test_autotune_emit_config_loads_and_predicts(tmp_path, capsys,
+                                                 clean_env):
+    from repro.memtier.simulator import MemTierSimulator
+    from repro.tools import autotune as at
+    trace_path = os.path.join(DATA, "mini_trace.json")
+    out = str(tmp_path / "tuned.json")
+    assert at.main([trace_path, "--emit-config", out]) == 0
+    printed = capsys.readouterr().out
+    assert f"config written to {out}" in printed
+    cfg = OffloadConfig.load(out)
+    # the emitted config realizes exactly the printed recommendation:
+    # replaying it through the simulator predicts the same outcome
+    trace = Trace.load(trace_path)
+    result = at.autotune(trace)
+    rep = MemTierSimulator.from_config(cfg).run(Trace.load(trace_path))
+    assert rep.total_s == pytest.approx(result.best.total_s)
+    assert rep.moved_bytes == result.best.moved_bytes
+    assert cfg.policy == result.best.policy
+    assert cfg.resolved_threshold() == pytest.approx(
+        result.best.threshold)
+    # the tuned device count is explicit, never "resolve on deploy"
+    assert cfg.devices == result.best.n_devices
+    # ... and a session can run the file directly
+    with repro.session(cfg) as s:
+        a = host_array(_f32((128, 128)))
+        jnp.matmul(a, a)
+        assert s.stats.per_routine["sgemm"].calls == 1
