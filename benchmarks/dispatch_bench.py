@@ -21,6 +21,12 @@ cached) runtime, on the two workloads the tentpole targets.
   (``evict`` in lru/lfu/refetch).  Reports calls/sec plus the
   refetched GB the cap cost — how each policy's victim choice trades
   throughput against link traffic under constant pressure.
+* ``faults`` — fault-tolerance overhead: the chained workload under
+  the Mem-Copy policy (every call stages transfers, so every call is
+  exposed to injection) at 5% transfer faults.  Three configs: clean
+  (no injection — the guard's fixed cost), default retries (faults
+  absorbed in place), and retries=0 (every fault becomes a host
+  fallback).  Reports calls/sec and the fallback percentage.
 
 Modes are selected with the runtime's own knobs — typed
 ``OffloadConfig`` objects, no env mutation — so the comparison runs
@@ -201,6 +207,35 @@ def _bench_eviction(evict_policy: str) -> Tuple[float, int, int]:
         rtm.uninstall()
 
 
+def _bench_faults(spec: str, retries: int) -> Tuple[float, float, int]:
+    """Chained Mem-Copy gemms under an injected transfer-fault rate.
+    Returns (calls/sec, fallback %, retries) over all reps."""
+    from repro.core import blas
+    from repro.core import runtime as rtm
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(4)
+    rt = rtm.install(config=_mode_config(
+        "fast", policy="memcopy", threshold=100.0, faults=spec,
+        retries=retries, backoff_ms=0.0, breaker=0),
+        record_trace=False)
+    try:
+        a = host_array(rng.standard_normal((CHAIN_N, CHAIN_N))
+                       .astype("float32") / CHAIN_N)
+
+        def loop():
+            c = a
+            for _ in range(CHAIN_CALLS):
+                c = blas.gemm(a, c)
+            return c
+
+        cps = _sweep(loop, rt, CHAIN_CALLS)
+        st = rt.stats.per_routine["sgemm"]
+        return (cps, 100.0 * st.fallbacks / max(1, st.calls),
+                rt.stats.retries)
+    finally:
+        rtm.uninstall()
+
+
 def _record_chain_trace(path: str) -> None:
     """Run the dfuchain workload with trace recording on and dump the
     trace for the autotuner walkthrough (docs/PERF.md)."""
@@ -233,6 +268,11 @@ def bench() -> List[Row]:
     shard = {n: _bench_shardscale(n) for n in (1, 2, 4)}
     evict = {p: _bench_eviction(p)
              for p in ("lru", "lfu", "refetch")}
+    faults = {
+        "clean": _bench_faults("", 2),
+        "retry": _bench_faults("transfer:p=0.05,seed=7", 2),
+        "fallback": _bench_faults("transfer:p=0.05,seed=7", 0),
+    }
     rows.append(("dispatch.smallgemm64.seed_cps", round(small["seed"], 0),
                  "sync + uncached (seed runtime)"))
     rows.append(("dispatch.smallgemm64.fast_cps", round(small["fast"], 0),
@@ -269,6 +309,16 @@ def bench() -> List[Row]:
         rows.append((f"dispatch.evict.mixed.{pol}_refetched_gb",
                      round(refetched / 1e9, 3),
                      "GB re-moved for evicted-then-reused buffers"))
+    labels = {"clean": "no injection (guard fixed cost)",
+              "retry": "5% transfer faults, retries=2 (absorbed)",
+              "fallback": "5% transfer faults, retries=0 (host falls)"}
+    for key, (cps, fb_pct, nretries) in faults.items():
+        rows.append((f"dispatch.faults.{key}_cps", round(cps, 0),
+                     labels[key]))
+        rows.append((f"dispatch.faults.{key}_fallback_pct",
+                     round(fb_pct, 2), "calls served on the host path"))
+    rows.append(("dispatch.faults.retry_retries", faults["retry"][2],
+                 "transient faults absorbed in place (all reps)"))
     return rows
 
 

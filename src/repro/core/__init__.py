@@ -26,8 +26,14 @@ Public surface:
   stack (runtime + interceptors + trace) per workload; sessions nest,
   and ``install``/``uninstall``/``offload`` above are shims over an
   implicit default session.
+* :mod:`repro.core.faults` — fault tolerance: the typed offload error
+  hierarchy, the deterministic fault injector (``SCILIB_FAULTS``), the
+  transient-fault retry policy (``SCILIB_RETRIES``/
+  ``SCILIB_BACKOFF_MS``) and the per-device circuit breaker
+  (``SCILIB_BREAKER``); exhausted faults fall back to the host path
+  bit-identically.
 """
-from repro.core import blas, callsite, lapack, memspace, residency
+from repro.core import blas, callsite, faults, lapack, memspace, residency
 from repro.core.config import OffloadConfig
 from repro.core.intercept import install, offload, uninstall
 from repro.core.policy import host_array
@@ -39,7 +45,8 @@ from repro.core.runtime import OffloadRuntime, active, pin, unpin
 from repro.core.session import Session, active_session
 from repro.core.trace import BlasCall, Trace
 
-__all__ = ["blas", "callsite", "lapack", "memspace", "residency",
-           "install", "offload", "uninstall", "OffloadRuntime", "active",
-           "BlasCall", "Trace", "host_array", "ResidencyStore",
-           "pin", "unpin", "OffloadConfig", "Session", "active_session"]
+__all__ = ["blas", "callsite", "faults", "lapack", "memspace",
+           "residency", "install", "offload", "uninstall",
+           "OffloadRuntime", "active", "BlasCall", "Trace", "host_array",
+           "ResidencyStore", "pin", "unpin", "OffloadConfig", "Session",
+           "active_session"]

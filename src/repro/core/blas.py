@@ -11,6 +11,14 @@ transposes.
 Precision prefix follows dtype: s/d/c/z for f32/f64/c64/c128 (bf16 maps
 to the s-path on TPU). Leading batch dimensions select the batched
 variants (cublas*Batched analogues) with the same placement logic.
+
+Failure semantics: every call returns a correct result or raises.  A
+transfer or kernel failure on the offload path is retried
+(``SCILIB_RETRIES``) and, on exhaustion, the call re-executes on the
+host path with the same operand values — bit-identical output, surfaced
+as a ``fallback:<kind>`` decision and a trace event rather than a user
+exception (:mod:`repro.core.faults`).  Only genuine bugs (type errors,
+shape errors) propagate to the caller.
 """
 from __future__ import annotations
 

@@ -59,6 +59,11 @@ ENV_FIELDS: Dict[str, str] = {
     "pin": "SCILIB_PIN",
     "trace_path": "SCILIB_TRACE",
     "debug": "SCILIB_DEBUG",
+    "faults": "SCILIB_FAULTS",
+    "retries": "SCILIB_RETRIES",
+    "backoff_ms": "SCILIB_BACKOFF_MS",
+    "breaker": "SCILIB_BREAKER",
+    "breaker_cooldown_ms": "SCILIB_BREAKER_COOLDOWN_MS",
 }
 
 #: ``SCILIB_*`` vars that are legitimate but not config fields: kernel
@@ -154,6 +159,39 @@ def _parse_debug(raw: str):
         return _INVALID
 
 
+def _parse_faults(raw: str):
+    from repro.core import faults as _flt
+    try:
+        _flt.parse_spec(raw)
+    except ValueError:
+        return _INVALID
+    return raw
+
+
+def _parse_retries(raw: str):
+    try:
+        val = int(raw)
+    except ValueError:
+        return _INVALID
+    return val if val >= 0 else _INVALID
+
+
+def _parse_nonneg_ms(raw: str):
+    try:
+        val = float(raw)
+    except ValueError:
+        return _INVALID
+    return val if val >= 0 else _INVALID
+
+
+def _parse_breaker(raw: str):
+    try:
+        val = int(raw)
+    except ValueError:
+        return _INVALID
+    return val if val >= 0 else _INVALID
+
+
 _PARSERS: Dict[str, Callable[[str], Any]] = {
     "policy": _parse_policy,
     "threshold": _parse_threshold,
@@ -169,6 +207,11 @@ _PARSERS: Dict[str, Callable[[str], Any]] = {
     "pin": _parse_pin,
     "trace_path": _parse_trace,
     "debug": _parse_debug,
+    "faults": _parse_faults,
+    "retries": _parse_retries,
+    "backoff_ms": _parse_nonneg_ms,
+    "breaker": _parse_breaker,
+    "breaker_cooldown_ms": _parse_nonneg_ms,
 }
 
 #: unknown-var names already warned about (once per process per name)
@@ -217,6 +260,14 @@ class OffloadConfig:
     pin: bool = False                    # pin every placement
     trace_path: str = ""                 # dump trace here on close/exit
     debug: int = 0                       # 1 = events, 2 = per-call
+    # fault tolerance (repro.core.faults): deterministic injection spec,
+    # transient-fault retry, and the per-device circuit breaker
+    faults: str = ""                     # e.g. "transfer:p=0.05,seed=7"
+    retries: int = 2                     # retries for transient faults
+    backoff_ms: float = 1.0              # base exponential backoff
+    breaker: int = 3                     # consecutive failures to trip
+    #                                    # a device (0 = breaker off)
+    breaker_cooldown_ms: float = 1000.0  # quarantine -> half-open probe
 
     # ------------------------------------------------------------------ #
     def __post_init__(self):
@@ -246,6 +297,22 @@ class OffloadConfig:
             raise ValueError(f"tile_min must be >= 1 (got {self.tile_min})")
         if self.debug < 0:
             raise ValueError(f"debug must be >= 0 (got {self.debug})")
+        if self.faults:
+            from repro.core import faults as _flt
+            _flt.parse_spec(self.faults)   # ValueError on a bad spec
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0 (got {self.retries})")
+        if self.backoff_ms < 0:
+            raise ValueError("backoff_ms must be >= 0 "
+                             f"(got {self.backoff_ms})")
+        object.__setattr__(self, "backoff_ms", float(self.backoff_ms))
+        if self.breaker < 0:
+            raise ValueError(f"breaker must be >= 0 (got {self.breaker})")
+        if self.breaker_cooldown_ms < 0:
+            raise ValueError("breaker_cooldown_ms must be >= 0 "
+                             f"(got {self.breaker_cooldown_ms})")
+        object.__setattr__(self, "breaker_cooldown_ms",
+                           float(self.breaker_cooldown_ms))
 
     # ------------------------------------------------------------------ #
     def replace(self, **kw) -> "OffloadConfig":

@@ -34,13 +34,69 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
+
+from repro.core import faults as flt
 
 #: logical tier names (stable across backends)
 HOST = "host"
 DEVICE = "device"
+
+# --------------------------------------------------------------------- #
+# failure semantics (PR 6): a real cross-tier movement toward a DEVICE   #
+# tier is the transfer guard site.  The active runtime installs its      #
+# fault injector here (set_fault_hook) so injected transfer faults fire  #
+# at the genuine call site, *before* any copy or tag mutates state; and  #
+# real backend failures during the move are wrapped into the typed       #
+# hierarchy of repro.core.faults instead of escaping as bare             #
+# XlaRuntimeError — the runtime's retry/fallback guard catches them.     #
+# --------------------------------------------------------------------- #
+#: (device_index_or_None, nbytes) -> None; raises to inject a fault
+_FAULT_HOOK: Optional[Callable[[Optional[int], int], None]] = None
+
+#: SCILIB_DEBUG level, plumbed in by the owning runtime (config boundary)
+_DEBUG = 0
+
+#: exception types a data movement may legitimately raise (XlaRuntimeError
+#: subclasses RuntimeError); anything else is a bug and propagates as-is
+_MOVE_ERRORS = (RuntimeError, MemoryError, OSError)
+
+
+def set_fault_hook(hook: Optional[Callable[[Optional[int], int], None]],
+                   ) -> None:
+    """Install (or clear, with None) the transfer-fault injection hook.
+
+    The runtime layer owns this: it points the hook at the active
+    runtime's :class:`repro.core.faults.FaultInjector` on activation and
+    reconfiguration.  The hook runs immediately before every *real*
+    movement toward a DEVICE tier (never on no-op puts or cache hits),
+    except movements explicitly opted out with ``check=False`` — the
+    host execution path and user-level ``pin()`` must not inherit
+    offload-path faults they cannot fall back from."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = hook
+
+
+def set_debug(level: int) -> None:
+    """Plumb the config's ``debug`` level in (``SCILIB_DEBUG`` stays
+    behind the config boundary; this module never reads the env)."""
+    global _DEBUG
+    _DEBUG = int(level)
+
+
+def _debug_log(msg: str, level: int = 1) -> None:
+    if _DEBUG >= level:
+        print(f"[scilib] {msg}")
+
+
+def _wrap_move_error(exc: BaseException, *, device: Optional[int],
+                     nbytes: int) -> flt.OffloadError:
+    """Classify a raw movement failure into the typed hierarchy."""
+    err = flt.classify("transfer", exc, device=device, nbytes=nbytes)
+    assert err is not None    # _MOVE_ERRORS are always classifiable
+    return err
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,7 +231,9 @@ def tier_of(x) -> str:
         return DEVICE
     try:
         kind = x.sharding.memory_kind or ms.device_kind
-    except Exception:  # non-array leaves
+    except (AttributeError, TypeError) as exc:  # non-array leaves
+        _debug_log(f"tier_of: no sharding on {type(x).__name__} "
+                   f"({exc!r}); assuming DEVICE", level=2)
         return DEVICE
     return HOST if kind == ms.host_kind else DEVICE
 
@@ -191,7 +249,9 @@ def device_of(x) -> Optional[int]:
         return None
     try:
         devs = list(x.devices())
-    except Exception:  # non-array leaves / old jaxlib
+    except (AttributeError, TypeError) as exc:  # non-array / old jaxlib
+        _debug_log(f"device_of: no devices() on {type(x).__name__} "
+                   f"({exc!r})", level=2)
         return None
     if len(devs) != 1:
         return None
@@ -201,7 +261,7 @@ def device_of(x) -> Optional[int]:
         return None
 
 
-def put(x: jax.Array, tier: str) -> jax.Array:
+def put(x: jax.Array, tier: str, *, check: bool = True) -> jax.Array:
     """Re-home a buffer to a logical tier (the ``move_pages()`` analogue).
 
     Real-tier mode issues a physical ``device_put`` to the mapped memory
@@ -209,6 +269,13 @@ def put(x: jax.Array, tier: str) -> jax.Array:
     — the source keeps its own tag, so Mem-Copy-style round trips remain
     observable and DFU's placement registry gets a distinct device-side
     buffer to cache.
+
+    A real movement toward DEVICE is a transfer guard site: the fault
+    hook runs first (injection point — before any state changes), and a
+    failure of the movement itself raises a typed
+    :class:`repro.core.faults.TransferError` / ``DeviceOOMError`` the
+    runtime's retry/fallback guard can absorb.  ``check=False`` opts a
+    call site out of injection (host-path streaming, explicit pins).
     """
     ms = active()
     if not ms.simulated:
@@ -216,11 +283,22 @@ def put(x: jax.Array, tier: str) -> jax.Array:
         cur = x.sharding.memory_kind or ms.device_kind
         if cur == kind:
             return x
-        return jax.device_put(x, x.sharding.with_memory_kind(kind))
+        if check and tier == DEVICE and _FAULT_HOOK is not None:
+            _FAULT_HOOK(None, x.nbytes)
+        try:
+            return jax.device_put(x, x.sharding.with_memory_kind(kind))
+        except _MOVE_ERRORS as exc:
+            raise _wrap_move_error(exc, device=None,
+                                   nbytes=x.nbytes) from exc
     if tier_of(x) == tier:
         return x
+    if check and tier == DEVICE and _FAULT_HOOK is not None:
+        _FAULT_HOOK(None, x.nbytes)
     import jax.numpy as jnp
-    moved = jnp.array(x, copy=True)
+    try:
+        moved = jnp.array(x, copy=True)
+    except _MOVE_ERRORS as exc:
+        raise _wrap_move_error(exc, device=None, nbytes=x.nbytes) from exc
     _tag(moved, tier)
     return moved
 
@@ -233,19 +311,35 @@ def put_block(x: jax.Array, device: int) -> jax.Array:
     tagged ``(DEVICE, device)`` — same first-touch cost model as
     :func:`put`, so per-device movement statistics stay honest on the
     CPU container's ``SCILIB_DEVICES=n`` layout.
+
+    Like :func:`put`, a real movement is a transfer guard site — the
+    fault hook fires first (with the device index, so ``device=``
+    rules in ``SCILIB_FAULTS`` target one tier), and movement failures
+    raise the typed hierarchy.
     """
     if tier_of(x) == DEVICE and device_of(x) == device:
         return x
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK(device, x.nbytes)
     try:
         real = jax.devices()
-    except Exception:  # pragma: no cover - no devices
+    except RuntimeError as exc:  # pragma: no cover - no devices
+        _debug_log(f"put_block: jax.devices() unavailable ({exc!r})")
         real = []
     if len(real) > 1:
-        moved = jax.device_put(x, real[device % len(real)])
+        try:
+            moved = jax.device_put(x, real[device % len(real)])
+        except _MOVE_ERRORS as exc:
+            raise _wrap_move_error(exc, device=device,
+                                   nbytes=x.nbytes) from exc
         _tag(moved, DEVICE, device)
         return moved
     import jax.numpy as jnp
-    moved = jnp.array(x, copy=True)
+    try:
+        moved = jnp.array(x, copy=True)
+    except _MOVE_ERRORS as exc:
+        raise _wrap_move_error(exc, device=device,
+                               nbytes=x.nbytes) from exc
     _tag(moved, DEVICE, device)
     return moved
 

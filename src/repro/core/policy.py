@@ -110,14 +110,16 @@ class PolicyBase:
         Score ties — a block replicated onto several devices by an
         earlier grid layout — break toward the device with the fewest
         tiles scheduled this call, so replication cannot funnel a whole
-        grid onto one device and idle the rest."""
+        grid onto one device and idle the rest.  A quarantined device
+        (circuit breaker open) is never selected, even by affinity —
+        its residents were invalidated at trip time anyway."""
         if self.persistent:
             scores: dict = {}
             for key, nbytes, shared in blocks:
                 if shared:
                     continue
                 for home, store in enumerate(runtime.block_stores):
-                    if key in store:
+                    if key in store and runtime.device_usable(home):
                         scores[home] = scores.get(home, 0) + nbytes
             if scores:
                 return min(scores, key=lambda d: (-scores[d],

@@ -368,6 +368,20 @@ class ResidencyStore:
             n += 1
         return n
 
+    def evict_all(self) -> int:
+        """Force-evict every entry through the normal eviction path —
+        ``evict`` events, ``on_evict`` hooks and refetch tracking all
+        run.  This is *invalidation*, not cap pressure: a quarantined
+        device's residents are gone regardless of pin state (a pin can
+        survive pressure, not a dead device).  Returns entries evicted.
+        """
+        n = 0
+        for key in list(self._entries.keys()):
+            if key in self._entries:      # a hook may drop siblings
+                self._evict(key)
+                n += 1
+        return n
+
     def reserve(self, nbytes: int, *, limit: Optional[int] = None,
                 evict: bool = True) -> bool:
         """HBM-capacity admission (the simulator's page-table semantic):

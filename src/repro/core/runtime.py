@@ -86,6 +86,7 @@ from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple
 import jax
 
 from repro.core import callsite as cs
+from repro.core import faults as flt
 from repro.core import memspace
 from repro.core import residency as res
 from repro.core import threshold as thr
@@ -211,6 +212,10 @@ class RoutineStats:
     # multi-device tile scheduler: calls split across devices / tiles run
     sharded: int = 0
     tiles: int = 0
+    # failure paths: transient-fault retries and host fallbacks after
+    # retry exhaustion / quarantine (the call still completed, on host)
+    retries: int = 0
+    fallbacks: int = 0
 
 
 @dataclasses.dataclass
@@ -238,8 +243,17 @@ class RuntimeStats:
     # traffic (summed over the placement and per-device block stores)
     refetches: int = 0
     refetched_bytes: int = 0
+    # failure-path counters (each increments exactly when the matching
+    # trace event is emitted, so a live run and its replay agree)
+    faults: int = 0            # fault errors observed (injected + real)
+    retries: int = 0           # transient-fault retries performed
+    fallbacks: int = 0         # calls completed on host after a failure
+    quarantines: int = 0       # breaker trips (incl. half-open re-trips)
+    recoveries: int = 0        # quarantined devices re-admitted
     # per-call-site profiles (shared with the owning runtime's registry)
     callsites: Optional[cs.CallSiteRegistry] = None
+    # the owning runtime's per-device circuit breaker (health section)
+    breaker: Optional[flt.HealthTracker] = None
 
     def routine(self, name: str) -> RoutineStats:
         return self.per_routine.setdefault(name, RoutineStats())
@@ -289,6 +303,22 @@ class RuntimeStats:
                 lines.append(f"{'dev' + str(dev):<10}{d.tiles:>8}"
                              f"{d.moved_bytes / 1e9:>10.3f}"
                              f"{d.affinity_hits:>10}{d.evictions:>7}")
+        fault_activity = (self.faults + self.retries + self.fallbacks
+                          + self.quarantines + self.recoveries)
+        if fault_activity:
+            # the health section appears only once failure paths ran, so
+            # fault-free reports are byte-identical to older releases
+            lines.append(f"health: faults={self.faults} "
+                         f"retries={self.retries} "
+                         f"fallbacks={self.fallbacks} "
+                         f"quarantines={self.quarantines} "
+                         f"recoveries={self.recoveries}")
+            if self.breaker is not None:
+                for d, h in enumerate(self.breaker.devices()):
+                    lines.append(f"  dev{d}: {h.state} "
+                                 f"consecutive={h.consecutive} "
+                                 f"failures={h.failures} "
+                                 f"quarantines={h.quarantines}")
         if self.callsites is not None and len(self.callsites):
             lines.append("call sites (top by flops; * = adaptive lock)")
             lines.append(f"{'site':<44}{'calls':>7}{'GFLOP':>9}"
@@ -400,6 +430,21 @@ class OffloadRuntime:
         # tiles assigned to each device within the call being scheduled
         # (tie-breaker: replicated blocks score several devices equally)
         self._sched_load: list = [0] * self.n_devices
+        # fault tolerance: deterministic injector (SCILIB_FAULTS), the
+        # transient-fault retry policy, and the per-device breaker whose
+        # trips invalidate block stores and steer the tile scheduler
+        self.faults = flt.FaultInjector.from_spec(config.faults)
+        self.retry = flt.RetryPolicy(attempts=config.retries,
+                                     backoff_ms=config.backoff_ms)
+        self.health = flt.HealthTracker(
+            self.n_devices, threshold=config.breaker,
+            cooldown_ms=config.breaker_cooldown_ms,
+            on_quarantine=self._on_quarantine,
+            on_recover=self._on_recover)
+        self.stats.breaker = self.health
+        # transfer faults inject inside memspace (the real movement call
+        # sites); the hook is installed by activate(), never here — a
+        # merely-constructed runtime must not clobber the active one's
         # async mode: recent in-flight outputs, drained by sync()
         self._pending: "collections.deque[jax.Array]" = collections.deque(
             maxlen=_PENDING_WINDOW)
@@ -474,13 +519,27 @@ class OffloadRuntime:
                 for key in list(store.keys()):
                     (store.pin if new.pin else store.unpin)(key)
             store.evict_over_cap()
+        # fault tolerance: a new spec gets a fresh injector (counters and
+        # RNG restart — the spec defines the sequence); the breaker keeps
+        # per-device state so reconfiguring knobs cannot un-quarantine a
+        # sick device (disabling the breaker does re-admit everything)
+        self.faults = flt.FaultInjector.from_spec(new.faults)
+        self.retry = flt.RetryPolicy(attempts=new.retries,
+                                     backoff_ms=new.backoff_ms)
+        self.health.reconfigure(threshold=new.breaker,
+                                cooldown_ms=new.breaker_cooldown_ms)
+        if _ACTIVE is self:
+            memspace.set_fault_hook(self._transfer_fault_hook())
+            memspace.set_debug(new.debug)
 
     # ------------------------------------------------------------------ #
     # the residency engine: event + eviction hooks, pinning               #
     # ------------------------------------------------------------------ #
     def _emit_event(self, kind: str, store: str, nbytes: int) -> None:
         """Mirror one residency transition into the trace and the
-        refetch statistics (place/hit/evict/refetch)."""
+        refetch statistics (place/hit/evict/refetch) — and, through the
+        same channel, the fault-tolerance transitions
+        (fault/retry/fallback/quarantine/recover)."""
         if kind == "refetch":
             self.stats.refetches += 1
             self.stats.refetched_bytes += nbytes
@@ -514,15 +573,134 @@ class OffloadRuntime:
                       f"{self.block_stores[device].resident_bytes} B)")
         return _on_evict
 
+    # ------------------------------------------------------------------ #
+    # fault tolerance: guard, retry, fallback, per-device breaker         #
+    # ------------------------------------------------------------------ #
+    def _transfer_fault_hook(self):
+        """The injector's transfer check, as memspace's hook (None when
+        injection is off — the hook test stays one pointer compare)."""
+        if self.faults is None:
+            return None
+        inj = self.faults
+
+        def _hook(device, nbytes):
+            inj.check("transfer", device=device, nbytes=nbytes)
+        return _hook
+
+    def _guarded(self, site: str, fn, *, device: int, nbytes: int,
+                 st: RoutineStats):
+        """Run one transfer or kernel *unit* under the fault guard.
+
+        The unit is the smallest retryable operation (one block
+        movement, one tile kernel): injection happens at its entry,
+        before any state mutates, so a fault absorbed by a retry leaves
+        every counter and residency structure bit-identical to an
+        unfaulted run.  Transient faults retry with exponential backoff
+        (``SCILIB_RETRIES`` / ``SCILIB_BACKOFF_MS``); exhaustion or a
+        permanent fault records one breaker failure against ``device``
+        and raises — :meth:`_execute` turns that into a host fallback.
+        """
+        attempt = 0
+        while True:
+            try:
+                if site == "kernel" and self.faults is not None:
+                    self.faults.check("kernel", device=device,
+                                      nbytes=nbytes)
+                out = fn()
+            except Exception as raw:
+                err = flt.classify(site, raw, device=device,
+                                   nbytes=nbytes)
+                if err is None:       # a bug, not a device fault
+                    raise
+                self.stats.faults += 1
+                self._emit_event("fault", f"{err.kind}@dev{device}",
+                                 nbytes)
+                if self.debug >= 1:
+                    print(f"[scilib] {site} fault on dev{device} "
+                          f"(attempt {attempt}): {err}")
+                if err.transient and attempt < self.retry.attempts:
+                    self.stats.retries += 1
+                    st.retries += 1
+                    self._emit_event("retry", f"{site}@dev{device}",
+                                     nbytes)
+                    self.retry.sleep(attempt)
+                    attempt += 1
+                    continue
+                self.health.failure(device)
+                if err is raw:
+                    raise
+                raise err from raw
+            else:
+                self.health.ok(device)
+                return out
+
+    def _on_quarantine(self, device: int) -> None:
+        """Breaker trip: invalidate everything resident on the device
+        (evict-style events — the next use re-places on a healthy tier)
+        and record the transition.  The tile scheduler and the plan
+        stage consult ``health.usable`` and re-shard around it."""
+        self.stats.quarantines += 1
+        invalidated = self.block_stores[device].evict_all()
+        if device == 0:
+            # the whole-call placement registry is homed on tier 0
+            invalidated += self.placements.evict_all()
+        self._emit_event("quarantine", f"dev{device}", 0)
+        if self.debug >= 1:
+            print(f"[scilib] dev{device} quarantined "
+                  f"({invalidated} residents invalidated)")
+
+    def _on_recover(self, device: int) -> None:
+        """Half-open probe succeeded: the device is healthy again."""
+        self.stats.recoveries += 1
+        self._emit_event("recover", f"dev{device}", 0)
+        if self.debug >= 1:
+            print(f"[scilib] dev{device} recovered")
+
+    def device_usable(self, device: int) -> bool:
+        """May the scheduler route work to this device tier now?"""
+        return self.health.usable(device)
+
+    def _whole_device(self) -> int:
+        """Device-tier index the whole-call (unsharded) offload path is
+        attributed to: tier 0, or the first usable tier when 0 is
+        quarantined (the logical DEVICE put has no index of its own)."""
+        if self.n_devices == 1 or self.health.usable(0):
+            return 0
+        for d in range(1, self.n_devices):
+            if self.health.usable(d):
+                return d
+        return 0
+
+    def _fallback_host(self, call: CallContext,
+                       decision: DispatchDecision, st: RoutineStats,
+                       exc: flt.OffloadError) -> jax.Array:
+        """Retry exhausted (or a permanent fault): run the call on the
+        host path — the same jitted arithmetic on the same operand
+        values, so the result is bit-identical to an unoffloaded run —
+        and surface the decision as ``fallback:<kind>`` in the IR."""
+        decision.offload = False
+        decision.plan = None
+        decision.why = f"fallback:{exc.kind}"
+        self.stats.fallbacks += 1
+        st.fallbacks += 1
+        st.on_host += 1
+        dev = exc.device if exc.device is not None else 0
+        self._emit_event("fallback", f"{exc.kind}@dev{dev}", exc.nbytes)
+        if self.debug >= 1:
+            print(f"[scilib] {call.routine} falling back to host: {exc}")
+        return call.compute(*self._harmonize(call.arrays, st))
+
     def pin(self, x: jax.Array) -> jax.Array:
         """Pin a buffer on the device tier: place it now if needed and
         mark it never-evictable — it survives arbitrary cap pressure
         until :meth:`unpin` or the buffer dies.  Returns the placed
-        device-tier buffer (the pinned residency the next calls hit)."""
+        device-tier buffer (the pinned residency the next calls hit).
+        Pinning is a user-level movement with no fallback path, so it
+        opts out of fault injection."""
         placed = self.placements.get(id(x))
         if placed is None:
             placed = (x if memspace.tier_of(x) == memspace.DEVICE
-                      else memspace.put(x, memspace.DEVICE))
+                      else memspace.put(x, memspace.DEVICE, check=False))
             self.placements.put(id(x), placed, placed.nbytes, anchor=x)
             self.alias_trace_id(x, placed)
         self.placements.pin(id(x))
@@ -540,9 +718,15 @@ class OffloadRuntime:
     # multi-device block stores + tile scheduler                          #
     # ------------------------------------------------------------------ #
     def next_device(self) -> int:
-        """Round-robin cursor for blocks with no residency anywhere."""
-        dev = self._rr_cursor % self.n_devices
-        self._rr_cursor += 1
+        """Round-robin cursor for blocks with no residency anywhere.
+        Quarantined devices are skipped; with every device quarantined
+        the cursor value is returned anyway (callers only reach here
+        when the degraded-mode check has already allowed offload)."""
+        for _ in range(self.n_devices):
+            dev = self._rr_cursor % self.n_devices
+            self._rr_cursor += 1
+            if self.health.usable(dev):
+                return dev
         return dev
 
     def scheduled_load(self, device: int) -> int:
@@ -553,13 +737,15 @@ class OffloadRuntime:
     def device_resident_bytes(self, device: int) -> int:
         return self.block_stores[device].resident_bytes
 
-    def _place_block(self, device: int, op: TileOp) -> Tuple[jax.Array, int,
-                                                             bool]:
+    def _place_block(self, device: int, op: TileOp,
+                     st: RoutineStats) -> Tuple[jax.Array, int, bool]:
         """Materialize one operand block on one device tier.
 
         Returns (placed block, bytes moved, affinity hit).  Persistent
         policies (DFU/counter/pinned) register the block so later calls
-        find it resident; Mem-Copy stages fresh every call."""
+        find it resident; Mem-Copy stages fresh every call.  The actual
+        movement runs under the fault guard — a retried block put is a
+        perfect no-op (cache hits return above and never see it)."""
         key = op.key()
         store = self.block_stores[device]
         persistent = self.policy.persistent
@@ -568,7 +754,9 @@ class OffloadRuntime:
             if cached is not None:
                 return cached, 0, True
         block = op.materialize()
-        placed = memspace.put_block(block, device)
+        placed = self._guarded(
+            "transfer", lambda: memspace.put_block(block, device),
+            device=device, nbytes=op.nbytes, st=st)
         # a no-op put (block already home on this device, e.g. a chained
         # output reused whole) moved nothing — keep the stats honest
         moved = 0 if placed is block else op.nbytes
@@ -602,7 +790,7 @@ class OffloadRuntime:
             dst = self.stats.device(dev)
             placed = []
             for op in tile.ops:
-                arr, moved, hit = self._place_block(dev, op)
+                arr, moved, hit = self._place_block(dev, op, st)
                 st.bytes_in += moved
                 dst.moved_bytes += moved
                 st.cache_hits += int(hit)
@@ -611,7 +799,9 @@ class OffloadRuntime:
                 if site is not None:
                     site.observe_residency(hit)
                 placed.append(arr)
-            outs.append(tile.compute(*placed))
+            outs.append(self._guarded(
+                "kernel", lambda t=tile, p=placed: t.compute(*p),
+                device=dev, nbytes=0, st=st))
             dst.tiles += 1
         out = plan.gather(outs)
         if self.policy.persistent:
@@ -635,9 +825,31 @@ class OffloadRuntime:
     def sync(self) -> "OffloadRuntime":
         """Block until every tracked in-flight result is materialized
         (XLA executes in submission order, so draining the recent window
-        fences everything submitted before it)."""
+        fences everything submitted before it).
+
+        Exception-safe: a failed buffer never leaves later buffers
+        undrained.  Every pending result is awaited; the first error is
+        re-raised with later ones attached as ``__notes__`` (and logged
+        under ``SCILIB_DEBUG``) rather than silently dropped."""
+        first: Optional[BaseException] = None
+        extras: list = []
         while self._pending:
-            self._pending.popleft().block_until_ready()
+            try:
+                self._pending.popleft().block_until_ready()
+            except Exception as exc:
+                if first is None:
+                    first = exc
+                else:
+                    extras.append(exc)
+        if first is not None:
+            for i, exc in enumerate(extras):
+                note = f"sync: also failed ({i + 2}/{len(extras) + 1}): " \
+                       f"{type(exc).__name__}: {exc}"
+                if hasattr(first, "add_note"):   # py3.11+
+                    first.add_note(note)
+                if self.debug >= 1:
+                    print(f"[scilib] {note}")
+            raise first
         return self
 
     # ------------------------------------------------------------------ #
@@ -741,6 +953,14 @@ class OffloadRuntime:
         if decision.offload and not self.policy.offloads:
             decision.offload = False
             decision.why = "policy:host-only"
+        if decision.offload and not self.health.any_usable():
+            # degraded mode: every device tier quarantined — keep
+            # serving on the host path until a half-open probe readmits
+            decision.offload = False
+            decision.why = "fallback:quarantined"
+            self.stats.fallbacks += 1
+            st.fallbacks += 1
+            self._emit_event("fallback", "quarantined", 0)
         return decision
 
     def _stage_adaptive(self, call: CallContext,
@@ -806,9 +1026,10 @@ class OffloadRuntime:
     # ------------------------------------------------------------------ #
     def _stage_plan(self, call: CallContext,
                     decision: DispatchDecision) -> DispatchDecision:
+        n_avail = self.health.usable_count()
         if (decision.offload and call.shard is not None
-                and self.n_devices > 1 and self.policy.shardable):
-            decision.plan = call.shard(self.n_devices)
+                and n_avail > 1 and self.policy.shardable):
+            decision.plan = call.shard(n_avail)
         return decision
 
     # ------------------------------------------------------------------ #
@@ -820,24 +1041,38 @@ class OffloadRuntime:
             out = call.compute(*self._harmonize(call.arrays, st))
             st.on_host += 1
             return out, ()
-        if decision.plan is not None:
-            return self._sharded_call(st, decision.plan, site=call.site)
-        return self._offload_whole(call, st), ()
+        try:
+            if decision.plan is not None:
+                return self._sharded_call(st, decision.plan,
+                                          site=call.site)
+            return self._offload_whole(call, st), ()
+        except flt.OffloadError as exc:
+            return self._fallback_host(call, decision, st, exc), ()
 
     def _offload_whole(self, call: CallContext,
                        st: RoutineStats) -> jax.Array:
-        """Single-device offload: the policy places every operand."""
+        """Single-device offload: the policy places every operand.
+        Each operand movement and the kernel launch are separate
+        guarded units, attributed to the whole-call device tier."""
         site = call.site
+        dev = self._whole_device()
         placed, budget_used = [], 0
         ai = self._arith_intensity(call.routine, call.m, call.n, call.k,
                                    call.arrays, call.batch)
         for (role, x, reads, written) in call.operands:
             if isinstance(self.policy, CounterPolicy):
-                p = self.policy.place_operand(
-                    self, x, reads_per_elem=reads, written=written,
-                    ai=ai, budget_used=budget_used)
+                p = self._guarded(
+                    "transfer",
+                    lambda x=x, r=reads, w=written, b=budget_used:
+                        self.policy.place_operand(
+                            self, x, reads_per_elem=r, written=w,
+                            ai=ai, budget_used=b),
+                    device=dev, nbytes=x.nbytes, st=st)
             else:
-                p = self.policy.place_operand(self, x)
+                p = self._guarded(
+                    "transfer",
+                    lambda x=x: self.policy.place_operand(self, x),
+                    device=dev, nbytes=x.nbytes, st=st)
             budget_used += p.moved_bytes
             st.bytes_in += p.moved_bytes
             st.cache_hits += int(p.cache_hit)
@@ -849,8 +1084,14 @@ class OffloadRuntime:
             if p.moved_bytes or p.cache_hit:
                 self.alias_trace_id(x, p.array)
             placed.append(p.array)
-        out = call.compute(*self._harmonize(placed, st))
-        out_p = self.policy.place_output(self, out)
+        # harmonize outside the kernel guard: a retried kernel must not
+        # re-bill transient streaming bytes
+        args = self._harmonize(placed, st)
+        out = self._guarded("kernel", lambda: call.compute(*args),
+                            device=dev, nbytes=0, st=st)
+        out_p = self._guarded(
+            "transfer", lambda: self.policy.place_output(self, out),
+            device=dev, nbytes=out.nbytes, st=st)
         st.bytes_out += out_p.moved_bytes
         st.offloaded += 1
         return out_p.array
@@ -892,7 +1133,10 @@ class OffloadRuntime:
             if memspace.tier_of(a) != memspace.DEVICE:
                 st.transient_bytes += a.nbytes
                 if not simulated:
-                    a = memspace.put(a, memspace.DEVICE)
+                    # transient streaming, not a placement decision (and
+                    # the host fallback path itself runs through here):
+                    # never inject faults on it
+                    a = memspace.put(a, memspace.DEVICE, check=False)
             out.append(a)
         return out
 
@@ -949,9 +1193,17 @@ _ACTIVE: Optional[OffloadRuntime] = None
 
 def activate(runtime: Optional[OffloadRuntime]) -> None:
     """Make ``runtime`` the dispatch target (None deactivates).  The
-    session layer drives this; application code opens sessions instead."""
+    session layer drives this; application code opens sessions instead.
+    The memspace fault hook follows the active runtime, so a nested
+    session's injector never outlives its activation."""
     global _ACTIVE
     _ACTIVE = runtime
+    if runtime is None:
+        memspace.set_fault_hook(None)
+        memspace.set_debug(0)
+    else:
+        memspace.set_fault_hook(runtime._transfer_fault_hook())
+        memspace.set_debug(runtime.debug)
 
 
 def install(policy: Optional[str] = None,

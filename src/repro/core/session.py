@@ -225,8 +225,13 @@ class Session:
             if self.config.debug >= 1:
                 print(f"[scilib] trace ({len(runtime.trace)} calls) "
                       f"-> {path} ({reason})")
-        except OSError as exc:   # never let stats/teardown die on a path
-            print(f"[scilib] trace dump to {path!r} failed: {exc}")
+        except Exception as exc:   # noqa: BLE001 — teardown must finish:
+            # a failed dump (bad path, full disk, serialization bug) is
+            # reported, never allowed to mask the process exit status or
+            # leave a half-closed session.  trace.dump writes through a
+            # temp file + rename, so `path` is never left truncated.
+            print(f"[scilib] trace dump to {path!r} failed: "
+                  f"{type(exc).__name__}: {exc}")
 
     def _require_open(self) -> None:
         if self.runtime is None:

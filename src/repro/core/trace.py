@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core.residency import ResidencyEvent
@@ -116,7 +117,11 @@ class Trace:
     residency stores (:mod:`repro.core.residency`), each stamped with
     the call index it interleaves at.  A replay of the same trace under
     the same cap and eviction policy can therefore be checked
-    count-for-count against what the live run actually did.
+    count-for-count against what the live run actually did.  Fault
+    tolerance reuses the same channel: ``fault``/``retry``/``fallback``/
+    ``quarantine``/``recover`` events (:mod:`repro.core.faults`) record
+    what actually went wrong and where the run degraded, so a faulted
+    trace replays to the exact live fallback/retry counters.
     """
 
     def __init__(self) -> None:
@@ -210,6 +215,10 @@ class Trace:
         return sum(c.flops for c in self.calls)
 
     def dump(self, path: str) -> None:
+        """Write the trace atomically: serialize to a sibling temp file,
+        fsync, then rename over ``path`` — a crash mid-dump can never
+        leave a truncated trace where a valid one (or nothing) should
+        be, and a reader racing the dump sees old-or-new, not garbage."""
         payload = {
             "buffers": {str(k): [v, self.buffer_names[k]]
                         for k, v in self.buffer_sizes.items()},
@@ -217,8 +226,19 @@ class Trace:
         }
         if self.events:
             payload["events"] = [e.to_json() for e in self.events]
-        with open(path, "w") as f:
-            json.dump(payload, f)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(payload, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @classmethod
     def load(cls, path: str) -> "Trace":

@@ -88,6 +88,14 @@ class PolicyReport:
     evictions: int = 0                   # cap-pressure evictions
     refetches: int = 0                   # evicted entries placed again
     refetched_bytes: int = 0
+    # fault-tolerance counters replayed off the trace's fault events
+    # (repro.core.faults): a faulted live run and its replay agree on
+    # these exactly — the trace records where the run degraded
+    faults: int = 0
+    retries: int = 0
+    fallbacks: int = 0
+    quarantines: int = 0
+    recoveries: int = 0
     total_s: float = 0.0
     blas_device_s: float = 0.0
     blas_host_s: float = 0.0
@@ -472,14 +480,20 @@ class MemTierSimulator:
 
     # ------------------------------------------------------------------ #
     def run(self, trace: Trace) -> PolicyReport:
-        for call in trace:
+        # fault replay: a call the live run fell back to host (retry
+        # exhaustion or total quarantine) is host-bound here too — the
+        # fallback events carry the call index they interleaved at
+        forced_host = {e.call_index for e in trace.events
+                       if e.kind == "fallback"}
+        for i, call in enumerate(trace):
             bufs = [self._buffer(trace, bid)
                     for _, bid, _, _, _ in call.operands]
             # panel factorization (getf2) is not level-3: never offloaded,
             # it serializes on the host between the device BLAS calls
             offload = (self.policy != "cpu"
                        and not call.routine.endswith("getf2")
-                       and call.n_avg > self.threshold)
+                       and call.n_avg > self.threshold
+                       and i not in forced_host)
             if not offload:
                 t = self._host_call(call, bufs)
             elif self.policy == "memcopy":
@@ -511,6 +525,13 @@ class MemTierSimulator:
         self.report.refetches = sum(s.refetches for s in self._stores)
         self.report.refetched_bytes = sum(s.refetched_bytes
                                           for s in self._stores)
+        # fault counters come straight off the recorded events — the
+        # injector is deterministic, so live == replay by construction
+        self.report.faults = trace.event_count("fault")
+        self.report.retries = trace.event_count("retry")
+        self.report.fallbacks = trace.event_count("fallback")
+        self.report.quarantines = trace.event_count("quarantine")
+        self.report.recoveries = trace.event_count("recover")
         return self.report
 
     # convenience: residency of a trace buffer after the run

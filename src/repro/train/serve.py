@@ -57,7 +57,9 @@ def _tree_put(tree, tier: str) -> Tuple[Any, int]:
     for x in leaves:
         if memspace.tier_of(x) != tier:
             moved += x.nbytes
-            x = memspace.put(x, tier)
+            # application-level weight/cache placement, not an offload
+            # decision: opt out of fault injection (no fallback exists)
+            x = memspace.put(x, tier, check=False)
         out.append(x)
     return tdef.unflatten(out), moved
 

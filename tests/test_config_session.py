@@ -60,6 +60,11 @@ MATRIX = {
     "pin": ("never-evict", True),
     "trace_path": ("/tmp/trace.json", "/tmp/trace.json"),
     "debug": ("2", 2),
+    "faults": ("transfer:p=0.5,seed=3", "transfer:p=0.5,seed=3"),
+    "retries": ("4", 4),
+    "backoff_ms": ("2.5", 2.5),
+    "breaker": ("5", 5),
+    "breaker_cooldown_ms": ("250", 250.0),
 }
 
 
