@@ -64,17 +64,37 @@ _SCALARS: Dict[Tuple, jax.Array] = {}   # every runtime construction
 _BOUND: Dict[Hashable, Callable] = {}
 _CACHE_LIMIT = 4096
 
+# Context-local override of the cache flag (PR 7): concurrent sessions
+# with different ``dispatch_cache`` settings each see their own flag.
+# ``_CACHE_ON`` stays as the process-wide default/mirror — it is what
+# sessionless threads fall back to, and what single-threaded callers
+# introspect (the config tests assert on it directly).  The memo tables
+# themselves stay shared: entries are pure functions of their keys, the
+# dict writes are GIL-atomic, and a racing over-limit clear only costs
+# a re-derivation.
+from contextvars import ContextVar
+_CACHE_VAR: ContextVar[Optional[bool]] = (
+    ContextVar("scilib_dispatch_cache", default=None))
+
 
 def refresh_cache_flag(enabled: Optional[bool] = None) -> None:
-    """Sync the module-level cache flag with the owning config's
-    ``dispatch_cache`` field (called from runtime construction /
-    reconfigure).  With no argument, re-resolves through the config
-    env boundary — the dlsym-mode path with no runtime installed."""
+    """Sync the cache flag with the owning config's ``dispatch_cache``
+    field (called from runtime construction / reconfigure).  With no
+    argument, re-resolves through the config env boundary — the
+    dlsym-mode path with no runtime installed.  Sets both the
+    context-local flag (this session's threads) and the process mirror
+    (sessionless fallback)."""
     global _CACHE_ON
     if enabled is None:
         from repro.core.config import OffloadConfig
         enabled = OffloadConfig.from_env().dispatch_cache
+    _CACHE_VAR.set(bool(enabled))
     _CACHE_ON = bool(enabled)
+
+
+def _cache_enabled() -> bool:
+    v = _CACHE_VAR.get()
+    return _CACHE_ON if v is None else v
 
 
 def clear_caches() -> None:
@@ -92,7 +112,7 @@ def _hashable(v):
 def _scalar(v, dtype) -> jax.Array:
     """Device scalar for alpha/beta, memoized by (value, dtype)."""
     key = _hashable(v)
-    if not _CACHE_ON or key is None:
+    if not _cache_enabled() or key is None:
         return jnp.asarray(v, dtype=dtype)
     full = (key, jnp.dtype(dtype).name)
     arr = _SCALARS.get(full)
@@ -105,7 +125,7 @@ def _scalar(v, dtype) -> jax.Array:
 
 def _bound(key: Optional[Hashable], factory: Callable[[], Callable]):
     """Memoize the bound compute closure for one call-site signature."""
-    if not _CACHE_ON or key is None:
+    if not _cache_enabled() or key is None:
         return factory()
     fn = _BOUND.get(key)
     if fn is None:

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import sys
+import threading
 from typing import Dict, Iterator, List, Optional
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
@@ -89,6 +90,10 @@ class CallSiteProfile:
     locked: Optional[bool] = None          # the locked offload decision
     locked_why: str = ""
     last_offload: Optional[bool] = None    # decision of the latest call
+    # several threads adopting one session can observe a shared site
+    # concurrently; the profile lock keeps each observation atomic
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     def observe(self, n_avg: float, flops: float, seconds: float,
@@ -97,21 +102,22 @@ class CallSiteProfile:
         means "not derived" (the locked adaptive fast path skips the
         derivation): the call still counts, the size distribution —
         already captured during warmup — is left untouched."""
-        self.calls += 1
-        self.flops += flops
-        self.seconds += seconds
-        if offload:
-            self.offloaded += 1
-        else:
-            self.on_host += 1
-        self.last_offload = offload
-        if n_avg > 0:
-            if n_avg < self.n_avg_min:
-                self.n_avg_min = n_avg
-            if n_avg > self.n_avg_max:
-                self.n_avg_max = n_avg
-            self.n_avg_sum += n_avg
-            self.n_avg_count += 1
+        with self._lock:
+            self.calls += 1
+            self.flops += flops
+            self.seconds += seconds
+            if offload:
+                self.offloaded += 1
+            else:
+                self.on_host += 1
+            self.last_offload = offload
+            if n_avg > 0:
+                if n_avg < self.n_avg_min:
+                    self.n_avg_min = n_avg
+                if n_avg > self.n_avg_max:
+                    self.n_avg_max = n_avg
+                self.n_avg_sum += n_avg
+                self.n_avg_count += 1
 
     def observe_residency(self, hit: bool) -> None:
         """Residency hit-rate source: one operand placement attempt at
@@ -120,21 +126,23 @@ class CallSiteProfile:
         mode's view of locality both read these counters — sites whose
         operands are always resident are exactly the sites DFU wins on.
         """
-        self.lookups += 1
-        self.hits += int(hit)
+        with self._lock:
+            self.lookups += 1
+            self.hits += int(hit)
 
     def observe_probe(self, offload: bool, seconds: float) -> None:
         """Record one timed adaptive-warmup probe on one path."""
-        if offload:
-            self.device_timed += 1
-            self.device_seconds += seconds
-            if seconds < self.device_best:
-                self.device_best = seconds
-        else:
-            self.host_timed += 1
-            self.host_seconds += seconds
-            if seconds < self.host_best:
-                self.host_best = seconds
+        with self._lock:
+            if offload:
+                self.device_timed += 1
+                self.device_seconds += seconds
+                if seconds < self.device_best:
+                    self.device_best = seconds
+            else:
+                self.host_timed += 1
+                self.host_seconds += seconds
+                if seconds < self.host_best:
+                    self.host_best = seconds
 
     # ------------------------------------------------------------------ #
     @property
@@ -156,17 +164,18 @@ class CallSiteProfile:
         ``cpu`` policy forces every probe host-side) loses by default;
         with no samples at all the threshold ``fallback`` decides.
         """
-        if self.locked is not None:
+        with self._lock:
+            if self.locked is not None:
+                return self.locked
+            if self.probes_done == 0:
+                self.locked = bool(fallback)
+                self.locked_why = "no probes; threshold fallback"
+                return self.locked
+            self.locked = self.device_best < self.host_best
+            self.locked_why = (f"device {self.device_best * 1e6:.0f}us "
+                               f"vs host {self.host_best * 1e6:.0f}us "
+                               f"over {self.probes_done} probes")
             return self.locked
-        if self.probes_done == 0:
-            self.locked = bool(fallback)
-            self.locked_why = "no probes; threshold fallback"
-            return self.locked
-        self.locked = self.device_best < self.host_best
-        self.locked_why = (f"device {self.device_best * 1e6:.0f}us vs "
-                           f"host {self.host_best * 1e6:.0f}us "
-                           f"over {self.probes_done} probes")
-        return self.locked
 
     # ------------------------------------------------------------------ #
     @property
@@ -188,15 +197,21 @@ class CallSiteProfile:
 
 
 class CallSiteRegistry:
-    """Site id -> profile; the runtime's patched-call-site table."""
+    """Site id -> profile; the runtime's patched-call-site table.
+    Creation is lock-guarded so two threads hitting a new site for the
+    first time agree on one profile (a lost profile loses its counts)."""
 
     def __init__(self) -> None:
         self._sites: Dict[str, CallSiteProfile] = {}
+        self._lock = threading.Lock()
 
     def profile(self, site: str) -> CallSiteProfile:
         prof = self._sites.get(site)
         if prof is None:
-            prof = self._sites[site] = CallSiteProfile(site)
+            with self._lock:
+                prof = self._sites.get(site)
+                if prof is None:
+                    prof = self._sites[site] = CallSiteProfile(site)
         return prof
 
     def get(self, site: str) -> Optional[CallSiteProfile]:

@@ -64,6 +64,8 @@ ENV_FIELDS: Dict[str, str] = {
     "backoff_ms": "SCILIB_BACKOFF_MS",
     "breaker": "SCILIB_BREAKER",
     "breaker_cooldown_ms": "SCILIB_BREAKER_COOLDOWN_MS",
+    "pool_bytes": "SCILIB_POOL_BYTES",
+    "pool_quota": "SCILIB_POOL_QUOTA",
 }
 
 #: ``SCILIB_*`` vars that are legitimate but not config fields: kernel
@@ -212,6 +214,8 @@ _PARSERS: Dict[str, Callable[[str], Any]] = {
     "backoff_ms": _parse_nonneg_ms,
     "breaker": _parse_breaker,
     "breaker_cooldown_ms": _parse_nonneg_ms,
+    "pool_bytes": _parse_device_bytes,
+    "pool_quota": _parse_device_bytes,
 }
 
 #: unknown-var names already warned about (once per process per name)
@@ -268,6 +272,11 @@ class OffloadConfig:
     breaker: int = 3                     # consecutive failures to trip
     #                                    # a device (0 = breaker off)
     breaker_cooldown_ms: float = 1000.0  # quarantine -> half-open probe
+    # multi-tenant shared pool: sessions with pool_bytes set draw on the
+    # process-wide SharedDevicePool of that capacity; pool_quota is this
+    # session's byte quota inside it (None = fair equal share)
+    pool_bytes: Optional[int] = None     # shared-pool capacity (0 = off)
+    pool_quota: Optional[int] = None     # this tenant's quota (0 = none)
 
     # ------------------------------------------------------------------ #
     def __post_init__(self):
@@ -313,6 +322,13 @@ class OffloadConfig:
                              f"(got {self.breaker_cooldown_ms})")
         object.__setattr__(self, "breaker_cooldown_ms",
                            float(self.breaker_cooldown_ms))
+        for name in ("pool_bytes", "pool_quota"):
+            val = getattr(self, name)
+            if val is not None:
+                if val < 0:
+                    raise ValueError(f"{name} must be >= 0 (got {val})")
+                if val == 0:              # explicit "unset" sentinel
+                    object.__setattr__(self, name, None)
 
     # ------------------------------------------------------------------ #
     def replace(self, **kw) -> "OffloadConfig":

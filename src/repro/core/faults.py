@@ -54,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import random
 import re
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -249,6 +250,9 @@ class FaultInjector:
         self._counts = [0] * len(self.rules)
         #: injected faults by kind (latency spikes count too)
         self.injected: Dict[str, int] = {k: 0 for k in _KINDS}
+        # the counter/RNG walk is the determinism contract; keep it
+        # atomic per check so shared injectors stay sequence-exact
+        self._lock = threading.Lock()
 
     @classmethod
     def from_spec(cls, spec: str) -> Optional["FaultInjector"]:
@@ -264,26 +268,38 @@ class FaultInjector:
         """Consult every applicable rule at one guard site; raises the
         mapped :class:`OffloadError` (or sleeps, for latency) when a
         rule fires.  Called *before* the guarded operation touches any
-        state, so an absorbed fault perturbs nothing."""
-        for i, rule in enumerate(self.rules):
-            if rule.kind not in _SITE_KINDS[site]:
-                continue
-            if rule.device is not None and rule.device != device:
-                continue
-            fire = False
-            if rule.nth:
-                self._counts[i] += 1
-                fire = self._counts[i] % rule.nth == 0
-            if not fire and rule.p:
-                fire = self._rngs[i].random() < rule.p
-            if not fire:
-                continue
-            self.injected[rule.kind] += 1
-            if rule.kind == "latency":
-                time.sleep(rule.ms / 1000.0)
-                continue
-            err = _INJECTED_ERRORS[rule.kind]
-            raise err(f"injected {rule.kind} fault at {site} "
+        state, so an absorbed fault perturbs nothing.
+
+        The rule walk (counters, RNG draws, injected tallies) runs under
+        the injector lock so concurrent checks interleave as whole
+        checks; the latency sleep and the raise happen outside it."""
+        sleep_s = 0.0
+        fired: Optional[FaultRule] = None
+        with self._lock:
+            for i, rule in enumerate(self.rules):
+                if rule.kind not in _SITE_KINDS[site]:
+                    continue
+                if rule.device is not None and rule.device != device:
+                    continue
+                fire = False
+                if rule.nth:
+                    self._counts[i] += 1
+                    fire = self._counts[i] % rule.nth == 0
+                if not fire and rule.p:
+                    fire = self._rngs[i].random() < rule.p
+                if not fire:
+                    continue
+                self.injected[rule.kind] += 1
+                if rule.kind == "latency":
+                    sleep_s += rule.ms / 1000.0
+                    continue
+                fired = rule
+                break
+        if sleep_s > 0:
+            time.sleep(sleep_s)
+        if fired is not None:
+            err = _INJECTED_ERRORS[fired.kind]
+            raise err(f"injected {fired.kind} fault at {site} "
                       f"(device={device}, nbytes={nbytes})",
                       device=device, nbytes=nbytes, injected=True)
 
@@ -356,6 +372,10 @@ class HealthTracker:
         self.on_recover = on_recover
         self._devs = [DeviceHealth() for _ in range(self.n_devices)]
         self._n_not_closed = 0
+        # breaker transitions are multi-field updates; the RLock keeps
+        # them atomic (reentrant: usable_count -> usable).  Lock order:
+        # acquired after the runtime lock, before any store lock.
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------ #
     @property
@@ -372,32 +392,35 @@ class HealthTracker:
                     cooldown_ms: float) -> None:
         """Update the knobs in place, keeping per-device state (live
         ``Session.reconfigure``).  Disabling re-admits every device."""
-        self.threshold = int(threshold)
-        self.cooldown_ms = float(cooldown_ms)
-        if not self.enabled:
-            for h in self._devs:
-                h.state = CLOSED
-                h.consecutive = 0
-            self._n_not_closed = 0
+        with self._lock:
+            self.threshold = int(threshold)
+            self.cooldown_ms = float(cooldown_ms)
+            if not self.enabled:
+                for h in self._devs:
+                    h.state = CLOSED
+                    h.consecutive = 0
+                self._n_not_closed = 0
 
     # ------------------------------------------------------------------ #
     def usable(self, d: int) -> bool:
         """May the scheduler send work to this device now?  An open
         device whose cooldown elapsed turns half-open here (lazily) and
         becomes schedulable — the next unit on it is the probe."""
-        h = self._devs[d]
-        if not self.enabled or h.state == CLOSED:
-            return True
-        if (h.state == OPEN
-                and (self.clock() - h.opened_at) * 1000.0
-                >= self.cooldown_ms):
-            h.state = HALF_OPEN
-        return h.state != OPEN
+        with self._lock:
+            h = self._devs[d]
+            if not self.enabled or h.state == CLOSED:
+                return True
+            if (h.state == OPEN
+                    and (self.clock() - h.opened_at) * 1000.0
+                    >= self.cooldown_ms):
+                h.state = HALF_OPEN
+            return h.state != OPEN
 
     def usable_count(self) -> int:
-        if not self.enabled or self._n_not_closed == 0:
-            return self.n_devices
-        return sum(1 for d in range(self.n_devices) if self.usable(d))
+        with self._lock:
+            if not self.enabled or self._n_not_closed == 0:
+                return self.n_devices
+            return sum(1 for d in range(self.n_devices) if self.usable(d))
 
     def usable_devices(self) -> List[int]:
         return [d for d in range(self.n_devices) if self.usable(d)]
@@ -409,35 +432,40 @@ class HealthTracker:
     def ok(self, d: int) -> None:
         """One unit succeeded on ``d``: reset the consecutive count; a
         half-open (or open) device closes — the recover transition."""
-        h = self._devs[d]
-        if h.state == CLOSED:
-            if h.consecutive:
-                h.consecutive = 0
-            return
-        h.consecutive = 0
-        h.state = CLOSED
-        self._n_not_closed -= 1
-        if self.on_recover is not None:
+        with self._lock:
+            h = self._devs[d]
+            if h.state == CLOSED:
+                if h.consecutive:
+                    h.consecutive = 0
+                return
+            h.consecutive = 0
+            h.state = CLOSED
+            self._n_not_closed -= 1
+            recovered = self.on_recover is not None
+        if recovered:
             self.on_recover(d)
 
     def failure(self, d: int) -> bool:
         """One unit *exhausted* its retries (or failed permanently) on
         ``d``.  Returns True when this failure trips (or re-trips) the
         breaker."""
-        h = self._devs[d]
-        h.failures += 1
-        h.consecutive += 1
-        if not self.enabled:
-            return False
-        trip = (h.state == HALF_OPEN
-                or (h.state == CLOSED and h.consecutive >= self.threshold))
-        if not trip:
-            return False
-        if h.state == CLOSED:
-            self._n_not_closed += 1
-        h.state = OPEN
-        h.opened_at = self.clock()
-        h.quarantines += 1
-        if self.on_quarantine is not None:
+        with self._lock:
+            h = self._devs[d]
+            h.failures += 1
+            h.consecutive += 1
+            if not self.enabled:
+                return False
+            trip = (h.state == HALF_OPEN
+                    or (h.state == CLOSED
+                        and h.consecutive >= self.threshold))
+            if not trip:
+                return False
+            if h.state == CLOSED:
+                self._n_not_closed += 1
+            h.state = OPEN
+            h.opened_at = self.clock()
+            h.quarantines += 1
+            quarantined = self.on_quarantine is not None
+        if quarantined:
             self.on_quarantine(d)
         return True

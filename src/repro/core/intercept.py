@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import contextlib
 import re
+import threading
 from typing import Dict, Optional
 
 import jax
@@ -100,7 +101,7 @@ def _matmul(a, b, **kw):
         if mv is not None:
             return blas.gemv(mv[0], mv[1], trans=mv[2])
     if rt.active() is not None:
-        rt.active().stats.uninstrumented_calls += 1
+        rt.active().note_uninstrumented()
     return _ORIG["matmul"](a, b, **kw)
 
 
@@ -112,7 +113,7 @@ def _dot(a, b, **kw):
         if mv is not None:
             return blas.gemv(mv[0], mv[1], trans=mv[2])
     if rt.active() is not None:
-        rt.active().stats.uninstrumented_calls += 1
+        rt.active().note_uninstrumented()
     return _ORIG["dot"](a, b, **kw)
 
 
@@ -186,7 +187,7 @@ def _tensordot(a, b, axes=2, **kw):
         if flags is not None:
             return blas.gemm(a, b, trans_a=flags[0], trans_b=flags[1])
     if rt.active() is not None:
-        rt.active().stats.uninstrumented_calls += 1
+        rt.active().note_uninstrumented()
     return _ORIG["tensordot"](a, b, axes, **kw)
 
 
@@ -204,14 +205,17 @@ def _einsum(spec, *operands, **kw):
                 ta, tb = pats[spec2d]
                 return blas.gemm(a, b, trans_a=ta, trans_b=tb)
     if rt.active() is not None:
-        rt.active().stats.uninstrumented_calls += 1
+        rt.active().note_uninstrumented()
     return _ORIG["einsum"](spec, *operands, **kw)
 
 
 # --------------------------------------------------------------------- #
-# symbol patching (refcounted: one patch serves any number of sessions)  #
+# symbol patching (refcounted: one patch serves any number of sessions;  #
+# the refcount and the symbol swap are lock-guarded — concurrent         #
+# sessions opening/closing must not double-patch or restore early)       #
 # --------------------------------------------------------------------- #
 _PATCHED = 0
+_PATCH_LOCK = threading.Lock()
 
 
 def patch_symbols() -> None:
@@ -219,27 +223,29 @@ def patch_symbols() -> None:
     Refcounted: nested intercepting sessions share one patch, and the
     originals come back only when the last one unpatches."""
     global _PATCHED
-    _PATCHED += 1
-    if not _ORIG:
-        _ORIG["matmul"] = jnp.matmul
-        _ORIG["dot"] = jnp.dot
-        _ORIG["einsum"] = jnp.einsum
-        _ORIG["tensordot"] = jnp.tensordot
-        jnp.matmul = _matmul
-        jnp.dot = _dot
-        jnp.einsum = _einsum
-        jnp.tensordot = _tensordot
+    with _PATCH_LOCK:
+        _PATCHED += 1
+        if not _ORIG:
+            _ORIG["matmul"] = jnp.matmul
+            _ORIG["dot"] = jnp.dot
+            _ORIG["einsum"] = jnp.einsum
+            _ORIG["tensordot"] = jnp.tensordot
+            jnp.matmul = _matmul
+            jnp.dot = _dot
+            jnp.einsum = _einsum
+            jnp.tensordot = _tensordot
 
 
 def unpatch_symbols() -> None:
     """Release one patch reference; restore the originals at zero."""
     global _PATCHED
-    _PATCHED = max(0, _PATCHED - 1)
-    if _PATCHED == 0 and _ORIG:
-        jnp.matmul = _ORIG.pop("matmul")
-        jnp.dot = _ORIG.pop("dot")
-        jnp.einsum = _ORIG.pop("einsum")
-        jnp.tensordot = _ORIG.pop("tensordot")
+    with _PATCH_LOCK:
+        _PATCHED = max(0, _PATCHED - 1)
+        if _PATCHED == 0 and _ORIG:
+            jnp.matmul = _ORIG.pop("matmul")
+            jnp.dot = _ORIG.pop("dot")
+            jnp.einsum = _ORIG.pop("einsum")
+            jnp.tensordot = _ORIG.pop("tensordot")
 
 
 # --------------------------------------------------------------------- #

@@ -33,7 +33,9 @@ specific device tier; ``device_of`` reads the index back.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import weakref
+from contextvars import ContextVar
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -52,12 +54,17 @@ DEVICE = "device"
 # real backend failures during the move are wrapped into the typed       #
 # hierarchy of repro.core.faults instead of escaping as bare             #
 # XlaRuntimeError — the runtime's retry/fallback guard catches them.     #
+#                                                                        #
+# The hook, the debug level, and the active tier mapping are all         #
+# *context-local* (PR 7): concurrent sessions in different threads       #
+# each see their own runtime's hook and mapping, never a neighbour's.    #
 # --------------------------------------------------------------------- #
 #: (device_index_or_None, nbytes) -> None; raises to inject a fault
-_FAULT_HOOK: Optional[Callable[[Optional[int], int], None]] = None
+_FAULT_HOOK: ContextVar[Optional[Callable[[Optional[int], int], None]]] = (
+    ContextVar("scilib_fault_hook", default=None))
 
 #: SCILIB_DEBUG level, plumbed in by the owning runtime (config boundary)
-_DEBUG = 0
+_DEBUG: ContextVar[int] = ContextVar("scilib_debug", default=0)
 
 #: exception types a data movement may legitimately raise (XlaRuntimeError
 #: subclasses RuntimeError); anything else is a bug and propagates as-is
@@ -74,20 +81,19 @@ def set_fault_hook(hook: Optional[Callable[[Optional[int], int], None]],
     movement toward a DEVICE tier (never on no-op puts or cache hits),
     except movements explicitly opted out with ``check=False`` — the
     host execution path and user-level ``pin()`` must not inherit
-    offload-path faults they cannot fall back from."""
-    global _FAULT_HOOK
-    _FAULT_HOOK = hook
+    offload-path faults they cannot fall back from.  Context-local:
+    one thread's injector never fires in another thread's transfers."""
+    _FAULT_HOOK.set(hook)
 
 
 def set_debug(level: int) -> None:
     """Plumb the config's ``debug`` level in (``SCILIB_DEBUG`` stays
     behind the config boundary; this module never reads the env)."""
-    global _DEBUG
-    _DEBUG = int(level)
+    _DEBUG.set(int(level))
 
 
 def _debug_log(msg: str, level: int = 1) -> None:
-    if _DEBUG >= level:
+    if _DEBUG.get() >= level:
         print(f"[scilib] {msg}")
 
 
@@ -169,34 +175,50 @@ def probe(device: Optional[jax.Device] = None,
 # --------------------------------------------------------------------- #
 # module state: active mapping + simulated-tier tag table                 #
 # --------------------------------------------------------------------- #
-_ACTIVE: Optional[MemSpace] = None
+# The *installed* mapping is context-local (a session's devices layout
+# must not leak into a neighbouring thread); the lazily-probed fallback
+# for sessionless threads is process-wide and built once under a lock.
+_ACTIVE: ContextVar[Optional[MemSpace]] = (
+    ContextVar("scilib_memspace", default=None))
+_PROBED: Optional[MemSpace] = None
+_PROBE_LOCK = threading.Lock()
 
 # id(arr) -> (weakref(arr), logical tier, device index); only consulted
 # in simulated mode, but tags are maintained unconditionally so a mapping
-# re-probe (e.g. tests switching modes) never orphans tier state.
+# re-probe (e.g. tests switching modes) never orphans tier state.  The
+# table is process-wide (a tier is a property of the buffer, not of the
+# observing session) and its dict operations are GIL-atomic.
 _TIERS: Dict[int, Tuple[weakref.ref, str, int]] = {}
 
 
 def active() -> MemSpace:
-    """The resolved tier mapping (probed lazily on first use)."""
-    global _ACTIVE
-    if _ACTIVE is None:
-        _ACTIVE = probe()
-    return _ACTIVE
+    """The resolved tier mapping: the context's installed mapping when a
+    session owns this thread, else the lazily-probed process default."""
+    space = _ACTIVE.get()
+    if space is not None:
+        return space
+    global _PROBED
+    with _PROBE_LOCK:
+        if _PROBED is None:
+            _PROBED = probe()
+        return _PROBED
 
 
 def install(space: Optional[MemSpace] = None,
             n_devices: Optional[int] = None) -> MemSpace:
     """Re-probe (or inject, for tests) the mapping; runtime.install hook.
-    ``n_devices`` plumbs the owning config's device-tier count through."""
-    global _ACTIVE
-    _ACTIVE = probe(n_devices=n_devices) if space is None else space
-    return _ACTIVE
+    ``n_devices`` plumbs the owning config's device-tier count through.
+    The installed mapping is context-local."""
+    space = probe(n_devices=n_devices) if space is None else space
+    _ACTIVE.set(space)
+    return space
 
 
 def reset() -> None:
-    global _ACTIVE
-    _ACTIVE = None
+    global _PROBED
+    _ACTIVE.set(None)
+    with _PROBE_LOCK:
+        _PROBED = None
     _TIERS.clear()
 
 
@@ -283,8 +305,9 @@ def put(x: jax.Array, tier: str, *, check: bool = True) -> jax.Array:
         cur = x.sharding.memory_kind or ms.device_kind
         if cur == kind:
             return x
-        if check and tier == DEVICE and _FAULT_HOOK is not None:
-            _FAULT_HOOK(None, x.nbytes)
+        hook = _FAULT_HOOK.get()
+        if check and tier == DEVICE and hook is not None:
+            hook(None, x.nbytes)
         try:
             return jax.device_put(x, x.sharding.with_memory_kind(kind))
         except _MOVE_ERRORS as exc:
@@ -292,8 +315,9 @@ def put(x: jax.Array, tier: str, *, check: bool = True) -> jax.Array:
                                    nbytes=x.nbytes) from exc
     if tier_of(x) == tier:
         return x
-    if check and tier == DEVICE and _FAULT_HOOK is not None:
-        _FAULT_HOOK(None, x.nbytes)
+    hook = _FAULT_HOOK.get()
+    if check and tier == DEVICE and hook is not None:
+        hook(None, x.nbytes)
     import jax.numpy as jnp
     try:
         moved = jnp.array(x, copy=True)
@@ -319,8 +343,9 @@ def put_block(x: jax.Array, device: int) -> jax.Array:
     """
     if tier_of(x) == DEVICE and device_of(x) == device:
         return x
-    if _FAULT_HOOK is not None:
-        _FAULT_HOOK(device, x.nbytes)
+    hook = _FAULT_HOOK.get()
+    if hook is not None:
+        hook(device, x.nbytes)
     try:
         real = jax.devices()
     except RuntimeError as exc:  # pragma: no cover - no devices

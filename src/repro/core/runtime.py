@@ -80,7 +80,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
+from contextvars import ContextVar
 from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 import jax
@@ -367,7 +369,9 @@ class OffloadRuntime:
                  threshold: Optional[float] = None,
                  record_trace: bool = True,
                  sync: Optional[bool] = None,
-                 device_bytes: Optional[int] = None):
+                 device_bytes: Optional[int] = None,
+                 session_id: str = "",
+                 pool: Optional[res.SharedDevicePool] = None):
         # the legacy keyword surface resolves to a config with the
         # historical precedence (env SCILIB_POLICY/THRESHOLD over args,
         # explicit sync/device_bytes args over env); an explicit config
@@ -377,6 +381,15 @@ class OffloadRuntime:
                                           threshold=threshold, sync=sync,
                                           device_bytes=device_bytes)
         self.config = config
+        # thread safety (PR 7): the dispatch lock serializes whole
+        # calls when several threads adopt one session (Session.scope);
+        # the stats lock is a leaf guarding counter updates that can
+        # arrive on *another* tenant's thread (shared-pool evictions
+        # reach this runtime's stores from whichever thread overflowed
+        # the pool).  Order: runtime lock -> health -> store -> pool,
+        # with the stats lock a leaf acquired under any of them.
+        self._lock = threading.RLock()
+        self._stats_lock = threading.Lock()
         self.policy: PolicyBase = make_policy(config.policy)
         self.memspace = memspace.install(
             n_devices=config.resolved_devices())
@@ -452,6 +465,26 @@ class OffloadRuntime:
         # entries live exactly as long as their anchor array)
         self._trace_ids = res.ResidencyStore("traceids")
         self._reuse_by_buffer: Dict[int, int] = {}
+        # multi-tenancy: join the shared pool (quota from the config),
+        # binding the placement + block stores so their residency charges
+        # the pool's per-tenant ledger.  An unnamed pooled session gets
+        # an auto-assigned tenant id; unpooled unnamed runtimes keep ""
+        # (their trace events serialize exactly as before).
+        self.pool = pool
+        if pool is not None:
+            self.session_id = pool.register(session_id,
+                                            quota=config.pool_quota)
+            pool.attach(self.session_id, self.placements,
+                        *self.block_stores)
+        else:
+            self.session_id = session_id
+
+    def detach_pool(self) -> None:
+        """Leave the shared pool (session close): the tenant's usage is
+        forgotten, its lifetime counters stay in the pool totals."""
+        if self.pool is not None:
+            self.pool.unregister(self.session_id)
+            self.pool = None
 
     # ------------------------------------------------------------------ #
     # safe mid-run reconfiguration (Session.reconfigure lands here)       #
@@ -473,6 +506,10 @@ class OffloadRuntime:
         The device-tier count is topology, fixed at construction:
         changing it raises ``ValueError`` (open a new session instead).
         """
+        with self._lock:
+            self._apply_config_locked(new)
+
+    def _apply_config_locked(self, new: OffloadConfig) -> None:
         old = self.config
         if new.resolved_devices() != self.n_devices:
             raise ValueError(
@@ -528,7 +565,7 @@ class OffloadRuntime:
                                      backoff_ms=new.backoff_ms)
         self.health.reconfigure(threshold=new.breaker,
                                 cooldown_ms=new.breaker_cooldown_ms)
-        if _ACTIVE is self:
+        if active() is self:
             memspace.set_fault_hook(self._transfer_fault_hook())
             memspace.set_debug(new.debug)
 
@@ -539,12 +576,16 @@ class OffloadRuntime:
         """Mirror one residency transition into the trace and the
         refetch statistics (place/hit/evict/refetch) — and, through the
         same channel, the fault-tolerance transitions
-        (fault/retry/fallback/quarantine/recover)."""
+        (fault/retry/fallback/quarantine/recover).  Shared-pool
+        pressure can deliver these on another tenant's thread, so the
+        counter updates take the leaf stats lock."""
         if kind == "refetch":
-            self.stats.refetches += 1
-            self.stats.refetched_bytes += nbytes
+            with self._stats_lock:
+                self.stats.refetches += 1
+                self.stats.refetched_bytes += nbytes
         if self.trace is not None:
-            self.trace.record_event(kind, store, nbytes)
+            self.trace.record_event(kind, store, nbytes,
+                                    session=self.session_id)
 
     def _on_placement_evict(self, key, placed, nbytes: int) -> None:
         """Cap pressure pushed a placement out: re-tag the buffer
@@ -554,8 +595,9 @@ class OffloadRuntime:
         registry cannot forcibly move a borrowed handle — while the
         simulated tier models the re-migration cost with a real copy."""
         memspace.tag_host(placed)
-        self.stats.evictions += 1
-        self.stats.evicted_bytes += nbytes
+        with self._stats_lock:
+            self.stats.evictions += 1
+            self.stats.evicted_bytes += nbytes
         if self.debug >= 1:
             print(f"[scilib] evict {nbytes} B "
                   f"(resident {self.placements.resident_bytes} B)")
@@ -564,9 +606,10 @@ class OffloadRuntime:
         """Per-device eviction callback for the tile-block stores."""
         def _on_evict(key, placed, nbytes, device=device, self=self):
             memspace.tag_host(placed)
-            dst = self.stats.device(device)
-            dst.evictions += 1
-            dst.evicted_bytes += nbytes
+            with self._stats_lock:
+                dst = self.stats.device(device)
+                dst.evictions += 1
+                dst.evicted_bytes += nbytes
             if self.debug >= 1:
                 print(f"[scilib] dev{device} evict block {nbytes} B "
                       f"(resident "
@@ -697,19 +740,29 @@ class OffloadRuntime:
         device-tier buffer (the pinned residency the next calls hit).
         Pinning is a user-level movement with no fallback path, so it
         opts out of fault injection."""
-        placed = self.placements.get(id(x))
-        if placed is None:
-            placed = (x if memspace.tier_of(x) == memspace.DEVICE
-                      else memspace.put(x, memspace.DEVICE, check=False))
-            self.placements.put(id(x), placed, placed.nbytes, anchor=x)
-            self.alias_trace_id(x, placed)
-        self.placements.pin(id(x))
-        return placed
+        with self._lock:
+            placed = self.placements.get(id(x))
+            if placed is None:
+                placed = (x if memspace.tier_of(x) == memspace.DEVICE
+                          else memspace.put(x, memspace.DEVICE,
+                                            check=False))
+                self.placements.put(id(x), placed, placed.nbytes,
+                                    anchor=x)
+                self.alias_trace_id(x, placed)
+            self.placements.pin(id(x))
+            return placed
 
     def unpin(self, x: jax.Array) -> None:
         """Make a pinned buffer evictable again (it stays resident until
         cap pressure actually selects it)."""
-        self.placements.unpin(id(x))
+        with self._lock:
+            self.placements.unpin(id(x))
+
+    def note_uninstrumented(self) -> None:
+        """Count one BLAS-shaped call the interceptors saw but could not
+        canonicalize (thread-safe: trampolines fire on any thread)."""
+        with self._stats_lock:
+            self.stats.uninstrumented_calls += 1
 
     def resident_bytes(self) -> int:
         return self.placements.resident_bytes
@@ -833,9 +886,12 @@ class OffloadRuntime:
         under ``SCILIB_DEBUG``) rather than silently dropped."""
         first: Optional[BaseException] = None
         extras: list = []
-        while self._pending:
+        with self._lock:
+            pending = list(self._pending)
+            self._pending.clear()
+        for buf in pending:
             try:
-                self._pending.popleft().block_until_ready()
+                buf.block_until_ready()
             except Exception as exc:
                 if first is None:
                     first = exc
@@ -898,7 +954,19 @@ class OffloadRuntime:
         ``shard``: optional tile-plan builder ``n_devices -> TilePlan``;
         consulted only when the call offloads and more than one device
         tier exists, so the single-device fast path never pays for it.
+
+        Thread-safe: the whole pipeline runs under the runtime lock, so
+        several threads adopting one session (``Session.scope``) issue
+        calls atomically — counters never lose updates and the decision
+        cache never observes a half-written entry.  The single-threaded
+        cost is one uncontended reentrant acquire per call.
         """
+        with self._lock:
+            return self._blas_call_locked(routine, m, n, k, operands,
+                                          compute, batch, key, shard)
+
+    def _blas_call_locked(self, routine, m, n, k, operands, compute,
+                          batch, key, shard) -> jax.Array:
         st = self.stats.routine(routine)
         st.calls += 1
         arrays = [op[1] for op in operands]
@@ -1186,18 +1254,21 @@ class OffloadRuntime:
 
 
 # --------------------------------------------------------------------- #
-# module-level active runtime (what LD_PRELOAD init/fini manage in C)    #
+# context-local active runtime (what LD_PRELOAD init/fini manage in C;   #
+# context-local so concurrent sessions in different threads each see     #
+# their own dispatch target, never a neighbour's)                        #
 # --------------------------------------------------------------------- #
-_ACTIVE: Optional[OffloadRuntime] = None
+_ACTIVE: ContextVar[Optional[OffloadRuntime]] = (
+    ContextVar("scilib_active_runtime", default=None))
 
 
 def activate(runtime: Optional[OffloadRuntime]) -> None:
-    """Make ``runtime`` the dispatch target (None deactivates).  The
-    session layer drives this; application code opens sessions instead.
-    The memspace fault hook follows the active runtime, so a nested
-    session's injector never outlives its activation."""
-    global _ACTIVE
-    _ACTIVE = runtime
+    """Make ``runtime`` the dispatch target of the *current* context
+    (None deactivates).  The session layer drives this; application
+    code opens sessions instead.  The memspace fault hook follows the
+    active runtime, so a nested session's injector never outlives its
+    activation."""
+    _ACTIVE.set(runtime)
     if runtime is None:
         memspace.set_fault_hook(None)
         memspace.set_debug(0)
@@ -1237,17 +1308,18 @@ def uninstall() -> Optional[RuntimeStats]:
 
 
 def active() -> Optional[OffloadRuntime]:
-    return _ACTIVE
+    return _ACTIVE.get()
 
 
 def pin(x: jax.Array) -> jax.Array:
     """Pin a buffer on the active runtime's device tier (no-op when no
     runtime is installed).  See :meth:`OffloadRuntime.pin`."""
-    rt = _ACTIVE
+    rt = _ACTIVE.get()
     return x if rt is None else rt.pin(x)
 
 
 def unpin(x: jax.Array) -> None:
     """Release a :func:`pin` (no-op when no runtime is installed)."""
-    if _ACTIVE is not None:
-        _ACTIVE.unpin(x)
+    rt = _ACTIVE.get()
+    if rt is not None:
+        rt.unpin(x)

@@ -47,14 +47,27 @@ longer lost when a process exits without ``uninstall()``/``close()``.
 from __future__ import annotations
 
 import atexit
-from typing import List, Optional
+import contextlib
+import threading
+from contextvars import ContextVar
+from typing import List, Optional, Tuple
 
 from repro.core.config import OffloadConfig
 
 __all__ = ["Session", "session", "active_session"]
 
-#: innermost-last stack of open sessions (the nesting discipline)
-_STACK: List["Session"] = []
+#: innermost-last stack of open sessions (the nesting discipline).
+#: Context-local (PR 7): each thread nests its own sessions; one
+#: thread's open/close can never corrupt another thread's restore
+#: order.  The stack is an immutable tuple — push/pop replace it
+#: wholesale, so a reader never observes a half-mutated stack.
+_STACK: ContextVar[Tuple["Session", ...]] = (
+    ContextVar("scilib_session_stack", default=()))
+
+#: all open sessions process-wide, for the atexit trace-dump fallback
+#: (context-local stacks are invisible across threads; shutdown isn't).
+_OPEN: List["Session"] = []
+_OPEN_LOCK = threading.Lock()
 
 _ATEXIT_REGISTERED = False
 
@@ -70,7 +83,9 @@ def _atexit_dump() -> None:
     """Fallback trace dump: a process exiting with sessions still open
     (crash path, forgotten ``uninstall()``) keeps its recorded traces —
     each open session with a ``trace_path`` dumps before teardown."""
-    for s in list(_STACK):
+    with _OPEN_LOCK:
+        pending = list(_OPEN)
+    for s in pending:
         try:
             s._dump_trace(reason="atexit")
         except Exception:   # never let shutdown raise   # noqa: BLE001
@@ -83,14 +98,26 @@ class Session:
     ``intercept=False`` activates the runtime without patching the
     public ``jnp`` symbols (the dlsym-mode analogue: callers invoke
     ``repro.core.blas`` directly).
+
+    ``name`` is the session's tenant id for multi-tenant runs: trace
+    events are stamped with it and per-tenant pool statistics report
+    under it.  Unnamed sessions stamp nothing — their traces serialize
+    byte-identically to the single-tenant format.  ``pool`` joins the
+    session to a :class:`~repro.core.residency.SharedDevicePool`
+    (quota from ``config.pool_quota``); with no explicit pool, setting
+    ``config.pool_bytes``/``pool_quota`` joins the process-default
+    pool.
     """
 
     def __init__(self, config: Optional[OffloadConfig] = None, *,
-                 record_trace: bool = True, intercept: bool = True):
+                 record_trace: bool = True, intercept: bool = True,
+                 name: str = "", pool=None):
         self.config = (OffloadConfig.from_env() if config is None
                        else config)
         self.record_trace = record_trace
         self.intercept = intercept
+        self.name = name
+        self.pool = pool
         self.runtime = None      # type: Optional[object]
         self._traced_dumped = False
 
@@ -104,10 +131,20 @@ class Session:
             raise RuntimeError("session is already open")
         self._traced_dumped = False     # a reopened session dumps again
         from repro.core import intercept as icp
+        from repro.core import residency as res
         from repro.core import runtime as rt
+        pool = self.pool
+        if pool is None and (self.config.pool_bytes is not None
+                             or self.config.pool_quota is not None):
+            pool = res.default_pool(self.config.pool_bytes)
         self.runtime = rt.OffloadRuntime(config=self.config,
-                                         record_trace=self.record_trace)
-        _STACK.append(self)
+                                         record_trace=self.record_trace,
+                                         session_id=self.name,
+                                         pool=pool)
+        self.name = self.runtime.session_id   # pool may auto-assign one
+        _STACK.set(_STACK.get() + (self,))
+        with _OPEN_LOCK:
+            _OPEN.append(self)
         rt.activate(self.runtime)
         if self.intercept:
             icp.patch_symbols()
@@ -125,8 +162,13 @@ class Session:
         runtime, self.runtime = self.runtime, None
         runtime.sync()
         self._dump_trace(runtime=runtime)
-        if self in _STACK:
-            _STACK.remove(self)
+        runtime.detach_pool()
+        stack = _STACK.get()
+        if self in stack:
+            _STACK.set(tuple(s for s in stack if s is not self))
+        with _OPEN_LOCK:
+            if self in _OPEN:
+                _OPEN.remove(self)
         if self.intercept:
             icp.unpatch_symbols()
         # the innermost remaining session's runtime is the dispatch
@@ -136,7 +178,8 @@ class Session:
         # session's values too — "outer restored on exit" must hold for
         # everything the inner config touched, not just the runtime.
         from repro.core import blas, memspace
-        prev = _STACK[-1] if _STACK else None
+        stack = _STACK.get()
+        prev = stack[-1] if stack else None
         rt.activate(prev.runtime if prev is not None else None)
         if prev is not None and prev.runtime is not None:
             blas.refresh_cache_flag(prev.config.dispatch_cache)
@@ -156,6 +199,36 @@ class Session:
     @property
     def closed(self) -> bool:
         return self.runtime is None
+
+    @contextlib.contextmanager
+    def scope(self):
+        """Adopt this open session in the *current* thread/context.
+
+        Sessions are context-local: a worker thread does not inherit
+        the thread that opened them.  ``with s.scope():`` makes ``s``
+        the active dispatch target here without reopening it — several
+        workers may scope one session concurrently (its runtime
+        serializes their calls).  The previous context state is
+        restored on exit."""
+        self._require_open()
+        from repro.core import blas, memspace
+        from repro.core import runtime as rt
+        token = _STACK.set(_STACK.get() + (self,))
+        rt.activate(self.runtime)
+        blas.refresh_cache_flag(self.config.dispatch_cache)
+        memspace.install(space=self.runtime.memspace)
+        try:
+            yield self
+        finally:
+            _STACK.reset(token)
+            stack = _STACK.get()
+            prev = stack[-1] if stack else None
+            rt.activate(prev.runtime if prev is not None else None)
+            if prev is not None and prev.runtime is not None:
+                blas.refresh_cache_flag(prev.config.dispatch_cache)
+                memspace.install(space=prev.runtime.memspace)
+            else:
+                blas.refresh_cache_flag()
 
     # ------------------------------------------------------------------ #
     # what a workload reads off its session                               #
@@ -247,26 +320,29 @@ class Session:
 # --------------------------------------------------------------------- #
 def session(config: Optional[OffloadConfig] = None, *,
             record_trace: bool = True,
-            intercept: bool = True, **kw) -> Session:
+            intercept: bool = True,
+            name: str = "", pool=None, **kw) -> Session:
     """Open a session (the primary public entry point).
 
     ``repro.session(cfg)`` returns an **open** session: use it as a
     context manager for scoped offload, or keep it long-lived and call
     ``close()`` yourself.  Extra keyword arguments are config fields
     applied on top (``repro.session(threshold=800)``), so quick
-    one-off overrides need no explicit config object.
+    one-off overrides need no explicit config object.  ``name`` and
+    ``pool`` are the multi-tenant knobs (see :class:`Session`).
     """
     if config is None:
         config = OffloadConfig.from_env()
     if kw:
         config = config.replace(**kw)
     return Session(config, record_trace=record_trace,
-                   intercept=intercept).open()
+                   intercept=intercept, name=name, pool=pool).open()
 
 
 def active_session() -> Optional[Session]:
-    """The innermost open session, or None."""
-    return _STACK[-1] if _STACK else None
+    """The innermost open session of the current context, or None."""
+    stack = _STACK.get()
+    return stack[-1] if stack else None
 
 
 # --------------------------------------------------------------------- #
@@ -276,8 +352,10 @@ def active_session() -> Optional[Session]:
 #: shims), closed LIFO by uninstall().  One shared stack — exactly like
 #: the one module global the shims used to flip — so a runtime-level
 #: uninstall() after an intercept-level install() (or vice versa)
-#: cannot leave a stale closed session behind.
-_LEGACY: List[Session] = []
+#: cannot leave a stale closed session behind.  Context-local like the
+#: session stack: each thread's install()/uninstall() pairs are its own.
+_LEGACY: ContextVar[Tuple[Session, ...]] = (
+    ContextVar("scilib_legacy_stack", default=()))
 
 
 def open_legacy(config: OffloadConfig, *, record_trace: bool = True,
@@ -292,14 +370,16 @@ def open_legacy(config: OffloadConfig, *, record_trace: bool = True,
     useful and is what the session stack already guarantees."""
     s = Session(config, record_trace=record_trace,
                 intercept=intercept).open()
-    _LEGACY.append(s)
+    _LEGACY.set(_LEGACY.get() + (s,))
     return s
 
 
 def close_legacy():
     """Close the most recent legacy session (the ``uninstall()`` shim);
     falls back to the innermost open session, then to a no-op."""
-    if _LEGACY:
-        return _LEGACY.pop().close()
+    legacy = _LEGACY.get()
+    if legacy:
+        _LEGACY.set(legacy[:-1])
+        return legacy[-1].close()
     s = active_session()
     return s.close() if s is not None else None

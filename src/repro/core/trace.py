@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core.residency import ResidencyEvent
@@ -130,28 +131,39 @@ class Trace:
         self.buffer_names: Dict[int, str] = {}
         self.events: List[ResidencyEvent] = []
         self._next_buf = 1
+        # guards append paths only: a trace may be shared by several
+        # threads adopting one session (Session.scope); readers iterate
+        # snapshots after the run drains.
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
-    def record_event(self, kind: str, store: str, nbytes: int) -> None:
+    def record_event(self, kind: str, store: str, nbytes: int,
+                     session: str = "") -> None:
         """Append one residency transition, stamped at the current call
-        position (the runtime's residency stores point here)."""
-        self.events.append(ResidencyEvent(kind=kind, store=store,
-                                          nbytes=int(nbytes),
-                                          call_index=len(self.calls)))
+        position (the runtime's residency stores point here) and the
+        owning session id (empty for single-tenant runs)."""
+        with self._lock:
+            self.events.append(ResidencyEvent(kind=kind, store=store,
+                                              nbytes=int(nbytes),
+                                              call_index=len(self.calls),
+                                              session=session))
 
-    def event_count(self, kind: str) -> int:
-        return sum(1 for e in self.events if e.kind == kind)
+    def event_count(self, kind: str, session: Optional[str] = None) -> int:
+        return sum(1 for e in self.events if e.kind == kind
+                   and (session is None or e.session == session))
 
-    def event_bytes(self, kind: str) -> int:
-        return sum(e.nbytes for e in self.events if e.kind == kind)
+    def event_bytes(self, kind: str, session: Optional[str] = None) -> int:
+        return sum(e.nbytes for e in self.events if e.kind == kind
+                   and (session is None or e.session == session))
 
     # ------------------------------------------------------------------ #
     def new_buffer(self, nbytes: int, name: str = "") -> int:
-        bid = self._next_buf
-        self._next_buf += 1
-        self.buffer_sizes[bid] = int(nbytes)
-        self.buffer_names[bid] = name or f"buf{bid}"
-        return bid
+        with self._lock:
+            bid = self._next_buf
+            self._next_buf += 1
+            self.buffer_sizes[bid] = int(nbytes)
+            self.buffer_names[bid] = name or f"buf{bid}"
+            return bid
 
     def gemm(self, prec: str, m: int, n: int, k: int,
              a: int, b: int, c: int, batch: int = 1,

@@ -8,13 +8,66 @@ session for the whole serve (the autotuner's ``--emit-config``
 artifact, loaded via ``OffloadConfig.load``): eager BLAS around the
 jitted decode step is intercepted under the tuned settings and the
 session report prints at exit.
+
+``--streams N`` serves N concurrent request streams, one worker thread
++ one offload session per stream, all drawing on a single shared device
+pool (``--pool-mb``) — the multi-tenant serving shape.  The per-tenant
+pool report prints at exit.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 
 import jax
 import jax.numpy as jnp
+
+
+def _serve_streams(args, cfg, model, params, scfg, prompt, extra) -> int:
+    """N concurrent streams: per-stream Server + Session over one
+    shared pool; aggregate throughput plus the per-tenant report."""
+    from repro.core import residency as res
+    from repro.core import session as ses
+    from repro.core.config import OffloadConfig
+
+    if args.offload_config:
+        ocfg = OffloadConfig.load(args.offload_config)
+    else:
+        ocfg = OffloadConfig(policy="dfu")
+    pool = res.SharedDevicePool(args.pool_mb << 20, name="serve")
+    from repro.train import Server
+
+    outs = [None] * args.streams
+    tenants = [None] * args.streams
+    errors = []
+
+    def worker(idx: int) -> None:
+        try:
+            with ses.session(ocfg, record_trace=False, intercept=False,
+                             name=f"stream-{idx}", pool=pool) as s:
+                srv = Server(model, params, scfg)
+                outs[idx] = srv.generate(prompt, args.gen, extra)
+                tenants[idx] = pool.tenant_stats().get(s.name)
+        except BaseException as exc:
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,),
+                                name=f"serve-stream-{i}")
+               for i in range(args.streams)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    if errors:
+        raise errors[0]
+    print(f"arch={cfg.name} policy={args.policy} "
+          f"streams={args.streams} pool={args.pool_mb}MB")
+    print(pool.report())
+    for idx, row in enumerate(tenants):
+        if row is not None:
+            print(f"  stream-{idx}: " + " ".join(
+                f"{k}={v}" for k, v in sorted(row.items())))
+    return 0
 
 
 def main():
@@ -31,6 +84,11 @@ def main():
                     help="OffloadConfig JSON (e.g. from "
                          "repro.tools.autotune --emit-config): serve "
                          "inside a session running these settings")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="concurrent request streams, one session per "
+                         "stream over a shared device pool")
+    ap.add_argument("--pool-mb", type=int, default=256,
+                    help="shared pool capacity for --streams > 1")
     args = ap.parse_args()
 
     from repro.models import get_config
@@ -56,6 +114,9 @@ def main():
         extra = {"frames": jnp.ones(
             (args.batch, cfg.encoder_seq, cfg.d_model),
             jnp.dtype(cfg.dtype))}
+    if args.streams > 1:
+        return _serve_streams(args, cfg, model, params, scfg,
+                              prompt, extra)
     session = None
     if args.offload_config:
         from repro.core.config import OffloadConfig

@@ -96,6 +96,9 @@ class PolicyReport:
     fallbacks: int = 0
     quarantines: int = 0
     recoveries: int = 0
+    #: tenant this replay is scoped to ("" = whole trace); session-tagged
+    #: traces from a shared-pool run reconcile per-tenant this way
+    session: str = ""
     total_s: float = 0.0
     blas_device_s: float = 0.0
     blas_host_s: float = 0.0
@@ -148,7 +151,8 @@ class MemTierSimulator:
                  seed: int = 0, evict_lru: bool = False,
                  n_devices: int = 1,
                  device_bytes: Optional[int] = None,
-                 evict: str = "lru"):
+                 evict: str = "lru",
+                 session: str = ""):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
         self.spec = spec
@@ -160,11 +164,13 @@ class MemTierSimulator:
         self.evict_lru = evict_lru
         self.n_devices = max(1, int(n_devices))
         self.device_bytes = device_bytes if device_bytes else None
+        self.session = session
         self.report = PolicyReport(policy=policy, spec=spec.name,
                                    threshold=threshold,
                                    n_devices=self.n_devices,
                                    device_bytes=self.device_bytes,
-                                   evict=evict)
+                                   evict=evict,
+                                   session=session)
         self._bufs: Dict[int, Buffer] = {}       # trace buf id -> Buffer
         self._delayed: Dict[int, int] = {}       # counter: deferred once
         self._denied: set = set()                # counter: budget-refused
@@ -484,7 +490,9 @@ class MemTierSimulator:
         # exhaustion or total quarantine) is host-bound here too — the
         # fallback events carry the call index they interleaved at
         forced_host = {e.call_index for e in trace.events
-                       if e.kind == "fallback"}
+                       if e.kind == "fallback"
+                       and (not self.session
+                            or e.session == self.session)}
         for i, call in enumerate(trace):
             bufs = [self._buffer(trace, bid)
                     for _, bid, _, _, _ in call.operands]
@@ -527,11 +535,13 @@ class MemTierSimulator:
                                           for s in self._stores)
         # fault counters come straight off the recorded events — the
         # injector is deterministic, so live == replay by construction
-        self.report.faults = trace.event_count("fault")
-        self.report.retries = trace.event_count("retry")
-        self.report.fallbacks = trace.event_count("fallback")
-        self.report.quarantines = trace.event_count("quarantine")
-        self.report.recoveries = trace.event_count("recover")
+        ses = self.session or None
+        self.report.faults = trace.event_count("fault", session=ses)
+        self.report.retries = trace.event_count("retry", session=ses)
+        self.report.fallbacks = trace.event_count("fallback", session=ses)
+        self.report.quarantines = trace.event_count("quarantine",
+                                                    session=ses)
+        self.report.recoveries = trace.event_count("recover", session=ses)
         return self.report
 
     # convenience: residency of a trace buffer after the run

@@ -1,0 +1,839 @@
+"""Thread-safe concurrent multi-tenant sessions (PR 7).
+
+The concurrency harness (:func:`run_threads`) drives N worker threads
+through mixed gemm/syrk/trsm workloads in independent sessions and
+asserts the properties the tentpole promises:
+
+* sessions are context-local — a worker's open/close can never corrupt
+  another thread's dispatch target (the seed's global session stack
+  failed exactly this way),
+* no lost counter updates — the per-session counter sums equal the
+  shared pool's totals under a 32-thread storm,
+* no cross-session decision-cache bleed — concurrent sessions with
+  different thresholds each dispatch per their own config,
+* pins survive arbitrary shared-pool pressure,
+* N-thread runs stay deterministic: every session's counters and
+  results match a single-threaded oracle run of the same workload,
+* chaos x concurrency: per-session fault counters under an injected
+  fault spec match a serialized replay of that session's trace.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import blas  # noqa: E402
+from repro.core import faults as flt  # noqa: E402
+from repro.core import residency as res  # noqa: E402
+from repro.core import runtime as rtm  # noqa: E402
+from repro.core import session as ses  # noqa: E402
+from repro.core.callsite import CallSiteProfile, CallSiteRegistry  # noqa: E402
+from repro.core.config import OffloadConfig  # noqa: E402
+from repro.core.policy import host_array  # noqa: E402
+from repro.core.residency import ResidencyStore, SharedDevicePool  # noqa: E402
+from repro.core.session import Session  # noqa: E402
+from repro.memtier.simulator import MemTierSimulator  # noqa: E402
+
+N = 64                       # matrix edge used throughout
+NBYTES = N * N * 4
+
+
+# --------------------------------------------------------------------- #
+# the harness                                                            #
+# --------------------------------------------------------------------- #
+def run_threads(n, fn, *, barrier=True, timeout=120.0):
+    """Run ``fn(idx)`` on ``n`` threads; re-raise the first exception.
+
+    With ``barrier=True`` every worker waits at a start barrier so the
+    bodies genuinely overlap instead of running in spawn order.  Any
+    worker raising aborts the barrier (no deadlocked stragglers) and
+    the first exception propagates to the caller.
+    """
+    start = threading.Barrier(n) if barrier else None
+    errors = []
+    err_lock = threading.Lock()
+
+    def body(idx):
+        try:
+            if start is not None:
+                start.wait()
+            fn(idx)
+        except BaseException as exc:   # noqa: BLE001 — harness boundary
+            with err_lock:
+                errors.append(exc)
+            if start is not None:
+                start.abort()
+
+    threads = [threading.Thread(target=body, args=(i,),
+                                name=f"worker-{i}") for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+        assert not t.is_alive(), f"{t.name} did not finish"
+    if errors:
+        raise errors[0]
+
+
+def _mats(seed, count=3, n=N):
+    rng = np.random.default_rng(seed)
+    return [host_array(rng.standard_normal((n, n)).astype("float32"))
+            for _ in range(count)]
+
+
+def _tri(seed, n=N):
+    rng = np.random.default_rng(seed)
+    return host_array(
+        np.tril(rng.standard_normal((n, n)) + n).astype("float32"))
+
+
+def _mixed_workload(seed, reps=3):
+    """The tier-1-style mixed routine chain every stress worker runs:
+    gemm -> syrk -> trsm over per-worker deterministic operands."""
+    a, b, c = _mats(seed)
+    t = _tri(seed + 1000)
+    outs = []
+    for _ in range(reps):
+        g = blas.gemm(a, b)
+        s = blas.syrk(c)
+        x = blas.trsm(t, g)
+        outs.extend((g, s, x))
+    return outs
+
+
+# --------------------------------------------------------------------- #
+# the harness itself                                                     #
+# --------------------------------------------------------------------- #
+def test_run_threads_propagates_first_exception():
+    def boom(idx):
+        if idx == 3:
+            raise ValueError("worker 3 failed")
+
+    with pytest.raises(ValueError, match="worker 3"):
+        run_threads(8, boom)
+
+
+def test_run_threads_barrier_overlaps_all_workers():
+    ran = [0] * 8
+    gate = threading.Barrier(8)      # passes only if all overlap
+
+    def body(idx):
+        gate.wait(timeout=30)
+        ran[idx] = 1
+
+    run_threads(8, body)
+    assert ran == [1] * 8
+
+
+# --------------------------------------------------------------------- #
+# context-local sessions (the seed's nesting race, fixed)                 #
+# --------------------------------------------------------------------- #
+def test_sessions_are_context_local():
+    """A session opened in a worker thread is not the main thread's
+    dispatch target — on the seed's global stack it was."""
+    opened = threading.Event()
+    done = threading.Event()
+    seen = {}
+
+    def worker():
+        with ses.session(OffloadConfig(), record_trace=False,
+                         intercept=False) as s:
+            seen["worker_active"] = ses.active_session() is s
+            opened.set()
+            done.wait(30)
+
+    t = threading.Thread(target=worker)
+    t.start()
+    try:
+        assert opened.wait(30)
+        # the worker's session must be invisible here
+        assert ses.active_session() is None
+        assert rtm.active() is None
+    finally:
+        done.set()
+        t.join(30)
+    assert seen["worker_active"]
+
+
+def test_session_nesting_race_regression():
+    """Seed-failing regression: A opens, B opens, A closes — on a
+    shared global stack A's close restored *B's* session as A's
+    dispatch target (and B's close then corrupted A's).  Context-local
+    stacks keep each thread's nesting its own."""
+    a_opened, b_opened, a_closed = (threading.Event(),
+                                    threading.Event(), threading.Event())
+    state = {}
+
+    def thread_a():
+        s = ses.session(OffloadConfig(), record_trace=False,
+                        intercept=False)
+        a_opened.set()
+        assert b_opened.wait(30)
+        s.close()
+        # after closing its own innermost session this thread must have
+        # NO active session — the seed leaked B's here
+        state["a_after_close"] = ses.active_session()
+        state["a_runtime_after_close"] = rtm.active()
+        a_closed.set()
+
+    def thread_b():
+        assert a_opened.wait(30)
+        with ses.session(OffloadConfig(), record_trace=False,
+                         intercept=False) as s:
+            b_opened.set()
+            assert a_closed.wait(30)
+            # A's close must not have stolen B's dispatch target
+            state["b_still_active"] = ses.active_session() is s
+            state["b_runtime_ok"] = rtm.active() is s.runtime
+
+    ta = threading.Thread(target=thread_a)
+    tb = threading.Thread(target=thread_b)
+    ta.start(), tb.start()
+    ta.join(30), tb.join(30)
+    assert state["a_after_close"] is None
+    assert state["a_runtime_after_close"] is None
+    assert state["b_still_active"] and state["b_runtime_ok"]
+
+
+def test_scope_adopts_open_session_in_worker_thread():
+    """Sessions don't leak across threads, so sharing one is explicit:
+    ``with s.scope():`` adopts it; its runtime serializes the calls."""
+    with ses.session(OffloadConfig(policy="dfu", threshold=10.0),
+                     record_trace=False, intercept=False) as s:
+
+        def worker(idx):
+            assert ses.active_session() is None      # not inherited
+            with s.scope():
+                assert ses.active_session() is s
+                a, b, _ = _mats(idx, n=32)
+                blas.gemm(a, b)
+            assert ses.active_session() is None      # restored
+
+        run_threads(8, worker)
+        s.sync()
+        total = sum(r.calls for r in s.stats.per_routine.values())
+        assert total == 8                            # none lost
+
+
+def test_scope_restores_workers_own_session():
+    """A worker with its own open session that scopes a shared one gets
+    its own back on exit (stack discipline per context)."""
+    with ses.session(OffloadConfig(threshold=123.0), record_trace=False,
+                     intercept=False) as shared:
+
+        def worker(idx):
+            with ses.session(OffloadConfig(threshold=77.0),
+                             record_trace=False, intercept=False) as own:
+                with shared.scope():
+                    assert ses.active_session() is shared
+                assert ses.active_session() is own
+                assert rtm.active() is own.runtime
+
+        run_threads(4, worker)
+
+
+def test_legacy_install_stack_is_context_local():
+    from repro.core import intercept as icp
+
+    def worker(idx):
+        rt = rtm.install("dfu", threshold=10, record_trace=False)
+        try:
+            assert rtm.active() is rt
+        finally:
+            rtm.uninstall()
+        assert rtm.active() is None
+
+    run_threads(4, worker)
+    assert rtm.active() is None
+    assert icp._PATCHED == 0
+
+
+# --------------------------------------------------------------------- #
+# ResidencyStore under contention                                        #
+# --------------------------------------------------------------------- #
+def test_concurrent_puts_account_bytes_exactly():
+    s = ResidencyStore("t")
+    per, nth = 50, 8
+
+    def worker(idx):
+        for i in range(per):
+            s.put((idx, i), f"p{idx}.{i}", 10)
+
+    run_threads(nth, worker)
+    assert len(s) == per * nth
+    assert s.resident_bytes == per * nth * 10
+    assert s.resident_bytes == sum(s.entry(k).nbytes for k in s.keys())
+
+
+def test_concurrent_mixed_ops_no_lost_updates():
+    """put/get/drop storms keep the byte ledger exactly equal to the
+    surviving entries — a torn update breaks the equality."""
+    s = ResidencyStore("t")
+
+    def worker(idx):
+        for i in range(40):
+            s.put((idx, i), i, 7)
+            assert s.get((idx, i)) == i
+            if i % 3 == 0:
+                s.drop((idx, i))
+
+    run_threads(8, worker)
+    assert s.resident_bytes == 7 * len(s)
+    assert len(s) == 8 * (40 - 14)       # 14 drops per worker
+
+
+def test_concurrent_eviction_under_cap_pressure():
+    s = ResidencyStore("t", cap=200, policy="lru")
+
+    def worker(idx):
+        for i in range(60):
+            s.put((idx, i), i, 20)
+
+    run_threads(8, worker)
+    assert s.resident_bytes <= 200
+    assert s.resident_bytes == sum(s.entry(k).nbytes for k in s.keys())
+    # conservation: everything placed was either evicted or survives
+    assert s.evictions == 8 * 60 - len(s)
+
+
+def test_pins_never_evicted_under_concurrent_pressure():
+    s = ResidencyStore("t", cap=200, policy="lru")
+    s.put("pinned", "P", 50, pinned=True)
+
+    def worker(idx):
+        for i in range(50):
+            s.put((idx, i), i, 30)
+
+    run_threads(8, worker)
+    assert "pinned" in s
+    assert s.get("pinned") == "P"
+    assert s.pinned_bytes() == 50
+
+
+def test_concurrent_evict_one_terminates_and_accounts():
+    s = ResidencyStore("t")
+    for i in range(64):
+        s.put(i, i, 10)
+    freed = []
+    lock = threading.Lock()
+
+    def worker(idx):
+        for _ in range(16):
+            got = s.evict_one()
+            with lock:
+                freed.append(got)
+
+    run_threads(4, worker)
+    assert len(s) == 0 and s.resident_bytes == 0
+    assert sum(freed) == 64 * 10         # every byte freed exactly once
+    assert s.evictions == 64
+
+
+# --------------------------------------------------------------------- #
+# property test: threaded store ops preserve invariants (hypothesis      #
+# optional, gated like the PR 4/6 property suites)                       #
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    thread_ops = st.lists(
+        st.tuples(st.integers(0, 3),             # worker
+                  st.sampled_from(["place", "evict", "pin", "refetch"]),
+                  st.integers(0, 5),             # key
+                  st.integers(1, 40)),           # nbytes
+        min_size=4, max_size=48)
+
+    @given(ops=thread_ops)
+    @settings(max_examples=25, deadline=None)
+    def test_threaded_store_ops_preserve_invariants(ops):
+        """Interleaved place/evict/pin/refetch from 4 threads on one
+        shared capped store: byte accounting stays exact, the cap
+        holds at quiescence, pinned entries stay resident."""
+        cap = 100
+        s = ResidencyStore("t", cap=cap, policy="lru")
+        s.put("pin-a", "PA", 30, pinned=True)
+        per_worker = [[op for op in ops if op[0] == w] for w in range(4)]
+
+        def worker(idx):
+            for _, kind, key, nbytes in per_worker[idx]:
+                if kind == "place":
+                    s.put((idx, key), key, min(nbytes, 40))
+                elif kind == "evict":
+                    s.evict_one()
+                elif kind == "pin":
+                    s.put((idx, key), key, min(nbytes, 40))
+                    s.pin((idx, key))
+                    s.unpin((idx, key))
+                else:                             # refetch: place again
+                    s.put((idx, key), key, min(nbytes, 40))
+
+        run_threads(4, worker)
+        assert s.resident_bytes == sum(s.entry(k).nbytes
+                                       for k in s.keys())
+        assert s.resident_bytes <= cap
+        assert "pin-a" in s and s.get("pin-a") == "PA"
+else:                                            # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_threaded_store_ops_preserve_invariants():
+        pass
+
+
+# --------------------------------------------------------------------- #
+# SharedDevicePool                                                       #
+# --------------------------------------------------------------------- #
+def test_pool_register_unique_ids_under_contention():
+    pool = SharedDevicePool(1 << 20)
+    got = []
+    lock = threading.Lock()
+
+    def worker(idx):
+        sid = pool.register()
+        with lock:
+            got.append(sid)
+
+    run_threads(32, worker)
+    assert len(set(got)) == 32
+    assert set(pool.members()) == set(got)
+
+
+def test_pool_duplicate_name_rejected():
+    pool = SharedDevicePool(1 << 20)
+    pool.register("a")
+    with pytest.raises(ValueError, match="already registered"):
+        pool.register("a")
+
+
+def test_pool_quota_evicts_over_quota_tenant_first():
+    """A tenant over its own quota is evicted down before anyone else
+    loses a byte, even with pool headroom to spare."""
+    pool = SharedDevicePool(10_000)
+    sa = ResidencyStore("a-store")
+    sb = ResidencyStore("b-store")
+    pool.register("a", quota=100)
+    pool.register("b", quota=5_000)
+    pool.attach("a", sa)
+    pool.attach("b", sb)
+    for i in range(5):
+        sb.put(("b", i), i, 60)
+    for i in range(5):
+        sa.put(("a", i), i, 60)      # 300B > quota 100 -> evicted down
+    assert pool.usage("a") <= 100
+    assert pool.usage("b") == 300                # untouched
+    assert sb.evictions == 0 and sa.evictions >= 4
+
+
+def test_pool_fair_eviction_is_quota_proportional():
+    """Pool-total pressure picks the tenant with the highest
+    usage/quota ratio — the one furthest over its fair share."""
+    pool = SharedDevicePool(500)
+    sa, sb = ResidencyStore("a-store"), ResidencyStore("b-store")
+    pool.register("a", quota=400)
+    pool.register("b", quota=400)
+    pool.attach("a", sa)
+    pool.attach("b", sb)
+    for i in range(4):
+        sa.put(("a", i), i, 100)     # a: 400B (at quota, over share)
+    sb.put(("b", 0), 0, 100)
+    sb.put(("b", 1), 1, 100)         # total 600 > 500: a (ratio 1.0)
+    #                                # loses before b (ratio 0.5)
+    assert pool.usage() <= 500
+    assert sa.evictions >= 1 and sb.evictions == 0
+
+
+def test_pool_pinned_tenant_is_exempted_not_spun():
+    """rebalance() must terminate when the only over-quota tenant is
+    fully pinned — it is exempted, not retried forever."""
+    pool = SharedDevicePool(100)
+    sa = ResidencyStore("a-store")
+    pool.register("a", quota=50)
+    pool.attach("a", sa)
+    sa.put("p1", 1, 80, pinned=True)
+    sa.put("p2", 2, 80, pinned=True)
+    assert pool.usage("a") == 160    # over quota AND pool, all pinned
+    assert pool.rebalance() == 0
+    assert "p1" in sa and "p2" in sa
+
+
+def test_pool_unregister_detaches_stores():
+    pool = SharedDevicePool(1 << 20)
+    s = ResidencyStore("a-store")
+    pool.register("a")
+    pool.attach("a", s)
+    s.put("k", 1, 100)
+    assert pool.usage("a") == 100
+    pool.unregister("a")
+    assert s.pool is None and s.owner == ""
+    assert pool.usage() == 0
+    s.put("k2", 2, 100)              # no longer charges the pool
+    assert pool.usage() == 0
+    assert pool.places == 1          # lifetime totals survive
+
+
+def test_default_pool_config_driven_sessions_share_it():
+    """Sessions with ``pool_bytes``/``pool_quota`` set and no explicit
+    pool join one process-default pool (first capacity wins)."""
+    res.reset_default_pool()
+    try:
+        cfg = OffloadConfig(policy="dfu", threshold=10.0,
+                            pool_bytes=1 << 20, pool_quota=1 << 19)
+        with Session(cfg, record_trace=False, intercept=False,
+                     name="t1") as s1:
+            with Session(cfg, record_trace=False, intercept=False,
+                         name="t2") as s2:
+                pool = res.default_pool()
+                assert s1.runtime.pool is pool
+                assert s2.runtime.pool is pool
+                assert pool.total_bytes == 1 << 20
+                assert pool.quota_of("t1") == 1 << 19
+                assert set(pool.members()) == {"t1", "t2"}
+        assert pool.members() == ()              # closed -> unregistered
+    finally:
+        res.reset_default_pool()
+
+
+def test_pool_totals_equal_tenant_sums_under_32_thread_storm():
+    """The headline lost-update detector: 32 sessions hammer one pool
+    with mixed gemm/syrk/trsm under real cap pressure; at quiescence
+    the independently-maintained pool totals equal the per-tenant sums
+    exactly, and the usage ledger equals the stores' resident bytes."""
+    nth = 32
+    pool = SharedDevicePool(6 * NBYTES, name="storm")
+    cfg = OffloadConfig(policy="dfu", threshold=10.0)
+    quiesce = threading.Barrier(nth)
+    snap = {}
+
+    def worker(idx):
+        with ses.session(cfg, record_trace=False, intercept=False,
+                         name=f"w{idx}", pool=pool) as s:
+            outs = _mixed_workload(idx, reps=2)
+            s.sync()
+            resident = s.runtime.resident_bytes() + sum(
+                s.runtime.block_stores[d].resident_bytes
+                for d in range(len(s.runtime.block_stores)))
+            quiesce.wait(60)         # everyone done, nobody closed
+            if idx == 0:
+                snap["tenants"] = pool.tenant_stats()
+                snap["totals"] = (pool.places, pool.placed_bytes,
+                                  pool.evictions, pool.evicted_bytes,
+                                  pool.refetches)
+                snap["usage"] = pool.usage()
+            snap[f"resident-{idx}"] = resident
+            quiesce.wait(60)         # hold tenants until the snapshot
+            del outs
+
+    run_threads(nth, worker)
+    rows = snap["tenants"].values()
+    assert len(rows) == nth
+    sums = (sum(r["places"] for r in rows),
+            sum(r["placed_bytes"] for r in rows),
+            sum(r["evictions"] for r in rows),
+            sum(r["evicted_bytes"] for r in rows),
+            sum(r["refetches"] for r in rows))
+    assert sums == snap["totals"]
+    assert snap["totals"][0] > 0                  # work actually ran
+    assert sum(r["usage"] for r in rows) == snap["usage"]
+
+
+def test_pool_pins_survive_cross_tenant_pressure():
+    """A pinned placement in one session survives eviction storms
+    driven by every other tenant of the pool."""
+    pool = SharedDevicePool(4 * NBYTES, name="pinpool")
+    cfg = OffloadConfig(policy="dfu", threshold=10.0)
+    pinned_sess = ses.session(cfg, record_trace=False, intercept=False,
+                              name="pinner", pool=pool)
+    try:
+        a, b, _ = _mats(999)
+        blas.gemm(a, b)
+        pinned_sess.pin(a)
+        assert pinned_sess.runtime.placements.entry(id(a)).pinned
+
+        def worker(idx):
+            with ses.session(cfg, record_trace=False, intercept=False,
+                             name=f"evictor-{idx}", pool=pool):
+                _mixed_workload(idx, reps=3)
+
+        run_threads(8, worker)
+        assert id(a) in pinned_sess.runtime.placements
+        assert pinned_sess.runtime.placements.entry(id(a)).pinned
+    finally:
+        pinned_sess.close()
+
+
+# --------------------------------------------------------------------- #
+# runtime + dispatch under concurrency                                   #
+# --------------------------------------------------------------------- #
+def test_no_cross_session_decision_cache_bleed():
+    """Concurrent sessions with opposite thresholds: each call obeys
+    its own session's config — a cached decision from one runtime must
+    never serve another (the per-runtime dispatch cache isolates)."""
+    lo = OffloadConfig(policy="dfu", threshold=10.0)     # offloads N=64
+    hi = OffloadConfig(policy="dfu", threshold=1e6)      # stays host
+    results = {}
+
+    def worker(idx):
+        cfg = lo if idx % 2 == 0 else hi
+        with ses.session(cfg, record_trace=False,
+                         intercept=False) as s:
+            a, b, _ = _mats(idx)
+            for _ in range(4):
+                blas.gemm(a, b)
+            s.sync()
+            st = s.stats.per_routine["sgemm"]
+            results[idx] = (st.offloaded, st.on_host)
+
+    run_threads(8, worker)
+    for idx, (off, host) in results.items():
+        if idx % 2 == 0:
+            assert (off, host) == (4, 0), idx
+        else:
+            assert (off, host) == (0, 4), idx
+
+
+def test_shared_session_counters_lose_nothing():
+    """Many workers scoped into ONE session: the runtime serializes
+    them and the counter total is exactly the calls issued."""
+    nth, per = 8, 6
+    with ses.session(OffloadConfig(policy="dfu", threshold=10.0),
+                     record_trace=False, intercept=False) as s:
+
+        def worker(idx):
+            with s.scope():
+                a, b, _ = _mats(idx)
+                for _ in range(per):
+                    blas.gemm(a, b)
+
+        run_threads(nth, worker)
+        s.sync()
+        st = s.stats.per_routine["sgemm"]
+        assert st.calls == nth * per
+        assert st.offloaded + st.on_host == nth * per
+
+
+def test_concurrent_sessions_match_single_thread_oracle():
+    """Determinism: N threads in independent sessions produce exactly
+    the counters and results of the same workloads run one-by-one."""
+    nth = 8
+    cfg = OffloadConfig(policy="dfu", threshold=10.0)
+
+    def run_one(idx):
+        with ses.session(cfg, record_trace=False, intercept=False) as s:
+            outs = _mixed_workload(idx, reps=2)
+            s.sync()
+            counters = {
+                name: (r.calls, r.offloaded, r.on_host,
+                       r.cache_hits, r.cache_misses, r.bytes_in)
+                for name, r in sorted(s.stats.per_routine.items())}
+            return counters, [np.asarray(o) for o in outs]
+
+    oracle = {idx: run_one(idx) for idx in range(nth)}
+    threaded = {}
+    lock = threading.Lock()
+
+    def worker(idx):
+        got = run_one(idx)
+        with lock:
+            threaded[idx] = got
+
+    run_threads(nth, worker)
+    for idx in range(nth):
+        assert threaded[idx][0] == oracle[idx][0], idx
+        for got, ref in zip(threaded[idx][1], oracle[idx][1]):
+            np.testing.assert_array_equal(got, ref)
+
+
+def test_single_threaded_behavior_unchanged():
+    """Bit-identity guard: the PR 6 golden counters on the capped
+    workload still hold after the locking refactor (same decisions,
+    same eviction order, same byte totals)."""
+    rng = np.random.default_rng(42)
+    rt = rtm.install("dfu", threshold=10, device_bytes=2 * 128 * 128 * 4,
+                     record_trace=False)
+    try:
+        xs = [host_array(rng.standard_normal((128, 128))
+                         .astype("float32")) for _ in range(5)]
+        outs = []
+        for _ in range(3):
+            for x in xs:
+                outs.append(blas.gemm(x, x))
+        rt.sync()
+        assert rt.stats.evictions == 28
+        assert rt.stats.evicted_bytes == 1835008
+        st = rt.stats.per_routine["sgemm"]
+        assert (st.offloaded, st.on_host) == (15, 0)
+        assert (st.cache_hits, st.cache_misses) == (15, 15)
+    finally:
+        rtm.uninstall()
+
+
+# --------------------------------------------------------------------- #
+# call-site profiles under concurrency                                   #
+# --------------------------------------------------------------------- #
+def test_callsite_profile_observations_not_lost():
+    prof = CallSiteProfile("gemm@x.py:f:1")
+    per, nth = 200, 8
+
+    def worker(idx):
+        for i in range(per):
+            prof.observe(64.0, 1e6, 1e-4, offload=(i % 2 == 0))
+            prof.observe_residency(hit=(i % 3 == 0))
+
+    run_threads(nth, worker)
+    assert prof.calls == per * nth
+    assert prof.offloaded + prof.on_host == per * nth
+    assert prof.lookups == per * nth
+    assert prof.n_avg_count == per * nth
+
+
+def test_callsite_registry_one_profile_per_site_under_race():
+    reg = CallSiteRegistry()
+    got = []
+    lock = threading.Lock()
+
+    def worker(idx):
+        p = reg.profile("site-x")
+        with lock:
+            got.append(p)
+        p.observe(10.0, 1.0, 1e-6, offload=False)
+
+    run_threads(16, worker)
+    assert len(reg) == 1
+    assert all(p is got[0] for p in got)          # no orphaned profile
+    assert got[0].calls == 16                     # and no lost counts
+
+
+# --------------------------------------------------------------------- #
+# faults + breaker under concurrency                                     #
+# --------------------------------------------------------------------- #
+def test_fault_injector_counter_walk_is_atomic():
+    """An nth-rule shared by 8 threads fires exactly total//nth times —
+    a torn counter under- or over-fires."""
+    inj = flt.FaultInjector.from_spec("kernel:nth=5")
+    per, nth = 100, 8
+    fired = []
+    lock = threading.Lock()
+
+    def worker(idx):
+        mine = 0
+        for _ in range(per):
+            try:
+                inj.check("kernel")
+            except flt.KernelError:
+                mine += 1
+        with lock:
+            fired.append(mine)
+
+    run_threads(nth, worker)
+    assert sum(fired) == (per * nth) // 5
+    assert inj.injected["kernel"] == (per * nth) // 5
+
+
+def test_health_tracker_no_lost_failures():
+    h = flt.HealthTracker(1, threshold=0)        # disabled: pure tally
+    per, nth = 200, 8
+
+    def worker(idx):
+        for _ in range(per):
+            h.failure(0)
+
+    run_threads(nth, worker)
+    assert h.device(0).failures == per * nth
+
+
+def test_breaker_trips_once_per_quarantine_under_contention():
+    """Concurrent failures trip the breaker exactly once (one
+    quarantine callback), and ok() recovers it exactly once."""
+    trips, recovers = [], []
+    h = flt.HealthTracker(1, threshold=3, cooldown_ms=1e9,
+                          on_quarantine=trips.append,
+                          on_recover=recovers.append)
+
+    def worker(idx):
+        for _ in range(10):
+            h.failure(0)
+
+    run_threads(8, worker)
+    assert h.device(0).quarantines == 1
+    assert len(trips) == 1
+    assert not h.usable(0)
+    h.ok(0)
+    assert h.usable(0) and len(recovers) == 1
+
+
+def test_chaos_and_concurrency_live_matches_serialized_replay():
+    """Satellite 4: 8 threads run the tier-1-style workload under the
+    injected fault spec; each session's live breaker/fallback counters
+    must match a serialized replay of its own trace."""
+    nth = 8
+    cfg = OffloadConfig(policy="dfu", threshold=10.0,
+                        faults="transfer:p=0.05,seed=7",
+                        retries=1, backoff_ms=0.0, breaker=0)
+    live = {}
+    lock = threading.Lock()
+
+    def worker(idx):
+        with ses.session(cfg, record_trace=True, intercept=False,
+                         name=f"chaos-{idx}") as s:
+            # fresh operands each call: every placement rolls the
+            # injector's RNG, so the spec actually fires
+            mats = _mats(idx, count=24, n=32)
+            for i in range(0, 24, 2):
+                blas.gemm(mats[i], mats[i + 1])
+            s.sync()
+            st = s.stats
+            with lock:
+                live[f"chaos-{idx}"] = (
+                    s.runtime.trace,
+                    (st.faults, st.retries, st.fallbacks,
+                     st.quarantines, st.recoveries))
+
+    run_threads(nth, worker)
+    assert len(live) == nth
+    assert sum(counts[0] for _, counts in live.values()) > 0
+    for name, (trace, counts) in live.items():
+        rep = MemTierSimulator.from_config(cfg, session=name).run(trace)
+        assert (rep.faults, rep.retries, rep.fallbacks,
+                rep.quarantines, rep.recoveries) == counts, name
+        assert rep.session == name
+
+
+# --------------------------------------------------------------------- #
+# session-stamped traces                                                 #
+# --------------------------------------------------------------------- #
+def test_trace_events_carry_session_id():
+    cfg = OffloadConfig(policy="dfu", threshold=10.0)
+    with ses.session(cfg, record_trace=True, intercept=False,
+                     name="tenant-a") as s:
+        a, b, _ = _mats(5)
+        blas.gemm(a, b)
+        s.sync()
+        trace = s.runtime.trace
+        assert trace.event_count("place") > 0
+        assert all(e.session == "tenant-a" for e in trace.events)
+        assert trace.event_count("place", session="tenant-a") == \
+            trace.event_count("place")
+        assert trace.event_count("place", session="other") == 0
+
+
+def test_unnamed_session_trace_dump_is_pre_tenant_identical(tmp_path):
+    """Unnamed sessions serialize with NO session key at all — the
+    dumped JSON is byte-compatible with pre-tenant traces."""
+    path = str(tmp_path / "t.json")
+    cfg = OffloadConfig(policy="dfu", threshold=10.0, trace_path=path)
+    with ses.session(cfg, record_trace=True, intercept=False):
+        a, b, _ = _mats(6)
+        blas.gemm(a, b)
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert doc["events"]
+    assert all("session" not in e for e in doc["events"])
+    # and named sessions round-trip their stamp through load
+    from repro.core.trace import Trace
+    t2 = Trace.load(path)
+    assert all(e.session == "" for e in t2.events)

@@ -65,6 +65,8 @@ MATRIX = {
     "backoff_ms": ("2.5", 2.5),
     "breaker": ("5", 5),
     "breaker_cooldown_ms": ("250", 250.0),
+    "pool_bytes": ("4194304", 4194304),
+    "pool_quota": ("1048576", 1048576),
 }
 
 
