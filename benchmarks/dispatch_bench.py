@@ -21,6 +21,11 @@ cached) runtime, on the two workloads the tentpole targets.
   (``evict`` in lru/lfu/refetch).  Reports calls/sec plus the
   refetched GB the cap cost — how each policy's victim choice trades
   throughput against link traffic under constant pressure.
+* ``kernel`` — the pallas dispatch venue (``SCILIB_KERNELS``): the
+  chained offloaded gemm loop at two shape classes with the kernel
+  path off (generic XLA offload) vs on (kernel-backed closures), plus
+  an adaptive run that round-robins host/XLA/pallas probes and reports
+  which venue the call site locked.
 * ``faults`` — fault-tolerance overhead: the chained workload under
   the Mem-Copy policy (every call stages transfers, so every call is
   exposed to injection) at 5% transfer faults.  Three configs: clean
@@ -207,6 +212,58 @@ def _bench_eviction(evict_policy: str) -> Tuple[float, int, int]:
         rtm.uninstall()
 
 
+def _bench_kernelpath(n: int, kernel: bool) -> float:
+    """Chained offloaded gemms at shape n with the pallas venue off/on.
+    Returns calls/sec."""
+    from repro.core import blas
+    from repro.core import runtime as rtm
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(6)
+    rt = rtm.install(config=_mode_config(
+        "fast", threshold=100.0, kernel_path=kernel), record_trace=False)
+    try:
+        a = host_array(rng.standard_normal((n, n))
+                       .astype("float32") / n)
+
+        def loop():
+            c = a
+            for _ in range(CHAIN_CALLS):
+                c = blas.gemm(a, c)
+            return c
+
+        return _sweep(loop, rt, CHAIN_CALLS)
+    finally:
+        rtm.uninstall()
+
+
+def _bench_kernel_adaptive(n: int) -> Tuple[str, float]:
+    """Adaptive warmup racing all three venues at shape n: returns the
+    locked venue and the locked steady-state calls/sec."""
+    from repro.core import blas
+    from repro.core import runtime as rtm
+    from repro.core.policy import host_array
+    rng = np.random.default_rng(7)
+    rt = rtm.install(config=_mode_config(
+        "adaptive", threshold=100.0, kernel_path=True,
+        adaptive_warmup=9), record_trace=False)
+    try:
+        a = host_array(rng.standard_normal((n, n))
+                       .astype("float32") / n)
+
+        def loop():
+            c = a
+            for _ in range(CHAIN_CALLS):
+                c = blas.gemm(a, c)
+            return c
+
+        cps = _sweep(loop, rt, CHAIN_CALLS)
+        venue = next((p.locked_venue for p in rt.callsites
+                      if p.locked is not None), "")
+        return venue or "unlocked", cps
+    finally:
+        rtm.uninstall()
+
+
 def _bench_faults(spec: str, retries: int) -> Tuple[float, float, int]:
     """Chained Mem-Copy gemms under an injected transfer-fault rate.
     Returns (calls/sec, fallback %, retries) over all reps."""
@@ -301,6 +358,21 @@ def bench() -> List[Row]:
         rows.append((f"dispatch.shard.gemm512.d{n}_moved_mb",
                      round(moved / 1e6, 1),
                      "block bytes moved to device tiers (summed)"))
+    for n in (128, 512):
+        xla_cps = _bench_kernelpath(n, False)
+        pal_cps = _bench_kernelpath(n, True)
+        rows.append((f"dispatch.kernel.gemm{n}.xla_cps",
+                     round(xla_cps, 0),
+                     "offloaded chain, generic XLA venue"))
+        rows.append((f"dispatch.kernel.gemm{n}.pallas_cps",
+                     round(pal_cps, 0),
+                     "offloaded chain, SCILIB_KERNELS=1"))
+        rows.append((f"dispatch.kernel.gemm{n}.pallas_speedup",
+                     round(pal_cps / max(1e-9, xla_cps), 3),
+                     ">1 means the pallas venue wins this shape class"))
+    venue, cps = _bench_kernel_adaptive(128)
+    rows.append(("dispatch.kernel.adaptive128_cps", round(cps, 0),
+                 f"3-venue warmup locked: {venue}"))
     for pol, (cps, evs, refetched) in evict.items():
         rows.append((f"dispatch.evict.mixed.{pol}_cps", round(cps, 0),
                      f"working set 2x cap, evict={pol}"))

@@ -374,6 +374,119 @@ def _trsm_kernel(a, b, alpha, *, side, uplo, trans, diag):
 
 
 # ----------------------------------------------------------------------- #
+# pallas-venue arithmetic (OffloadConfig.kernel_path / SCILIB_KERNELS)     #
+#                                                                          #
+# Mirrors of the jitted kernels above that route the inner product         #
+# through the hand-written kernels (``kops.kernel_*``) instead of the      #
+# generic XLA formulation.  These closures are built only when the kernel  #
+# path is on and the routine has a kernel (``kops.kernel_available``), so  #
+# default-off runs never trace — or even import — any of this.  The        #
+# ``_*_klean`` variants serve the dominant alpha=1 / beta=0 / no-C call    #
+# shape with no scalar epilogue at all: fewer jit arguments and no         #
+# multiply, which is the venue's measurable edge on backends where         #
+# ``kernel_*`` itself degrades to the same XLA matmul.                     #
+# ----------------------------------------------------------------------- #
+_KOPS = None
+
+
+def _kops():
+    """repro.kernels.ops, imported on first kernel-path use only (the
+    default pipeline keeps its import graph unchanged)."""
+    global _KOPS
+    if _KOPS is None:
+        from repro.kernels import ops
+        _KOPS = ops
+    return _KOPS
+
+
+def _kernel_path_active() -> bool:
+    runtime = rt.active()
+    return runtime is not None and runtime.kernel_path
+
+
+def _kernel_block() -> int:
+    runtime = rt.active()
+    return runtime.kernel_block if runtime is not None else 0
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _gemm_klean(a, b, *, block):
+    from repro.kernels import ops as kops
+    return kops.kernel_matmul(a, b, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "trans_a", "trans_b", "has_c", "block"))
+def _gemm_kvenue(a, b, c, alpha, beta, *, trans_a, trans_b, has_c, block):
+    from repro.kernels import ops as kops
+    acc = kops.kernel_matmul(_op(a, trans_a), _op(b, trans_b), block=block)
+    out = alpha.astype(acc.dtype) * acc
+    if has_c:
+        out = out + beta.astype(acc.dtype) * c
+    return out.astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("uplo", "trans", "block"))
+def _syrk_klean(a, *, uplo, trans, block):
+    from repro.kernels import ops as kops
+    # real syrk only reaches the venue (kernel_available), so "C" == "T"
+    t = "N" if trans == "N" else "T"
+    return kops.kernel_syrk(a, uplo=uplo, trans=t, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "uplo", "trans", "conj", "has_c", "block"))
+def _syrk_kvenue(a, c, alpha, beta, *, uplo, trans, conj, has_c, block):
+    from repro.kernels import ops as kops
+    opa = _op(a, trans)
+    at = jnp.swapaxes(opa, -1, -2)
+    if conj:
+        at = jnp.conj(at)
+    acc = kops.kernel_matmul(opa, at, block=block)
+    upd = alpha.astype(acc.dtype) * acc
+    n = upd.shape[-1]
+    mask = _tri_mask(n, uplo)
+    if has_c:
+        tri = jnp.where(mask, upd + beta.astype(acc.dtype) * c, c)
+    else:
+        tri = jnp.where(mask, upd, jnp.zeros_like(upd))
+    return tri.astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "trans", "conj", "has_c", "block"))
+def _syrk_block_kvenue(ai, aj, c, alpha, beta, *, trans, conj, has_c,
+                       block):
+    from repro.kernels import ops as kops
+    opi, opj = _op(ai, trans), _op(aj, trans)
+    jt = jnp.swapaxes(opj, -1, -2)
+    if conj:
+        jt = jnp.conj(jt)
+    acc = kops.kernel_matmul(opi, jt, block=block)
+    out = alpha.astype(acc.dtype) * acc
+    if has_c:
+        out = out + beta.astype(acc.dtype) * c
+    return out.astype(ai.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "side", "uplo", "trans", "diag", "block"))
+def _trsm_klean(a, b, *, side, uplo, trans, diag, block):
+    from repro.kernels import ops as kops
+    return kops.kernel_trsm(a, b, side=side, uplo=uplo, trans=trans,
+                            diag=diag, block=block).astype(b.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "side", "uplo", "trans", "diag", "block"))
+def _trsm_kvenue(a, b, alpha, *, side, uplo, trans, diag, block):
+    from repro.kernels import ops as kops
+    rhs = alpha.astype(b.dtype) * b
+    return kops.kernel_trsm(a, rhs, side=side, uplo=uplo, trans=trans,
+                            diag=diag, block=block).astype(b.dtype)
+
+
+# ----------------------------------------------------------------------- #
 # multi-device tile decomposition (BLASX-style 2-D sharding)               #
 #                                                                          #
 # When the runtime sees more than one device tier, super-threshold calls   #
@@ -460,7 +573,7 @@ def _colblock_coords(x: jax.Array, trans: str,
 
 
 def _shard_gemm(a, b, c, alpha, beta, trans_a, trans_b,
-                n_dev) -> Optional[TilePlan]:
+                n_dev, venue="xla") -> Optional[TilePlan]:
     m = a.shape[-2] if trans_a == "N" else a.shape[-1]
     n = b.shape[-1] if trans_b == "N" else b.shape[-2]
     g = _grid2d(n_dev, m, n)
@@ -471,17 +584,20 @@ def _shard_gemm(a, b, c, alpha, beta, trans_a, trans_b,
     dt = a.dtype
     has_c = c is not None
     alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
+    # pallas venue: every tile runs the kernel-backed block arithmetic
+    gemm_k = (functools.partial(_gemm_kvenue, block=_kernel_block())
+              if venue == "pallas" else _gemm_kernel)
     if has_c:
         def tile_fn(a_, b_, c_):
-            return _gemm_kernel(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
-                                trans_b=trans_b, has_c=True)
+            return gemm_k(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
+                          trans_b=trans_b, has_c=True)
     else:
         czero = _scalar(0.0, dt)
 
         def tile_fn(a_, b_):
-            return _gemm_kernel(a_, b_, czero, alpha_, beta_,
-                                trans_a=trans_a, trans_b=trans_b,
-                                has_c=False)
+            return gemm_k(a_, b_, czero, alpha_, beta_,
+                          trans_a=trans_a, trans_b=trans_b,
+                          has_c=False)
     tiles = []
     for (r0, r1) in rows:
         for (q0, q1) in cols:
@@ -537,7 +653,7 @@ def _shard_symm(a, b, c, alpha, beta, side, uplo, conj,
 
 
 def _shard_syrk(a, c, alpha, beta, uplo, trans, conj,
-                n_dev) -> Optional[TilePlan]:
+                n_dev, venue="xla") -> Optional[TilePlan]:
     n = a.shape[-2] if trans == "N" else a.shape[-1]
     g = 2
     while g * (g + 1) // 2 < n_dev:
@@ -550,22 +666,28 @@ def _shard_syrk(a, c, alpha, beta, uplo, trans, conj,
     has_c = c is not None
     alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
     czero = _scalar(0.0, dt)
+    if venue == "pallas":
+        blk = _kernel_block()
+        syrk_k = functools.partial(_syrk_kvenue, block=blk)
+        syrk_block_k = functools.partial(_syrk_block_kvenue, block=blk)
+    else:
+        syrk_k, syrk_block_k = _syrk_kernel, _syrk_block_kernel
     if has_c:
         def diag_fn(a_, c_):
-            return _syrk_kernel(a_, c_, alpha_, beta_, uplo=uplo,
-                                trans=trans, conj=conj, has_c=True)
+            return syrk_k(a_, c_, alpha_, beta_, uplo=uplo,
+                          trans=trans, conj=conj, has_c=True)
 
         def off_fn(ai, aj, cij):
-            return _syrk_block_kernel(ai, aj, cij, alpha_, beta_,
-                                      trans=trans, conj=conj, has_c=True)
+            return syrk_block_k(ai, aj, cij, alpha_, beta_,
+                                trans=trans, conj=conj, has_c=True)
     else:
         def diag_fn(a_):
-            return _syrk_kernel(a_, czero, alpha_, beta_, uplo=uplo,
-                                trans=trans, conj=conj, has_c=False)
+            return syrk_k(a_, czero, alpha_, beta_, uplo=uplo,
+                          trans=trans, conj=conj, has_c=False)
 
         def off_fn(ai, aj):
-            return _syrk_block_kernel(ai, aj, czero, alpha_, beta_,
-                                      trans=trans, conj=conj, has_c=False)
+            return syrk_block_k(ai, aj, czero, alpha_, beta_,
+                                trans=trans, conj=conj, has_c=False)
     tiles, stored = [], {}
     for i in range(g):
         for j in range(g):
@@ -684,7 +806,7 @@ def _shard_syr2k(a, b, c, alpha, beta, uplo, trans, conj,
 
 
 def _shard_tri(a, b, side, uplo, trans, diag, alpha, kernel,
-               n_dev) -> Optional[TilePlan]:
+               n_dev, venue="xla") -> Optional[TilePlan]:
     """trmm/trsm: the RHS panel splits along its free dimension; each
     panel solve/multiply is independent, the triangle replicates."""
     m, n = b.shape[-2], b.shape[-1]
@@ -695,6 +817,9 @@ def _shard_tri(a, b, side, uplo, trans, diag, alpha, kernel,
     panels = _splits(dim, g)
     dt = b.dtype
     alpha_ = _scalar(alpha, dt)
+    if venue == "pallas" and kernel is _trsm_kernel:
+        # only trsm has a kernel; trmm never resolves to the pallas venue
+        kernel = functools.partial(_trsm_kvenue, block=_kernel_block())
 
     def tile_fn(a_, b_):
         return kernel(a_, b_, alpha_, side=side, uplo=uplo, trans=trans,
@@ -717,12 +842,26 @@ def _shard_tri(a, b, side, uplo, trans, diag, alpha, kernel,
 # public routines                                                          #
 # ----------------------------------------------------------------------- #
 def _dispatch(routine, m, n, k, operands, compute, batch=1, key=None,
-              shard=None):
+              shard=None, kernel_compute=None):
     runtime = rt.active()
     if runtime is None:
         return compute(*[x for _, x, _, _ in operands])
     return runtime.blas_call(routine, m, n, k, operands, compute,
-                             batch=batch, key=key, shard=shard)
+                             batch=batch, key=key, shard=shard,
+                             kernel_compute=kernel_compute)
+
+
+def _kernel_bound(base, dt, bkey, kfactory):
+    """The pallas-venue twin of ``_bound``: build (or recall) the
+    kernel-backed compute closure for one call-site signature, or None
+    when the kernel path is off or the routine/dtype has no kernel.
+    Memo keys get a ``"kern"`` prefix plus the block edge so venue
+    closures never collide with the XLA ones in ``_BOUND``."""
+    if not _kernel_path_active() or not _kops().kernel_available(base, dt):
+        return None
+    block = _kernel_block()
+    kkey = ("kern", block) + bkey if bkey is not None else None
+    return _bound(kkey, functools.partial(kfactory, block))
 
 
 def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
@@ -756,7 +895,30 @@ def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
                                     has_c=False)
         return compute
 
+    def kfactory(block):
+        if (not has_c and av == 1 and bv == 0
+                and trans_a == "N" and trans_b == "N"):
+            def kcompute(a_, b_):          # lean: no scalar epilogue
+                return _gemm_klean(a_, b_, block=block)
+            return kcompute
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def kcompute(a_, b_, c_):
+                return _gemm_kvenue(a_, b_, c_, alpha_, beta_,
+                                    trans_a=trans_a, trans_b=trans_b,
+                                    has_c=True, block=block)
+        else:
+            c0 = _scalar(0.0, dt)
+
+            def kcompute(a_, b_):
+                return _gemm_kvenue(a_, b_, c0, alpha_, beta_,
+                                    trans_a=trans_a, trans_b=trans_b,
+                                    has_c=False, block=block)
+        return kcompute
+
     compute = _bound(bkey, factory)
+    kernel_compute = _kernel_bound("gemm", dt, bkey, kfactory)
     ops = [("A", a, float(opn), False), ("B", b, float(opm), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
@@ -766,7 +928,7 @@ def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
     return _dispatch(routine_name("gemm", dt), opm, opn, opk,
                      ops, compute, batch,
                      key=_call_key(bkey, opm, opn, opk, batch),
-                     shard=shard)
+                     shard=shard, kernel_compute=kernel_compute)
 
 
 @jax.jit
@@ -891,7 +1053,29 @@ def _syrk_like(a, c, *, uplo, trans, alpha, beta, conj, base):
                                     trans=trans, conj=conj, has_c=False)
         return compute
 
+    def kfactory(block):
+        if not has_c and av == 1 and bv == 0:
+            def kcompute(a_):              # lean: no scalar epilogue
+                return _syrk_klean(a_, uplo=uplo, trans=trans, block=block)
+            return kcompute
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def kcompute(a_, c_):
+                return _syrk_kvenue(a_, c_, alpha_, beta_, uplo=uplo,
+                                    trans=trans, conj=conj, has_c=True,
+                                    block=block)
+        else:
+            c0 = _scalar(0.0, dt)
+
+            def kcompute(a_):
+                return _syrk_kvenue(a_, c0, alpha_, beta_, uplo=uplo,
+                                    trans=trans, conj=conj, has_c=False,
+                                    block=block)
+        return kcompute
+
     compute = _bound(bkey, factory)
+    kernel_compute = _kernel_bound(base, dt, bkey, kfactory)
     ops = [("A", a, float(n), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
@@ -900,7 +1084,7 @@ def _syrk_like(a, c, *, uplo, trans, alpha, beta, conj, base):
              if _shard_active(batch, a, c) else None)
     return _dispatch(routine_name(base, dt), n, n, k, ops, compute,
                      batch, key=_call_key(bkey, n, n, k, batch),
-                     shard=shard)
+                     shard=shard, kernel_compute=kernel_compute)
 
 
 def syr2k(a, b, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
@@ -978,7 +1162,21 @@ def _tri_like(a, b, *, side, uplo, trans, diag, alpha, base, kernel):
                           trans=trans, diag=diag)
         return compute
 
+    def kfactory(block):
+        if av == 1:
+            def kcompute(a_, b_):          # lean: no alpha scaling
+                return _trsm_klean(a_, b_, side=side, uplo=uplo,
+                                   trans=trans, diag=diag, block=block)
+            return kcompute
+        alpha_ = _scalar(alpha, dt)
+
+        def kcompute(a_, b_):
+            return _trsm_kvenue(a_, b_, alpha_, side=side, uplo=uplo,
+                                trans=trans, diag=diag, block=block)
+        return kcompute
+
     compute = _bound(bkey, factory)
+    kernel_compute = _kernel_bound(base, dt, bkey, kfactory)
     tri_n = a.shape[-1]
     opn = n if side == "L" else m
     ops = [("A", a, float(opn), False),
@@ -988,7 +1186,7 @@ def _tri_like(a, b, *, side, uplo, trans, diag, alpha, base, kernel):
              if _shard_active(batch, a, b) else None)
     return _dispatch(routine_name(base, dt), tri_n, opn, 0, ops, compute,
                      batch, key=_call_key(bkey, tri_n, opn, 0, batch),
-                     shard=shard)
+                     shard=shard, kernel_compute=kernel_compute)
 
 
 # dlsym mode with no runtime installed still honors the env-derived

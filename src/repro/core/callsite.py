@@ -36,6 +36,10 @@ _MAX_WALK = 16
 
 UNKNOWN = "<unknown>"
 
+#: execution venues in probe-schedule order: the host path, the generic
+#: XLA offload, and the hand-written kernel offload (``kernel_path``).
+VENUES = ("host", "xla", "pallas")
+
 
 def fingerprint(entry: str) -> str:
     """Cheap call-site id: ``entry@file:function:lineno``.
@@ -87,7 +91,16 @@ class CallSiteProfile:
     device_timed: int = 0
     device_seconds: float = 0.0
     device_best: float = float("inf")
+    # third venue (kernel_path): probes of the hand-written kernel offload
+    kernel_timed: int = 0
+    kernel_seconds: float = 0.0
+    kernel_best: float = float("inf")
+    # completed calls that executed on the pallas venue (subdivides
+    # ``offloaded``) and their wall time
+    pallas_calls: int = 0
+    pallas_seconds: float = 0.0
     locked: Optional[bool] = None          # the locked offload decision
+    locked_venue: str = ""                 # "" until locked (see VENUES)
     locked_why: str = ""
     last_offload: Optional[bool] = None    # decision of the latest call
     # several threads adopting one session can observe a shared site
@@ -97,7 +110,7 @@ class CallSiteProfile:
 
     # ------------------------------------------------------------------ #
     def observe(self, n_avg: float, flops: float, seconds: float,
-                offload: bool) -> None:
+                offload: bool, venue: str = "") -> None:
         """Record one completed call at this site.  ``n_avg <= 0``
         means "not derived" (the locked adaptive fast path skips the
         derivation): the call still counts, the size distribution —
@@ -108,6 +121,9 @@ class CallSiteProfile:
             self.seconds += seconds
             if offload:
                 self.offloaded += 1
+                if venue == "pallas":
+                    self.pallas_calls += 1
+                    self.pallas_seconds += seconds
             else:
                 self.on_host += 1
             self.last_offload = offload
@@ -130,10 +146,18 @@ class CallSiteProfile:
             self.lookups += 1
             self.hits += int(hit)
 
-    def observe_probe(self, offload: bool, seconds: float) -> None:
-        """Record one timed adaptive-warmup probe on one path."""
+    def observe_probe(self, offload: bool, seconds: float,
+                      venue: str = "") -> None:
+        """Record one timed adaptive-warmup probe on one venue.  With no
+        ``venue`` given, ``offload`` picks between the two classic
+        paths; ``venue="pallas"`` routes to the kernel-venue counters."""
         with self._lock:
-            if offload:
+            if venue == "pallas":
+                self.kernel_timed += 1
+                self.kernel_seconds += seconds
+                if seconds < self.kernel_best:
+                    self.kernel_best = seconds
+            elif offload:
                 self.device_timed += 1
                 self.device_seconds += seconds
                 if seconds < self.device_best:
@@ -147,7 +171,7 @@ class CallSiteProfile:
     # ------------------------------------------------------------------ #
     @property
     def probes_done(self) -> int:
-        return self.host_timed + self.device_timed
+        return self.host_timed + self.device_timed + self.kernel_timed
 
     def probe_path(self) -> bool:
         """Deterministic warmup schedule: even probes run the host path,
@@ -155,23 +179,44 @@ class CallSiteProfile:
         what the threshold rule would have said."""
         return self.probes_done % 2 == 1
 
-    def lock(self, fallback: Optional[bool] = None) -> bool:
-        """Lock the faster path (paper's warmup-then-patch step).
+    def probe_venue(self, venues: int = 2) -> str:
+        """Round-robin warmup schedule over the first ``venues`` entries
+        of :data:`VENUES`.  ``venues=2`` reproduces the classic
+        host/offload alternation exactly; ``venues=3`` adds the kernel
+        venue to the rotation — every venue gets equal samples."""
+        return VENUES[self.probes_done % venues]
 
-        Compares the *best* sample per path, not the mean: the first
-        probe of each path pays jit compilation, and the minimum is
-        robust to that one-off cost.  A path with no samples (e.g. the
+    def lock(self, fallback: Optional[bool] = None) -> bool:
+        """Lock the fastest venue (paper's warmup-then-patch step).
+
+        Compares the *best* sample per venue, not the mean: the first
+        probe of each venue pays jit compilation, and the minimum is
+        robust to that one-off cost.  A venue with no samples (e.g. the
         ``cpu`` policy forces every probe host-side) loses by default;
-        with no samples at all the threshold ``fallback`` decides.
+        with no samples at all the threshold ``fallback`` decides.  The
+        kernel venue competes only when it was probed at all.
         """
         with self._lock:
             if self.locked is not None:
                 return self.locked
             if self.probes_done == 0:
                 self.locked = bool(fallback)
+                self.locked_venue = "xla" if self.locked else "host"
                 self.locked_why = "no probes; threshold fallback"
                 return self.locked
+            if (self.kernel_timed
+                    and self.kernel_best < self.device_best
+                    and self.kernel_best < self.host_best):
+                self.locked = True
+                self.locked_venue = "pallas"
+                self.locked_why = (
+                    f"pallas {self.kernel_best * 1e6:.0f}us vs "
+                    f"device {self.device_best * 1e6:.0f}us vs "
+                    f"host {self.host_best * 1e6:.0f}us "
+                    f"over {self.probes_done} probes")
+                return self.locked
             self.locked = self.device_best < self.host_best
+            self.locked_venue = "xla" if self.locked else "host"
             self.locked_why = (f"device {self.device_best * 1e6:.0f}us "
                                f"vs host {self.host_best * 1e6:.0f}us "
                                f"over {self.probes_done} probes")
@@ -190,6 +235,8 @@ class CallSiteProfile:
     def decision_label(self) -> str:
         """Human label for the report table."""
         if self.locked is not None:
+            if self.locked_venue == "pallas":
+                return "pallas*"
             return ("offload*" if self.locked else "host*")
         if self.last_offload is None:
             return "-"

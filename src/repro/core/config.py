@@ -66,6 +66,8 @@ ENV_FIELDS: Dict[str, str] = {
     "breaker_cooldown_ms": "SCILIB_BREAKER_COOLDOWN_MS",
     "pool_bytes": "SCILIB_POOL_BYTES",
     "pool_quota": "SCILIB_POOL_QUOTA",
+    "kernel_path": "SCILIB_KERNELS",
+    "kernel_block": "SCILIB_KERNEL_BLOCK",
 }
 
 #: ``SCILIB_*`` vars that are legitimate but not config fields: kernel
@@ -194,6 +196,14 @@ def _parse_breaker(raw: str):
     return val if val >= 0 else _INVALID
 
 
+def _parse_kernel_block(raw: str):
+    try:
+        val = int(raw)
+    except ValueError:
+        return _INVALID
+    return val if val >= 0 else _INVALID
+
+
 _PARSERS: Dict[str, Callable[[str], Any]] = {
     "policy": _parse_policy,
     "threshold": _parse_threshold,
@@ -216,6 +226,8 @@ _PARSERS: Dict[str, Callable[[str], Any]] = {
     "breaker_cooldown_ms": _parse_nonneg_ms,
     "pool_bytes": _parse_device_bytes,
     "pool_quota": _parse_device_bytes,
+    "kernel_path": _parse_adaptive,      # "1" enables, like adaptive
+    "kernel_block": _parse_kernel_block,
 }
 
 #: unknown-var names already warned about (once per process per name)
@@ -277,6 +289,10 @@ class OffloadConfig:
     # session's byte quota inside it (None = fair equal share)
     pool_bytes: Optional[int] = None     # shared-pool capacity (0 = off)
     pool_quota: Optional[int] = None     # this tenant's quota (0 = none)
+    # the `pallas` execution venue (repro.kernels): race hand-written
+    # kernels against the generic XLA offload per call site
+    kernel_path: bool = False            # enable the third dispatch venue
+    kernel_block: int = 0                # kernel block edge (0 = default)
 
     # ------------------------------------------------------------------ #
     def __post_init__(self):
@@ -329,6 +345,9 @@ class OffloadConfig:
                     raise ValueError(f"{name} must be >= 0 (got {val})")
                 if val == 0:              # explicit "unset" sentinel
                     object.__setattr__(self, name, None)
+        if self.kernel_block < 0:
+            raise ValueError("kernel_block must be >= 0 "
+                             f"(got {self.kernel_block})")
 
     # ------------------------------------------------------------------ #
     def replace(self, **kw) -> "OffloadConfig":

@@ -176,6 +176,10 @@ class CallContext:
     compute: Callable[..., jax.Array]
     key: Optional[Hashable]
     shard: Optional[Callable[[int], Optional["TilePlan"]]]
+    # the pallas-venue arithmetic for this call (same operand order as
+    # ``compute``); None when the routine has no kernel — the venue
+    # resolution then falls back to the generic XLA offload
+    kernel_compute: Optional[Callable[..., jax.Array]] = None
     site: Optional[cs.CallSiteProfile] = None
     site_id: str = ""
 
@@ -189,8 +193,12 @@ class DispatchDecision:
     n_avg: float = 0.0
     why: str = "threshold"      # "cache" | "threshold" | "adaptive:probe"
     #                           # | "adaptive:locked" | "policy:host-only"
+    #                           # (+ "+kernel" suffix on the pallas venue)
     plan: Optional[TilePlan] = None
     timed: bool = False         # adaptive probe: block + bill path timing
+    # execution venue ("host"/"xla"/"pallas"); "" with kernel_path off,
+    # so the default pipeline is byte-identical to the two-venue one
+    venue: str = ""
 
 
 @dataclasses.dataclass
@@ -218,6 +226,10 @@ class RoutineStats:
     # retry exhaustion / quarantine (the call still completed, on host)
     retries: int = 0
     fallbacks: int = 0
+    # kernel_path: offloaded calls executed on the pallas venue (a
+    # subset of ``offloaded``) and their wall time
+    kernel_calls: int = 0
+    kernel_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -305,6 +317,15 @@ class RuntimeStats:
                 lines.append(f"{'dev' + str(dev):<10}{d.tiles:>8}"
                              f"{d.moved_bytes / 1e9:>10.3f}"
                              f"{d.affinity_hits:>10}{d.evictions:>7}")
+        kernel_calls = sum(r.kernel_calls
+                           for r in self.per_routine.values())
+        if kernel_calls:
+            # the venue section appears only once the pallas venue ran,
+            # so kernel_path=0 reports are byte-identical to before
+            ksec = sum(r.kernel_seconds
+                       for r in self.per_routine.values())
+            lines.append(f"pallas venue: {kernel_calls} calls "
+                         f"({ksec:.3f} s)")
         fault_activity = (self.faults + self.retries + self.fallbacks
                           + self.quarantines + self.recoveries)
         if fault_activity:
@@ -404,6 +425,10 @@ class OffloadRuntime:
         self.callsite_enabled = config.callsite
         self.adaptive = config.adaptive
         self.adaptive_warmup = config.adaptive_warmup
+        # the pallas execution venue (SCILIB_KERNELS): off by default so
+        # the two-venue pipeline below stays bit-identical
+        self.kernel_path = bool(config.kernel_path)
+        self.kernel_block = int(config.kernel_block)
         self.callsites = cs.CallSiteRegistry()
         self.stats.callsites = self.callsites
         # ordered decision stages: first stage to return a decision wins.
@@ -531,15 +556,25 @@ class OffloadRuntime:
         policy_changed = new.policy != old.policy
         if policy_changed:
             self.policy = make_policy(new.policy)
+        kernel_changed = new.kernel_path != old.kernel_path
         if (policy_changed or self.threshold != old_threshold
-                or new.adaptive != old.adaptive):
+                or new.adaptive != old.adaptive or kernel_changed):
             for prof in self.callsites:
                 prof.locked = None
                 prof.locked_why = ""
+                prof.locked_venue = ""
                 if policy_changed:     # old timings measured a dead path
                     prof.host_timed = prof.device_timed = 0
                     prof.host_seconds = prof.device_seconds = 0.0
                     prof.host_best = prof.device_best = float("inf")
+                if policy_changed or kernel_changed:
+                    # kernel-venue samples are only comparable within
+                    # one (policy, kernel_path) regime
+                    prof.kernel_timed = 0
+                    prof.kernel_seconds = 0.0
+                    prof.kernel_best = float("inf")
+        self.kernel_path = bool(new.kernel_path)
+        self.kernel_block = int(new.kernel_block)
         self.device_bytes_cap = new.device_bytes
         self.evict_policy = new.evict
         pin_changed = new.pin != self.pin_all
@@ -939,6 +974,7 @@ class OffloadRuntime:
                   batch: int = 1,
                   key: Optional[Hashable] = None,
                   shard: Optional[Callable[[int], Optional[TilePlan]]] = None,
+                  kernel_compute: Optional[Callable[..., jax.Array]] = None,
                   ) -> jax.Array:
         """Run one level-3 BLAS call through the dispatch pipeline:
 
@@ -954,6 +990,10 @@ class OffloadRuntime:
         ``shard``: optional tile-plan builder ``n_devices -> TilePlan``;
         consulted only when the call offloads and more than one device
         tier exists, so the single-device fast path never pays for it.
+        ``kernel_compute``: the pallas-venue arithmetic (same placed
+        operand order as ``compute``); consulted only under
+        ``kernel_path`` — None means "no kernel for this routine" and
+        the venue resolution falls back to the generic XLA offload.
 
         Thread-safe: the whole pipeline runs under the runtime lock, so
         several threads adopting one session (``Session.scope``) issue
@@ -963,10 +1003,11 @@ class OffloadRuntime:
         """
         with self._lock:
             return self._blas_call_locked(routine, m, n, k, operands,
-                                          compute, batch, key, shard)
+                                          compute, batch, key, shard,
+                                          kernel_compute)
 
     def _blas_call_locked(self, routine, m, n, k, operands, compute,
-                          batch, key, shard) -> jax.Array:
+                          batch, key, shard, kernel_compute) -> jax.Array:
         st = self.stats.routine(routine)
         st.calls += 1
         arrays = [op[1] for op in operands]
@@ -977,7 +1018,8 @@ class OffloadRuntime:
             return compute(*arrays)
 
         call = self._canonicalize(routine, m, n, k, operands, arrays,
-                                  compute, batch, key, shard)
+                                  compute, batch, key, shard,
+                                  kernel_compute)
         decision = self._decide(call, st)
         t0 = time.perf_counter()
         self._stage_plan(call, decision)
@@ -1000,10 +1042,11 @@ class OffloadRuntime:
     # stage 1 — canonicalize: bundle the call, fingerprint the site       #
     # ------------------------------------------------------------------ #
     def _canonicalize(self, routine, m, n, k, operands, arrays, compute,
-                      batch, key, shard) -> CallContext:
+                      batch, key, shard, kernel_compute=None) -> CallContext:
         call = CallContext(routine=routine, m=m, n=n, k=k, batch=batch,
                            operands=operands, arrays=arrays,
-                           compute=compute, key=key, shard=shard)
+                           compute=compute, key=key, shard=shard,
+                           kernel_compute=kernel_compute)
         if self.callsite_enabled:
             call.site_id = cs.fingerprint(routine)
             call.site = self.callsites.profile(call.site_id)
@@ -1029,7 +1072,29 @@ class OffloadRuntime:
             self.stats.fallbacks += 1
             st.fallbacks += 1
             self._emit_event("fallback", "quarantined", 0)
+        self._resolve_venue(call, decision)
         return decision
+
+    def _resolve_venue(self, call: CallContext,
+                       decision: DispatchDecision) -> None:
+        """Stage 2b — venue: which execution engine runs the decided
+        path.  A no-op with ``kernel_path`` off (``venue`` stays ``""``,
+        keeping the classic pipeline bit-identical).  Runs after the
+        policy/health vetoes so a vetoed call is always ``host``; an
+        adaptive decision arrives with its venue already chosen by the
+        probe schedule / lock and is left alone."""
+        if not self.kernel_path:
+            return
+        if not decision.offload:
+            decision.venue = "host"
+            return
+        if decision.venue:
+            return                      # adaptive stage already chose
+        if call.kernel_compute is not None:
+            decision.venue = "pallas"
+            decision.why += "+kernel"
+        else:
+            decision.venue = "xla"
 
     def _stage_adaptive(self, call: CallContext,
                         st: RoutineStats) -> Optional[DispatchDecision]:
@@ -1039,26 +1104,38 @@ class OffloadRuntime:
         if not self.adaptive or call.site is None:
             return None
         site = call.site
+        # with kernel_path on and a kernel for this routine, the warmup
+        # rotates over three venues instead of two; the decision carries
+        # the venue so execute/record stay stage-agnostic
+        racing = self.kernel_path and call.kernel_compute is not None
         if site.locked is not None:
             # locked fast path: no threshold math, no N_avg derivation —
             # the warmup already captured the site's size distribution
             st.dispatch_hits += 1
-            return DispatchDecision(site.locked, n_avg=0.0,
-                                    why="adaptive:locked")
+            return DispatchDecision(
+                site.locked, n_avg=0.0, why="adaptive:locked",
+                venue=site.locked_venue if self.kernel_path else "")
         nav = (thr.n_avg(call.routine, call.m, call.n, call.k)
                * (max(1, call.batch) ** (1.0 / 3.0)))
         if site.probes_done >= self.adaptive_warmup:
             locked = site.lock()
             if self.debug >= 1:
+                label = (site.locked_venue if self.kernel_path
+                         else ("offload" if locked else "host"))
                 print(f"[scilib] adaptive lock {site.site}: "
-                      f"{'offload' if locked else 'host'} "
-                      f"({site.locked_why})")
+                      f"{label} ({site.locked_why})")
+            if self.kernel_path:
+                self._emit_event("venue",
+                                 f"{site.locked_venue}:{site.site}", 0)
             st.dispatch_hits += 1
-            return DispatchDecision(locked, n_avg=nav,
-                                    why="adaptive:locked")
+            return DispatchDecision(
+                locked, n_avg=nav, why="adaptive:locked",
+                venue=site.locked_venue if self.kernel_path else "")
         st.dispatch_misses += 1
-        return DispatchDecision(site.probe_path(), n_avg=nav,
-                                why="adaptive:probe", timed=True)
+        venue = site.probe_venue(3 if racing else 2)
+        return DispatchDecision(venue != "host", n_avg=nav,
+                                why="adaptive:probe", timed=True,
+                                venue=venue if self.kernel_path else "")
 
     def _stage_cached(self, call: CallContext,
                       st: RoutineStats) -> Optional[DispatchDecision]:
@@ -1097,7 +1174,13 @@ class OffloadRuntime:
         n_avail = self.health.usable_count()
         if (decision.offload and call.shard is not None
                 and n_avail > 1 and self.policy.shardable):
-            decision.plan = call.shard(n_avail)
+            if self.kernel_path and decision.venue == "pallas":
+                # sharded tiles follow the venue selection too: the tile
+                # kernels run the pallas path, under the same _guarded
+                # fault units as any tile
+                decision.plan = call.shard(n_avail, venue="pallas")
+            else:
+                decision.plan = call.shard(n_avail)
         return decision
 
     # ------------------------------------------------------------------ #
@@ -1113,11 +1196,12 @@ class OffloadRuntime:
             if decision.plan is not None:
                 return self._sharded_call(st, decision.plan,
                                           site=call.site)
-            return self._offload_whole(call, st), ()
+            return self._offload_whole(call, decision, st), ()
         except flt.OffloadError as exc:
             return self._fallback_host(call, decision, st, exc), ()
 
     def _offload_whole(self, call: CallContext,
+                       decision: DispatchDecision,
                        st: RoutineStats) -> jax.Array:
         """Single-device offload: the policy places every operand.
         Each operand movement and the kernel launch are separate
@@ -1155,7 +1239,13 @@ class OffloadRuntime:
         # harmonize outside the kernel guard: a retried kernel must not
         # re-bill transient streaming bytes
         args = self._harmonize(placed, st)
-        out = self._guarded("kernel", lambda: call.compute(*args),
+        # venue selection: the pallas-venue arithmetic replaces the
+        # generic jitted compute inside the *same* guarded kernel unit,
+        # so injection, retries and breaker trips cover it identically
+        compute = (call.kernel_compute
+                   if decision.venue == "pallas"
+                   and call.kernel_compute is not None else call.compute)
+        out = self._guarded("kernel", lambda: compute(*args),
                             device=dev, nbytes=0, st=st)
         out_p = self._guarded(
             "transfer", lambda: self.policy.place_output(self, out),
@@ -1171,20 +1261,26 @@ class OffloadRuntime:
                 out: jax.Array, devices: Tuple[int, ...], dt: float,
                 st: RoutineStats) -> None:
         st.seconds += dt
+        if decision.offload and decision.venue == "pallas":
+            st.kernel_calls += 1
+            st.kernel_seconds += dt
         site = call.site
         if site is not None:
             if decision.timed:
-                site.observe_probe(decision.offload, dt)
+                site.observe_probe(decision.offload, dt,
+                                   venue=decision.venue)
             site.observe(decision.n_avg,
                          _flops_of(call.routine, call.m, call.n, call.k,
                                    call.batch),
-                         dt, decision.offload)
+                         dt, decision.offload, venue=decision.venue)
         self._record_trace(call.routine, call.m, call.n, call.k,
                            call.operands, out, call.batch, devices,
-                           site_id=call.site_id, seconds=dt)
+                           site_id=call.site_id, seconds=dt,
+                           venue=decision.venue)
         if self.debug >= 2:
             where = "host" if not decision.offload else (
-                f"shard[{len(devices)} tiles]" if devices else "offload")
+                f"shard[{len(devices)} tiles]" if devices else
+                (decision.venue or "offload"))
             print(f"[scilib] {call.routine} m={call.m} n={call.n} "
                   f"k={call.k} navg={decision.n_avg:.0f} {where} "
                   f"({decision.why})")
@@ -1226,7 +1322,7 @@ class OffloadRuntime:
 
     def _record_trace(self, routine, m, n, k, operands, out, batch,
                       devices=(), site_id: str = "",
-                      seconds: float = 0.0) -> None:
+                      seconds: float = 0.0, venue: str = "") -> None:
         if self.trace is None:
             return
         ops = []
@@ -1250,7 +1346,7 @@ class OffloadRuntime:
             routine=routine, m=m, n=n, k=k, batch=batch,
             operands=tuple(ops), devices=tuple(devices),
             callsite_id=site_id, seconds=seconds,
-            out_buf=out_buf, out_nbytes=out_nbytes))
+            out_buf=out_buf, out_nbytes=out_nbytes, venue=venue))
 
 
 # --------------------------------------------------------------------- #

@@ -61,6 +61,10 @@ class BlasCall:
     seconds: float = 0.0             # measured per-call wall time
     out_buf: int = -1                # fresh-output buffer id (or -1)
     out_nbytes: int = 0              # its size (0 when out_buf is -1)
+    # execution venue ("host"/"xla"/"pallas"); recorded only by
+    # kernel-path runs (OffloadConfig.kernel_path) so default-off trace
+    # dumps stay byte-identical to pre-venue traces
+    venue: str = ""
 
     # ------------------------------------------------------------------ #
     @property
@@ -107,7 +111,10 @@ class BlasCall:
         return float((m * n * max(k, 1)) ** (1.0 / 3.0))
 
     def to_json(self) -> Dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if not self.venue:           # keep default-off dumps byte-stable
+            del d["venue"]
+        return d
 
 
 class Trace:

@@ -1,17 +1,49 @@
-"""Pallas API compatibility across JAX versions.
+"""Pallas availability + API compatibility for the pinned JAX.
 
-``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
-newer JAX releases; the kernels must compile against both (the dev
-container pins an older jaxlib than the TPU fleet runs).
+Two jobs:
+
+* Export ``pl``/``pltpu`` (or ``None``) so the kernel modules import
+  cleanly on containers whose jaxlib ships without Pallas — requesting a
+  Pallas kernel there degrades to the ``kernels/ref.py`` XLA path with a
+  single warning instead of an import-time crash.
+* Paper over the one API rename the kernels touch: the pinned JAX
+  (0.4.x) names the TPU compiler params ``pltpu.TPUCompilerParams``;
+  newer releases renamed it to ``pltpu.CompilerParams``. The pinned name
+  is tried first; everything else the kernels use is stable across both.
 """
 from __future__ import annotations
 
-from jax.experimental.pallas import tpu as pltpu
+import warnings
 
-CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    getattr(pltpu, "TPUCompilerParams")
+try:
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    HAVE_PALLAS = True
+except ImportError:           # pragma: no cover - jaxlib without Pallas
+    pl = None
+    pltpu = None
+    HAVE_PALLAS = False
+
+CompilerParams = (getattr(pltpu, "TPUCompilerParams", None)
+                  or getattr(pltpu, "CompilerParams", None)
+                  ) if HAVE_PALLAS else None
+
+_warned = False
+
+
+def warn_missing() -> None:
+    """One warning per process when Pallas was requested but is absent."""
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "Pallas is unavailable in this jaxlib; kernels degrade to the "
+            "XLA reference path (repro.kernels.ref)", RuntimeWarning,
+            stacklevel=3)
 
 
 def tpu_compiler_params(**kwargs):
     """Build TPU compiler params under whichever name this JAX exposes."""
+    if CompilerParams is None:
+        raise RuntimeError("Pallas is unavailable in this jaxlib")
     return CompilerParams(**kwargs)

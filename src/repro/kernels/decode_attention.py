@@ -19,10 +19,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels.compat import pl, pltpu
 
 NEG_INF = -1e30
 

@@ -18,10 +18,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels.compat import pl, pltpu
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):

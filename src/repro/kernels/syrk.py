@@ -13,10 +13,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels.compat import pl, pltpu
 
 
 def _syrk_kernel(a_ref, at_ref, o_ref, acc_ref, *, k_steps: int,

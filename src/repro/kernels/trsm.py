@@ -22,8 +22,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
+from repro.kernels.compat import pl
 from repro.kernels.gemm import gemm
 
 BASE = 128

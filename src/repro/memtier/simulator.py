@@ -99,6 +99,12 @@ class PolicyReport:
     #: tenant this replay is scoped to ("" = whole trace); session-tagged
     #: traces from a shared-pool run reconcile per-tenant this way
     session: str = ""
+    # kernel-path replay (OffloadConfig.kernel_path): offloaded calls the
+    # recording run executed on the pallas venue, and the per-routine
+    # pallas/xla speed ratios calibrated from its probe timings.  Both
+    # stay at their defaults replaying a venue-free (default-off) trace.
+    kernel_calls: int = 0
+    venue_ratio: Dict[str, float] = dataclasses.field(default_factory=dict)
     total_s: float = 0.0
     blas_device_s: float = 0.0
     blas_host_s: float = 0.0
@@ -152,7 +158,8 @@ class MemTierSimulator:
                  n_devices: int = 1,
                  device_bytes: Optional[int] = None,
                  evict: str = "lru",
-                 session: str = ""):
+                 session: str = "",
+                 kernel_path: bool = False):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
         self.spec = spec
@@ -165,6 +172,14 @@ class MemTierSimulator:
         self.n_devices = max(1, int(n_devices))
         self.device_bytes = device_bytes if device_bytes else None
         self.session = session
+        # kernel-path replay: calls the live run tagged venue="pallas"
+        # execute under a per-routine speed ratio calibrated from the
+        # trace's own probe timings (see _calibrate_venues).  Off by
+        # default — a kernel-off replay multiplies nothing and stays
+        # float-identical to the pre-venue model.
+        self.kernel_path = bool(kernel_path)
+        self._kmult = 1.0
+        self._venue_ratio: Dict[str, float] = {}
         self.report = PolicyReport(policy=policy, spec=spec.name,
                                    threshold=threshold,
                                    n_devices=self.n_devices,
@@ -202,7 +217,8 @@ class MemTierSimulator:
                    threshold=config.resolved_threshold(),
                    n_devices=config.resolved_devices(),
                    device_bytes=config.device_bytes,
-                   evict=config.evict, **kw)
+                   evict=config.evict,
+                   kernel_path=config.kernel_path, **kw)
 
     def _evict_to_host(self, dev: int):
         """Cap pressure on one device store: bounce the victim's pages
@@ -285,6 +301,8 @@ class MemTierSimulator:
         eff = spec.eff("gpu", call.routine)
         t = max(call.flops / (spec.gpu_flops * eff) * comp_pen,
                 t_mem * mem_pen)
+        if self._kmult != 1.0:          # pallas-venue calibrated ratio
+            t *= self._kmult
         t += spec.kernel_launch_s
         self.report.blas_device_s += t
         self.report.offloaded_calls += 1
@@ -308,8 +326,10 @@ class MemTierSimulator:
         # kernel runs on cudaMalloc staging: fully local, no malloc penalty
         t_mem = call.bytes_touched / spec.gpu_local_bw
         eff = spec.eff("gpu", call.routine)
-        t_k = max(call.flops / (spec.gpu_flops * eff),
-                  t_mem) + spec.kernel_launch_s
+        t_k = max(call.flops / (spec.gpu_flops * eff), t_mem)
+        if self._kmult != 1.0:          # pallas-venue calibrated ratio
+            t_k *= self._kmult
+        t_k += spec.kernel_launch_s
         self.report.blas_device_s += t_k
         self.report.offloaded_calls += 1
         self.report.movement_s += t_move
@@ -390,7 +410,10 @@ class MemTierSimulator:
             mem_pen = comp_pen = 1.0
         eff = spec.eff("gpu", call.routine)
         per_tile = max(call.flops / tiles / (spec.gpu_flops * eff) * comp_pen,
-                       t_mem * mem_pen) + spec.kernel_launch_s
+                       t_mem * mem_pen)
+        if self._kmult != 1.0:          # pallas-venue calibrated ratio
+            per_tile *= self._kmult
+        per_tile += spec.kernel_launch_s
         t_k = per_tile * (-(-tiles // n_dev))   # tile rounds per device
         self.report.blas_device_s += t_k
         self.report.offloaded_calls += 1
@@ -485,6 +508,33 @@ class MemTierSimulator:
                 return
 
     # ------------------------------------------------------------------ #
+    def _calibrate_venues(self, trace: Trace) -> Dict[str, float]:
+        """Per-routine pallas/xla speed ratio from the trace's own
+        measured per-call wall times (the adaptive probe timings a
+        kernel-path run records in ``BlasCall.seconds``/``venue``).
+
+        Best-sample per venue, like ``CallSiteProfile.lock`` — the first
+        call on each venue pays jit compilation and the minimum is
+        robust to it.  A routine seen on only one venue gets no ratio
+        (the generic model applies, ratio 1.0); ratios clamp to
+        [0.1, 10] so one mistimed probe cannot distort the replay."""
+        best: Dict[tuple, float] = {}
+        for call in trace:
+            if call.venue in ("xla", "pallas") and call.seconds > 0:
+                k = (call.routine, call.venue)
+                if call.seconds < best.get(k, float("inf")):
+                    best[k] = call.seconds
+        ratios: Dict[str, float] = {}
+        for (routine, venue) in best:
+            if venue != "pallas":
+                continue
+            xla = best.get((routine, "xla"))
+            if xla:
+                r = best[(routine, "pallas")] / xla
+                ratios[routine] = min(10.0, max(0.1, r))
+        return ratios
+
+    # ------------------------------------------------------------------ #
     def run(self, trace: Trace) -> PolicyReport:
         # fault replay: a call the live run fell back to host (retry
         # exhaustion or total quarantine) is host-bound here too — the
@@ -493,6 +543,9 @@ class MemTierSimulator:
                        if e.kind == "fallback"
                        and (not self.session
                             or e.session == self.session)}
+        if self.kernel_path:
+            self._venue_ratio = self._calibrate_venues(trace)
+            self.report.venue_ratio = dict(self._venue_ratio)
         for i, call in enumerate(trace):
             bufs = [self._buffer(trace, bid)
                     for _, bid, _, _, _ in call.operands]
@@ -502,6 +555,15 @@ class MemTierSimulator:
                        and not call.routine.endswith("getf2")
                        and call.n_avg > self.threshold
                        and i not in forced_host)
+            # venue replay: a call the live run executed on the pallas
+            # venue runs under its routine's calibrated ratio here, and
+            # counts — so a live kernel-path run replays to the same
+            # kernel_calls the runtime report shows
+            if self.kernel_path and offload and call.venue == "pallas":
+                self._kmult = self._venue_ratio.get(call.routine, 1.0)
+                self.report.kernel_calls += 1
+            else:
+                self._kmult = 1.0
             if not offload:
                 t = self._host_call(call, bufs)
             elif self.policy == "memcopy":
@@ -562,13 +624,15 @@ def replay_trace(trace: Trace, *, spec: HardwareSpec = GH200,
                  evict_lru: bool = False,
                  n_devices: int = 1,
                  device_bytes: Optional[int] = None,
-                 evict: str = "lru") -> Dict[str, PolicyReport]:
+                 evict: str = "lru",
+                 kernel_path: bool = False) -> Dict[str, PolicyReport]:
     """Run one trace under several policies (the paper's Tables 3/5)."""
     out = {}
     for p in policies:
         sim = MemTierSimulator(spec, policy=p, threshold=threshold,
                                aligned_alloc=aligned_alloc,
                                evict_lru=evict_lru, n_devices=n_devices,
-                               device_bytes=device_bytes, evict=evict)
+                               device_bytes=device_bytes, evict=evict,
+                               kernel_path=kernel_path)
         out[p] = sim.run(trace)
     return out

@@ -52,8 +52,9 @@ DEFAULT_DEVICE_COUNTS = (1, 2, 4)
 DEFAULT_EVICTS = ("lru", "lfu", "refetch")
 
 #: the comparison point: the paper's conservative default configuration
-#: (policy, threshold, n_devices, device_bytes cap, eviction policy).
-BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1, None, "lru")
+#: (policy, threshold, n_devices, device_bytes cap, eviction policy,
+#: kernel path).
+BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1, None, "lru", False)
 
 
 def _fmt_threshold(t: float) -> str:
@@ -70,7 +71,8 @@ def _fmt_cap(cap: Optional[int]) -> str:
 
 @dataclasses.dataclass
 class GridPoint:
-    """One simulated (policy, threshold, n_devices, cap, evict) config."""
+    """One simulated (policy, threshold, n_devices, cap, evict, kernel)
+    config."""
 
     policy: str
     threshold: float
@@ -78,11 +80,12 @@ class GridPoint:
     report: PolicyReport
     device_bytes: Optional[int] = None
     evict: str = "lru"
+    kernel: bool = False    # SCILIB_KERNELS: the pallas dispatch venue
 
     @property
     def config(self) -> Tuple:
         return (self.policy, self.threshold, self.n_devices,
-                self.device_bytes, self.evict)
+                self.device_bytes, self.evict, self.kernel)
 
     @property
     def total_s(self) -> float:
@@ -102,6 +105,8 @@ class GridPoint:
             settings["SCILIB_DEVICE_BYTES"] = str(self.device_bytes)
         if self.evict != "lru":
             settings["SCILIB_EVICT"] = self.evict
+        if self.kernel:
+            settings["SCILIB_KERNELS"] = "1"
         return settings
 
     def to_config(self):
@@ -114,7 +119,8 @@ class GridPoint:
         return OffloadConfig(
             policy=self.policy, threshold=self.threshold,
             devices=self.n_devices,
-            device_bytes=self.device_bytes, evict=self.evict)
+            device_bytes=self.device_bytes, evict=self.evict,
+            kernel_path=self.kernel)
 
 
 @dataclasses.dataclass
@@ -141,9 +147,9 @@ class AutotuneResult:
         when no capped point stays near (or none was swept)."""
         twin = [p for p in self.points
                 if p.device_bytes is not None
-                and (p.policy, p.threshold, p.n_devices) ==
+                and (p.policy, p.threshold, p.n_devices, p.kernel) ==
                     (self.best.policy, self.best.threshold,
-                     self.best.n_devices)
+                     self.best.n_devices, self.best.kernel)
                 and p.total_s <= self.best.total_s * 1.02]
         if not twin:
             return None
@@ -153,12 +159,12 @@ class AutotuneResult:
 def _simulate(trace: Trace, spec: HardwareSpec, policy: str,
               threshold: float, n_devices: int,
               device_bytes: Optional[int] = None,
-              evict: str = "lru") -> GridPoint:
+              evict: str = "lru", kernel: bool = False) -> GridPoint:
     sim = MemTierSimulator(spec, policy=policy, threshold=threshold,
                            n_devices=n_devices, device_bytes=device_bytes,
-                           evict=evict)
+                           evict=evict, kernel_path=kernel)
     return GridPoint(policy, threshold, n_devices, sim.run(trace),
-                     device_bytes, evict)
+                     device_bytes, evict, kernel)
 
 
 def _cap_grid(device_bytes, baseline: GridPoint) -> List[Optional[int]]:
@@ -184,6 +190,7 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
              device_counts: Sequence[int] = DEFAULT_DEVICE_COUNTS,
              device_bytes="auto",
              evicts: Sequence[str] = DEFAULT_EVICTS,
+             kernels: Optional[Sequence[bool]] = None,
              ) -> AutotuneResult:
     """Sweep the grid and pick the fastest point (moved bytes break ties).
 
@@ -192,9 +199,19 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
     swept at one device only.  Likewise the device-bytes cap and the
     eviction policy model the runtime's DFU residency store, so only
     ``dfu`` sweeps them (and eviction policies only matter under a cap).
+
+    The kernel dimension (``SCILIB_KERNELS``) defaults to auto: it is
+    swept only when the trace carries venue tags — a venue-free trace
+    has no probe timings to calibrate the pallas cost model from, so
+    both kernel settings would replay identically and the sweep would
+    only double the grid.  Kernel-off points precede their kernel-on
+    twins, so an exact tie recommends the simpler configuration.
     """
     if thresholds is None:
         thresholds = thr.threshold_grid(c.n_avg for c in trace)
+    if kernels is None:
+        kernels = ((False, True) if any(c.venue for c in trace)
+                   else (False,))
     baseline = _simulate(trace, spec, *BASELINE)
     caps = _cap_grid(device_bytes, baseline)
     points: List[GridPoint] = [baseline]
@@ -205,10 +222,12 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
                     continue
                 for cap in (caps if policy == "dfu" else [None]):
                     for ev in (evicts if cap is not None else ["lru"]):
-                        cfg = (policy, float(t), nd, cap, ev)
-                        if cfg == BASELINE:
-                            continue        # already simulated
-                        points.append(_simulate(trace, spec, *cfg))
+                        for kern in kernels:
+                            cfg = (policy, float(t), nd, cap, ev,
+                                   bool(kern))
+                            if cfg == BASELINE:
+                                continue    # already simulated
+                            points.append(_simulate(trace, spec, *cfg))
     # fastest first; among points within 2% of it, least movement wins —
     # a config that moves gigabytes for a sub-noise predicted gain is
     # not a recommendation.  Uncapped points precede capped twins in the
@@ -225,7 +244,8 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
 def _grid_row(p: GridPoint, mark: str = "") -> str:
     return (f"{p.policy:<9}{_fmt_threshold(p.threshold):>10}"
             f"{p.n_devices:>6}{_fmt_cap(p.device_bytes):>8}"
-            f"{p.evict:>9}{p.total_s:>10.4f}"
+            f"{p.evict:>9}{('on' if p.kernel else '-'):>6}"
+            f"{p.total_s:>10.4f}"
             f"{p.moved_bytes / 1e9:>10.3f}"
             f"{p.report.offloaded_calls:>9}"
             f"{p.report.evictions:>7}{mark}")
@@ -233,7 +253,7 @@ def _grid_row(p: GridPoint, mark: str = "") -> str:
 
 def format_grid(result: AutotuneResult, top: int = 12) -> str:
     lines = [f"{'policy':<9}{'threshold':>10}{'ndev':>6}{'cap':>8}"
-             f"{'evict':>9}{'pred_s':>10}"
+             f"{'evict':>9}{'kern':>6}{'pred_s':>10}"
              f"{'moved_GB':>10}{'offload':>9}{'evict#':>7}"]
     ranked = sorted(result.points,
                     key=lambda p: (p.total_s, p.moved_bytes))[:top]
@@ -342,6 +362,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--evict", default=",".join(DEFAULT_EVICTS),
                     help="comma list of eviction policies to sweep at "
                          "each capped point (lru, lfu, refetch)")
+    ap.add_argument("--kernels", default="auto",
+                    choices=("auto", "off", "on", "both"),
+                    help="sweep the SCILIB_KERNELS (pallas venue) "
+                         "dimension; 'auto' sweeps it only when the "
+                         "trace carries venue tags to calibrate from")
     ap.add_argument("--top", type=int, default=12,
                     help="grid rows to print")
     ap.add_argument("--emit-config", metavar="PATH", default="",
@@ -355,12 +380,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     thresholds = _parse_floats(args.thresholds) or None
     device_bytes = (args.device_bytes if args.device_bytes == "auto"
                     else _parse_ints(args.device_bytes))
+    kernels = {"auto": None, "off": (False,), "on": (True,),
+               "both": (False, True)}[args.kernels]
     result = autotune(trace, spec=SPECS[args.spec],
                       policies=tuple(args.policies.split(",")),
                       thresholds=thresholds,
                       device_counts=_parse_ints(args.devices),
                       device_bytes=device_bytes,
-                      evicts=tuple(args.evict.split(",")))
+                      evicts=tuple(args.evict.split(",")),
+                      kernels=kernels)
     n_sites = len({c.callsite_id for c in trace if c.callsite_id})
     print(f"autotune: {len(result.points)}-point grid, spec={args.spec}, "
           f"{len(trace)} calls, {n_sites} sites, "

@@ -116,6 +116,10 @@ def test_adaptive_probe_schedule_deterministic(monkeypatch):
     monkeypatch.setenv("SCILIB_ADAPTIVE", "1")
     monkeypatch.setenv("SCILIB_ADAPTIVE_WARMUP", "4")
     monkeypatch.setenv("SCILIB_SYNC", "1")
+    # this test documents the classic 2-venue schedule; pin the kernel
+    # path off so the CI kernel-path job (SCILIB_KERNELS=1) can't turn
+    # the warmup into the 3-venue rotation
+    monkeypatch.setenv("SCILIB_KERNELS", "0")
     counts = []
     for _ in range(2):
         with core.offload("dfu", threshold=100) as rt:

@@ -67,6 +67,8 @@ MATRIX = {
     "breaker_cooldown_ms": ("250", 250.0),
     "pool_bytes": ("4194304", 4194304),
     "pool_quota": ("1048576", 1048576),
+    "kernel_path": ("1", True),
+    "kernel_block": ("256", 256),
 }
 
 

@@ -1,0 +1,340 @@
+"""The `pallas` dispatch venue end to end: default-off bit-identity
+(golden counters, venue-free trace dumps), forced kernel-path venue
+tagging, the 3-venue adaptive probe/lock, sharded tiles and fault
+injection through the venue, simulator replay of kernel_calls, and the
+autotune grid's kernel dimension."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import blas, callsite  # noqa: E402
+from repro.core import runtime as rtm  # noqa: E402
+from repro.core.config import OffloadConfig  # noqa: E402
+from repro.core.policy import host_array  # noqa: E402
+from repro.core.trace import Trace  # noqa: E402
+from repro.memtier.simulator import replay_trace  # noqa: E402
+from repro.tools import autotune as at  # noqa: E402
+
+RNG = np.random.default_rng(3)
+
+
+def _f32(shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def _tri(n):
+    a = np.tril(RNG.standard_normal((n, n)).astype(np.float32) / n)
+    np.fill_diagonal(a, 2.0)
+    return a
+
+
+def _kcfg(**kw):
+    kw.setdefault("policy", "dfu")
+    kw.setdefault("threshold", 1.0)
+    kw.setdefault("kernel_path", True)
+    kw.setdefault("sync", True)
+    return OffloadConfig(**kw)
+
+
+def _site(x, y):
+    """One stable call site for the adaptive tests."""
+    return blas.gemm(x, y)
+
+
+# --------------------------------------------------------------------- #
+# default-off bit-identity                                               #
+# --------------------------------------------------------------------- #
+def test_kernels_off_golden_counters(monkeypatch):
+    """SCILIB_KERNELS=0 (the default) reproduces the PR 6 golden
+    counters bit-for-bit — the venue stage must be a true no-op on the
+    capped eviction workload."""
+    monkeypatch.setenv("SCILIB_KERNELS", "0")
+    rng = np.random.default_rng(42)
+    rt = rtm.install("dfu", threshold=10, device_bytes=2 * 128 * 128 * 4,
+                     record_trace=False)
+    try:
+        xs = [host_array(rng.standard_normal((128, 128))
+                         .astype("float32")) for _ in range(5)]
+        for _ in range(3):
+            for x in xs:
+                blas.gemm(x, x)
+        rt.sync()
+        assert rt.stats.evictions == 28
+        assert rt.stats.evicted_bytes == 1835008
+        st = rt.stats.per_routine["sgemm"]
+        assert (st.offloaded, st.on_host) == (15, 0)
+        assert (st.cache_hits, st.cache_misses) == (15, 15)
+        assert st.kernel_calls == 0
+        assert "pallas" not in rt.stats.report()
+    finally:
+        rtm.uninstall()
+
+
+def test_kernels_off_trace_dump_is_venue_free(tmp_path, monkeypatch):
+    """Default-off trace dumps carry no venue keys at all — byte-stable
+    against pre-venue readers (and writers)."""
+    monkeypatch.setenv("SCILIB_KERNELS", "0")
+    path = tmp_path / "t.json"
+    rt = rtm.install(config=OffloadConfig(policy="dfu", threshold=1.0,
+                                          sync=True))
+    try:
+        a = host_array(_f32((64, 64)))
+        blas.gemm(a, a)
+        blas.syrk(a)
+        rt.sync()
+        assert all(c.venue == "" for c in rt.trace.calls)
+        rt.trace.dump(str(path))
+    finally:
+        rtm.uninstall()
+    for call in json.loads(path.read_text())["calls"]:
+        assert "venue" not in call
+    # and the round-trip restores the empty-venue default
+    assert all(c.venue == "" for c in Trace.load(str(path)).calls)
+
+
+# --------------------------------------------------------------------- #
+# forced kernel path: venue tags, counters, numerics                     #
+# --------------------------------------------------------------------- #
+def test_venue_tags_counters_and_replay_match():
+    """A kernel-path run tags every offloaded call with its venue, the
+    per-routine kernel counters agree, and the simulator replays the
+    same kernel_calls from the recorded trace (live == replay)."""
+    rt = rtm.install(config=_kcfg())
+    try:
+        a = host_array(_f32((96, 96)))
+        t = host_array(_tri(96))
+        for _ in range(4):
+            blas.gemm(a, a)
+        blas.syrk(a)
+        blas.trsm(t, a)
+        rt.sync()
+        trace = rt.trace
+        assert [c.venue for c in trace.calls] == ["pallas"] * 6
+        live = sum(r.kernel_calls for r in rt.stats.per_routine.values())
+        assert live == 6
+        assert "pallas venue: 6 calls" in rt.stats.report()
+    finally:
+        rtm.uninstall()
+    on = replay_trace(trace, policies=("dfu",), threshold=1.0,
+                      kernel_path=True)["dfu"]
+    assert on.kernel_calls == live
+    off = replay_trace(trace, policies=("dfu",), threshold=1.0)["dfu"]
+    assert off.kernel_calls == 0
+
+
+def test_capability_registry_routes_venues():
+    """Routines without a kernel fall back to the generic XLA venue —
+    per dtype (complex syrk) and per base (trmm) — and still compute
+    the right answer."""
+    rt = rtm.install(config=_kcfg())
+    try:
+        a = _f32((64, 48))
+        ca = host_array((a + 1j * _f32((64, 48))).astype(np.complex64))
+        out = blas.gemm(ca, ca, trans_b="C")
+        rt.sync()
+        assert rt.trace.calls[-1].venue == "pallas"  # cgemm: 4M kernel
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ca) @ np.asarray(ca).conj().T,
+            rtol=1e-3, atol=1e-3)
+        blas.syrk(ca)                                # csyrk: no kernel
+        rt.sync()
+        assert rt.trace.calls[-1].venue == "xla"
+        t = host_array(_tri(64))
+        b = host_array(_f32((64, 32)))
+        blas.trmm(t, b)                              # trmm: no kernel
+        rt.sync()
+        assert rt.trace.calls[-1].venue == "xla"
+        blas.trsm(t, b)                              # trsm: kernel
+        rt.sync()
+        assert rt.trace.calls[-1].venue == "pallas"
+    finally:
+        rtm.uninstall()
+
+
+def test_generic_epilogue_numerics_on_pallas_venue():
+    """alpha/beta/C/transpose epilogues through the kernel venue match
+    the BLAS definition (the lean fast path only covers the bare
+    alpha=1, beta=0, no-C case)."""
+    rt = rtm.install(config=_kcfg())
+    try:
+        a = host_array(_f32((48, 32)))
+        b = host_array(_f32((32, 40)))
+        c = host_array(_f32((48, 40)))
+        out = blas.gemm(a, b, c, alpha=0.5, beta=2.0)
+        want = 0.5 * (np.asarray(a) @ np.asarray(b)) + 2.0 * np.asarray(c)
+        np.testing.assert_allclose(np.asarray(out), want,
+                                   rtol=1e-4, atol=1e-4)
+        out2 = blas.gemm(a, a, alpha=3.0, trans_b="T")
+        np.testing.assert_allclose(
+            np.asarray(out2), 3.0 * (np.asarray(a) @ np.asarray(a).T),
+            rtol=1e-4, atol=1e-4)
+        out3 = blas.syrk(a, alpha=2.0, uplo="U")
+        np.testing.assert_allclose(
+            np.asarray(out3),
+            np.triu(2.0 * (np.asarray(a) @ np.asarray(a).T)),
+            rtol=1e-4, atol=1e-4)
+        rt.sync()
+        assert all(cl.venue == "pallas" for cl in rt.trace.calls)
+    finally:
+        rtm.uninstall()
+
+
+def test_sharded_tiles_route_through_pallas_venue():
+    """Multi-device tile plans execute their per-tile kernels on the
+    selected venue: same numerics, venue tag recorded, tiles spread
+    over the device tiers."""
+    rt = rtm.install(config=_kcfg(devices=4, tile_min=32))
+    try:
+        a = host_array(_f32((256, 256)))
+        b = host_array(_f32((256, 256)))
+        out = blas.gemm(a, b)
+        rt.sync()
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(a) @ np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+        call = rt.trace.calls[-1]
+        assert call.venue == "pallas"
+        assert len(set(call.devices)) > 1      # actually sharded
+    finally:
+        rtm.uninstall()
+
+
+def test_fault_injection_covers_kernel_venue():
+    """The `kernel` fault site wraps the venue's compute units too:
+    injected faults retry and the results stay correct."""
+    rt = rtm.install(config=_kcfg(faults="kernel:p=0.5,seed=7",
+                                  retries=3))
+    try:
+        a = host_array(_f32((64, 64)))
+        outs = [blas.gemm(a, a) for _ in range(8)]
+        rt.sync()
+        want = np.asarray(a) @ np.asarray(a)
+        for o in outs:
+            np.testing.assert_allclose(np.asarray(o), want,
+                                       rtol=1e-4, atol=1e-4)
+        assert rt.stats.faults > 0
+        assert rt.stats.retries > 0
+        assert sum(r.kernel_calls
+                   for r in rt.stats.per_routine.values()) > 0
+    finally:
+        rtm.uninstall()
+
+
+# --------------------------------------------------------------------- #
+# 3-venue adaptive warmup                                                #
+# --------------------------------------------------------------------- #
+def test_three_venue_probe_schedule_and_lock():
+    """With kernel_path on, the warmup round-robins host/xla/pallas
+    (equal samples each), records the probe venue in the trace, and
+    locks the best-sample venue with an explanatory why-string."""
+    rt = rtm.install(config=_kcfg(adaptive=True, adaptive_warmup=6,
+                                  threshold=100.0))
+    try:
+        a = host_array(_f32((64, 64)))
+        for _ in range(6):
+            _site(a, a)
+        (prof,) = list(rt.callsites)
+        assert (prof.host_timed, prof.device_timed,
+                prof.kernel_timed) == (2, 2, 2)
+        assert prof.locked is None             # warmup not over yet
+        assert [c.venue for c in rt.trace.calls] == \
+            ["host", "xla", "pallas"] * 2
+        _site(a, a)                            # 7th call locks
+        assert prof.locked is not None
+        assert prof.locked_venue in callsite.VENUES
+        assert "probes" in prof.locked_why
+        if prof.locked_venue == "pallas":
+            assert prof.decision_label() == "pallas*"
+            assert prof.locked is True
+    finally:
+        rtm.uninstall()
+
+
+def test_lock_prefers_pallas_on_best_sample():
+    """Unit rule: the kernel venue wins the lock iff its best probe
+    beats both classic venues; untimed venues never win."""
+    p = callsite.CallSiteProfile("x")
+    p.observe_probe(False, 2e-3)
+    p.observe_probe(True, 1e-3, venue="xla")
+    p.observe_probe(True, 5e-4, venue="pallas")
+    assert p.lock() is True
+    assert p.locked_venue == "pallas"
+    assert p.decision_label() == "pallas*"
+    q = callsite.CallSiteProfile("y")
+    q.observe_probe(False, 1e-4)
+    q.observe_probe(True, 1e-3, venue="xla")
+    q.observe_probe(True, 5e-4, venue="pallas")
+    assert q.lock() is False
+    assert q.locked_venue == "host"
+    r = callsite.CallSiteProfile("z")          # 2-venue mode: no kernel
+    r.observe_probe(False, 2e-3)
+    r.observe_probe(True, 1e-3, venue="xla")
+    assert r.lock() is True
+    assert r.locked_venue == "xla"
+
+
+def test_two_venue_schedule_unchanged_without_kernel_path():
+    """probe_venue(2) reproduces the classic host/offload alternation —
+    the probe schedule the default pipeline has always used."""
+    p = callsite.CallSiteProfile("x")
+    seen = []
+    for _ in range(4):
+        v = p.probe_venue(2)
+        seen.append(v)
+        assert (v != "host") == p.probe_path()
+        p.observe_probe(v != "host", 1e-3,
+                        venue=v if v == "pallas" else "")
+    assert seen == ["host", "xla", "host", "xla"]
+
+
+# --------------------------------------------------------------------- #
+# autotune kernel dimension                                              #
+# --------------------------------------------------------------------- #
+def _venue_trace(tagged: bool) -> Trace:
+    t = Trace()
+    a = t.new_buffer(512 * 512 * 4, "A")
+    b = t.new_buffer(512 * 512 * 4, "B")
+    c = t.new_buffer(512 * 512 * 4, "C")
+    for _ in range(8):
+        t.gemm("s", 512, 512, 512, a, b, c)
+    if tagged:
+        t.calls = [dataclasses.replace(
+            call, venue="pallas" if i % 2 else "xla",
+            seconds=1e-3 if i % 2 else 2e-3)
+            for i, call in enumerate(t.calls)]
+    return t
+
+
+def test_autotune_sweeps_kernel_only_on_venue_traces():
+    """The kernel grid dimension is gated on venue tags: a venue-free
+    trace has no probe timings to calibrate from, so both settings
+    would replay identically and the sweep would only double the grid."""
+    res = at.autotune(_venue_trace(True), policies=("dfu",),
+                      device_counts=(1,))
+    assert any(p.kernel for p in res.points)
+    assert any(not p.kernel for p in res.points)
+    grid = at.format_grid(res)
+    assert "kern" in grid.splitlines()[0]
+    res_off = at.autotune(_venue_trace(False), policies=("dfu",),
+                          device_counts=(1,))
+    assert not any(p.kernel for p in res_off.points)
+
+
+def test_autotune_kernel_point_env_and_config():
+    """A kernel-on grid point deploys as SCILIB_KERNELS=1 and as
+    OffloadConfig.kernel_path=True — the tune->deploy loop carries the
+    venue choice."""
+    res = at.autotune(_venue_trace(True), policies=("dfu",),
+                      device_counts=(1,), kernels=(True,))
+    p = res.best
+    assert p.kernel
+    assert p.env().get("SCILIB_KERNELS") == "1"
+    assert p.to_config().kernel_path is True
+    # the calibrated pallas model (0.5x gemm time) must beat kernel-off
+    both = at.autotune(_venue_trace(True), policies=("dfu",),
+                       device_counts=(1,), kernels=(False, True))
+    assert both.best.kernel

@@ -135,6 +135,131 @@ def test_decode_attention_kernel(kvlen):
                                rtol=2e-4, atol=2e-4)
 
 
+# --------------------------------------------------------------------- #
+# the `pallas` venue entry points (kernels/ops.kernel_*)                  #
+# --------------------------------------------------------------------- #
+def test_kernel_capability_matrix():
+    """The venue capability registry: which (base, dtype) pairs the
+    kernel path can execute.  Complex syrk/trsm need complex VPU ops
+    the kernels lack; complex gemm decomposes onto real gemms (4M)."""
+    from repro.kernels import ops
+    assert ops.KERNEL_BASES == ("gemm", "syrk", "trsm")
+    for base in ops.KERNEL_BASES:
+        assert ops.kernel_available(base, jnp.float32)
+        assert ops.kernel_available(base, jnp.float64)
+    assert ops.kernel_available("gemm", jnp.complex64)
+    assert not ops.kernel_available("syrk", jnp.complex64)
+    assert not ops.kernel_available("trsm", jnp.complex64)
+    for base in ("trmm", "symm", "herk", "gemv"):
+        assert not ops.kernel_available(base, jnp.float32)
+
+
+@pytest.fixture
+def interpreted_kernels(monkeypatch):
+    """Force ops.kernel_* onto the interpreted Pallas kernels — the same
+    code the compiled venue runs on the TPU target, minus the MXU."""
+    import functools
+
+    from repro.kernels import ops
+    monkeypatch.setattr(ops, "_kernel_compiled", lambda: True)
+    monkeypatch.setattr(ops, "pallas_gemm",
+                        functools.partial(pallas_gemm, interpret=True))
+    monkeypatch.setattr(ops, "pallas_syrk",
+                        functools.partial(pallas_syrk, interpret=True))
+    monkeypatch.setattr(ops, "pallas_trsm",
+                        functools.partial(pallas_trsm, interpret=True))
+    return ops
+
+
+@pytest.mark.parametrize("m,k,n", [(48, 32, 40), (1, 32, 16),
+                                   (16, 0, 8), (5, 7, 3)])
+@pytest.mark.parametrize("dtype", ["float32", "complex64"])
+def test_kernel_matmul_parity(interpreted_kernels, dtype, m, k, n):
+    """kernel_matmul == ref == XLA across dtypes and degenerate shapes
+    (k=0 must skip the kernel — its K grid axis would launch nothing)."""
+    if dtype == "complex64":
+        a = (RNG.standard_normal((m, k))
+             + 1j * RNG.standard_normal((m, k))).astype(np.complex64)
+        b = (RNG.standard_normal((k, n))
+             + 1j * RNG.standard_normal((k, n))).astype(np.complex64)
+    else:
+        a = RNG.standard_normal((m, k)).astype(dtype)
+        b = RNG.standard_normal((k, n)).astype(dtype)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    got = interpreted_kernels.kernel_matmul(aj, bj)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(aj, bj)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=2e-4, atol=2e-4)
+    assert got.dtype == aj.dtype
+
+
+def test_kernel_matmul_f64_stays_on_xla(interpreted_kernels):
+    """No f64 MXU path: the venue's f64 gemm is the XLA reference."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        a = jnp.asarray(RNG.standard_normal((40, 24)))
+        b = jnp.asarray(RNG.standard_normal((24, 32)))
+        got = interpreted_kernels.kernel_matmul(a, b)
+        np.testing.assert_allclose(got, np.asarray(a) @ np.asarray(b),
+                                   rtol=1e-12, atol=1e-12)
+        assert got.dtype == jnp.float64
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("uplo", ["L", "U"])
+@pytest.mark.parametrize("trans", ["N", "T"])
+def test_kernel_syrk_parity(interpreted_kernels, uplo, trans):
+    shape = (48, 24) if trans == "N" else (24, 48)
+    a = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    got = interpreted_kernels.kernel_syrk(a, uplo=uplo, trans=trans)
+    np.testing.assert_allclose(got, ref.syrk(a, uplo=uplo, trans=trans),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("side,uplo,trans,diag",
+                         [("L", "L", "N", "N"), ("R", "U", "T", "U")])
+def test_kernel_trsm_parity(interpreted_kernels, side, uplo, trans, diag):
+    m, n = 48, 24
+    a = _tri(m if side == "L" else n, uplo)
+    b = RNG.standard_normal((m, n)).astype(np.float32)
+    got = interpreted_kernels.kernel_trsm(
+        jnp.asarray(a), jnp.asarray(b), side=side, uplo=uplo,
+        trans=trans, diag=diag)
+    want = ref.trsm(jnp.asarray(a), jnp.asarray(b), side=side, uplo=uplo,
+                    trans=trans, diag=diag)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_kernel_complex_syrk_trsm_fall_back_to_ref(interpreted_kernels):
+    """The dtypes the capability registry rejects still compute right —
+    kernel_syrk/kernel_trsm degrade to ref rather than fail."""
+    a = jnp.asarray((RNG.standard_normal((24, 16))
+                     + 1j * RNG.standard_normal((24, 16)))
+                    .astype(np.complex64))
+    np.testing.assert_allclose(
+        np.asarray(interpreted_kernels.kernel_syrk(a)),
+        np.asarray(ref.syrk(a)), rtol=1e-4, atol=1e-4)
+    t = jnp.asarray(_tri(24, "L").astype(np.complex64))
+    b = jnp.asarray((RNG.standard_normal((24, 8))
+                     + 1j * RNG.standard_normal((24, 8)))
+                    .astype(np.complex64))
+    np.testing.assert_allclose(
+        np.asarray(interpreted_kernels.kernel_trsm(t, b)),
+        np.asarray(ref.trsm(t, b)), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_block_override(interpreted_kernels):
+    """SCILIB_KERNEL_BLOCK plumbing: an explicit block edge reaches the
+    kernel (and an off-size one still pads correctly)."""
+    a = jnp.asarray(RNG.standard_normal((40, 24)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((24, 32)), jnp.float32)
+    got = interpreted_kernels.kernel_matmul(a, b, block=16)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(a) @ np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_decode_attention_softcap_and_bf16():
     from repro.kernels.decode_attention import decode_attention
     q = jnp.asarray(RNG.standard_normal((1, 4, 1, 32)), jnp.bfloat16)
