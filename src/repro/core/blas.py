@@ -487,6 +487,141 @@ def _trsm_kvenue(a, b, alpha, *, side, uplo, trans, diag, block):
 
 
 # ----------------------------------------------------------------------- #
+# split-precision arithmetic (OffloadConfig.precision / SCILIB_PRECISION)  #
+#                                                                          #
+# Twins of the jitted kernels above that run the fp64 inner product as     #
+# split low-precision slice passes (repro.core.precision) instead of       #
+# native dgemm.  Like the pallas-venue closures, these are built only      #
+# when a split scheme is configured and the base/dtype supports one        #
+# (real 2-D fp64), so default-off runs never trace — or import — any of   #
+# it.  Each builder is memoized per (scheme, venue, block): the xla        #
+# venue runs the plain fp32 XLA matmul per pass, the pallas venue the     #
+# fp32 Pallas GEMM kernel (repro.kernels.split_gemm) — which is the       #
+# only fp64 path that venue has.                                           #
+# ----------------------------------------------------------------------- #
+def _split_mm(venue: str, block: int):
+    """The fp32 pass primitive for one venue (None = precision module
+    default, the XLA fp32 matmul)."""
+    if venue == "pallas":
+        from repro.kernels import split_gemm
+        return split_gemm.pass_mm(block)
+    return None
+
+
+def _split_gemm_kernel(scheme, venue, block):
+    """Jitted gemm-shaped split kernel, memoized per (scheme, venue,
+    block) — the split twin of :func:`_gemm_kernel`."""
+    def build():
+        from repro.core import precision as prc
+        mm = _split_mm(venue, block)
+
+        @functools.partial(jax.jit,
+                           static_argnames=("trans_a", "trans_b", "has_c"))
+        def kern(a, b, c, alpha, beta, *, trans_a, trans_b, has_c):
+            acc = prc.matmul(_op(a, trans_a), _op(b, trans_b), scheme,
+                             mm=mm)
+            out = alpha.astype(acc.dtype) * acc
+            if has_c:
+                out = out + beta.astype(acc.dtype) * c
+            return out.astype(a.dtype)
+        return kern
+    return _bound(("splitk", "gemm", scheme, venue, block), build)
+
+
+def _split_syrk_kernel(scheme, venue, block):
+    """Split twin of :func:`_syrk_kernel` (real fp64 only, so no conj)."""
+    def build():
+        from repro.core import precision as prc
+        mm = _split_mm(venue, block)
+
+        @functools.partial(jax.jit,
+                           static_argnames=("uplo", "trans", "has_c"))
+        def kern(a, c, alpha, beta, *, uplo, trans, has_c):
+            opa = _op(a, trans)
+            acc = prc.matmul(opa, jnp.swapaxes(opa, -1, -2), scheme,
+                             mm=mm)
+            upd = alpha.astype(acc.dtype) * acc
+            mask = _tri_mask(upd.shape[-1], uplo)
+            if has_c:
+                tri = jnp.where(mask, upd + beta.astype(acc.dtype) * c, c)
+            else:
+                tri = jnp.where(mask, upd, jnp.zeros_like(upd))
+            return tri.astype(a.dtype)
+        return kern
+    return _bound(("splitk", "syrk", scheme, venue, block), build)
+
+
+def _split_syrk_block_kernel(scheme, venue, block):
+    """Split twin of :func:`_syrk_block_kernel` (tiled syrk off-diagonal
+    blocks are gemm-shaped)."""
+    def build():
+        from repro.core import precision as prc
+        mm = _split_mm(venue, block)
+
+        @functools.partial(jax.jit, static_argnames=("trans", "has_c"))
+        def kern(ai, aj, c, alpha, beta, *, trans, has_c):
+            opi, opj = _op(ai, trans), _op(aj, trans)
+            acc = prc.matmul(opi, jnp.swapaxes(opj, -1, -2), scheme,
+                             mm=mm)
+            out = alpha.astype(acc.dtype) * acc
+            if has_c:
+                out = out + beta.astype(acc.dtype) * c
+            return out.astype(ai.dtype)
+        return kern
+    return _bound(("splitk", "syrkb", scheme, venue, block), build)
+
+
+def _split_trsm_kernel(scheme, venue, block):
+    """Split twin of :func:`_trsm_kernel`: fp32 solve + one refinement
+    step whose residual runs the split matmul.  The referenced triangle
+    is materialized first — the refinement's ``op(A) X`` product reads
+    the full array, unlike the solves."""
+    def build():
+        from repro.core import precision as prc
+        mm = _split_mm(venue, block)
+
+        @functools.partial(jax.jit,
+                           static_argnames=("side", "uplo", "trans",
+                                            "diag"))
+        def kern(a, b, alpha, *, side, uplo, trans, diag):
+            rhs = alpha.astype(b.dtype) * b
+            tri = _tri_ref(a, uplo, diag)
+            return prc.trsm(tri, rhs, scheme,
+                            left_side=(side == "L"),
+                            lower=(uplo == "L"),
+                            trans_a=(trans != "N"),
+                            unit_diag=(diag == "U"),
+                            mm=mm).astype(b.dtype)
+        return kern
+    return _bound(("splitk", "trsm", scheme, venue, block), build)
+
+
+def _split_bound(base, dt, bkey, sfactory, flat2d=True):
+    """The split-precision twin of ``_kernel_bound``: build the
+    ``(scheme, venue) -> compute`` factory the runtime's precision
+    stage consults, or None when no split scheme is configured or the
+    base/dtype/shape has no split formulation (real 2-D fp64 only —
+    batched calls stay native).  Memo keys get a ``"split"`` prefix
+    plus scheme/venue/block so split closures never collide with the
+    XLA or pallas-venue ones in ``_BOUND``."""
+    runtime = rt.active()
+    if runtime is None or not runtime.precision or not flat2d:
+        return None
+    from repro.core import precision as prc
+    if not prc.supported(base, dt):
+        return None
+    block = _kernel_block()
+
+    def split_compute(scheme, venue):
+        venue = venue or "xla"
+        skey = (("split", scheme, venue, block) + bkey
+                if bkey is not None else None)
+        return _bound(skey,
+                      functools.partial(sfactory, scheme, venue, block))
+    return split_compute
+
+
+# ----------------------------------------------------------------------- #
 # multi-device tile decomposition (BLASX-style 2-D sharding)               #
 #                                                                          #
 # When the runtime sees more than one device tier, super-threshold calls   #
@@ -573,7 +708,7 @@ def _colblock_coords(x: jax.Array, trans: str,
 
 
 def _shard_gemm(a, b, c, alpha, beta, trans_a, trans_b,
-                n_dev, venue="xla") -> Optional[TilePlan]:
+                n_dev, venue="xla", precision="") -> Optional[TilePlan]:
     m = a.shape[-2] if trans_a == "N" else a.shape[-1]
     n = b.shape[-1] if trans_b == "N" else b.shape[-2]
     g = _grid2d(n_dev, m, n)
@@ -584,9 +719,14 @@ def _shard_gemm(a, b, c, alpha, beta, trans_a, trans_b,
     dt = a.dtype
     has_c = c is not None
     alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
-    # pallas venue: every tile runs the kernel-backed block arithmetic
-    gemm_k = (functools.partial(_gemm_kvenue, block=_kernel_block())
-              if venue == "pallas" else _gemm_kernel)
+    # pallas venue: every tile runs the kernel-backed block arithmetic;
+    # a split decision swaps in the split tile kernel the same way
+    if precision:
+        gemm_k = _split_gemm_kernel(precision, venue, _kernel_block())
+    elif venue == "pallas":
+        gemm_k = functools.partial(_gemm_kvenue, block=_kernel_block())
+    else:
+        gemm_k = _gemm_kernel
     if has_c:
         def tile_fn(a_, b_, c_):
             return gemm_k(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
@@ -653,7 +793,7 @@ def _shard_symm(a, b, c, alpha, beta, side, uplo, conj,
 
 
 def _shard_syrk(a, c, alpha, beta, uplo, trans, conj,
-                n_dev, venue="xla") -> Optional[TilePlan]:
+                n_dev, venue="xla", precision="") -> Optional[TilePlan]:
     n = a.shape[-2] if trans == "N" else a.shape[-1]
     g = 2
     while g * (g + 1) // 2 < n_dev:
@@ -666,7 +806,19 @@ def _shard_syrk(a, c, alpha, beta, uplo, trans, conj,
     has_c = c is not None
     alpha_, beta_ = _scalar(alpha, dt), _scalar(beta, dt)
     czero = _scalar(0.0, dt)
-    if venue == "pallas":
+    if precision:
+        blk = _kernel_block()
+        # real fp64 only reaches the split path, so conj never applies
+        sk = _split_syrk_kernel(precision, venue, blk)
+        sbk = _split_syrk_block_kernel(precision, venue, blk)
+
+        def syrk_k(a_, c_, al, be, *, uplo, trans, conj, has_c):
+            return sk(a_, c_, al, be, uplo=uplo, trans=trans,
+                      has_c=has_c)
+
+        def syrk_block_k(ai, aj, c_, al, be, *, trans, conj, has_c):
+            return sbk(ai, aj, c_, al, be, trans=trans, has_c=has_c)
+    elif venue == "pallas":
         blk = _kernel_block()
         syrk_k = functools.partial(_syrk_kvenue, block=blk)
         syrk_block_k = functools.partial(_syrk_block_kvenue, block=blk)
@@ -806,7 +958,7 @@ def _shard_syr2k(a, b, c, alpha, beta, uplo, trans, conj,
 
 
 def _shard_tri(a, b, side, uplo, trans, diag, alpha, kernel,
-               n_dev, venue="xla") -> Optional[TilePlan]:
+               n_dev, venue="xla", precision="") -> Optional[TilePlan]:
     """trmm/trsm: the RHS panel splits along its free dimension; each
     panel solve/multiply is independent, the triangle replicates."""
     m, n = b.shape[-2], b.shape[-1]
@@ -817,7 +969,10 @@ def _shard_tri(a, b, side, uplo, trans, diag, alpha, kernel,
     panels = _splits(dim, g)
     dt = b.dtype
     alpha_ = _scalar(alpha, dt)
-    if venue == "pallas" and kernel is _trsm_kernel:
+    if precision and kernel is _trsm_kernel:
+        # split trsm panels: same geometry, refined fp32 panel solves
+        kernel = _split_trsm_kernel(precision, venue, _kernel_block())
+    elif venue == "pallas" and kernel is _trsm_kernel:
         # only trsm has a kernel; trmm never resolves to the pallas venue
         kernel = functools.partial(_trsm_kvenue, block=_kernel_block())
 
@@ -842,13 +997,16 @@ def _shard_tri(a, b, side, uplo, trans, diag, alpha, kernel,
 # public routines                                                          #
 # ----------------------------------------------------------------------- #
 def _dispatch(routine, m, n, k, operands, compute, batch=1, key=None,
-              shard=None, kernel_compute=None):
+              shard=None, kernel_compute=None, split_compute=None,
+              split_check=None):
     runtime = rt.active()
     if runtime is None:
         return compute(*[x for _, x, _, _ in operands])
     return runtime.blas_call(routine, m, n, k, operands, compute,
                              batch=batch, key=key, shard=shard,
-                             kernel_compute=kernel_compute)
+                             kernel_compute=kernel_compute,
+                             split_compute=split_compute,
+                             split_check=split_check)
 
 
 def _kernel_bound(base, dt, bkey, kfactory):
@@ -917,8 +1075,34 @@ def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
                                     has_c=False, block=block)
         return kcompute
 
+    def sfactory(scheme, venue, block):
+        kern = _split_gemm_kernel(scheme, venue, block)
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def scompute(a_, b_, c_):
+                return kern(a_, b_, c_, alpha_, beta_, trans_a=trans_a,
+                            trans_b=trans_b, has_c=True)
+        else:
+            c0 = _scalar(0.0, dt)
+
+            def scompute(a_, b_):
+                return kern(a_, b_, c0, alpha_, beta_, trans_a=trans_a,
+                            trans_b=trans_b, has_c=False)
+        return scompute
+
     compute = _bound(bkey, factory)
     kernel_compute = _kernel_bound("gemm", dt, bkey, kfactory)
+    flat2d = (a.ndim == 2 and b.ndim == 2
+              and (c is None or c.ndim == 2))
+    split_compute = _split_bound("gemm", dt, bkey, sfactory, flat2d)
+    split_check = None
+    if split_compute is not None:
+        from repro.core import precision as prc
+
+        def split_check(out, a_, b_, c_=None):
+            return prc.gemm_residual(out, _op(a_, trans_a),
+                                     _op(b_, trans_b), c_, alpha, beta)
     ops = [("A", a, float(opn), False), ("B", b, float(opm), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
@@ -928,7 +1112,9 @@ def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
     return _dispatch(routine_name("gemm", dt), opm, opn, opk,
                      ops, compute, batch,
                      key=_call_key(bkey, opm, opn, opk, batch),
-                     shard=shard, kernel_compute=kernel_compute)
+                     shard=shard, kernel_compute=kernel_compute,
+                     split_compute=split_compute,
+                     split_check=split_check)
 
 
 @jax.jit
@@ -1074,8 +1260,29 @@ def _syrk_like(a, c, *, uplo, trans, alpha, beta, conj, base):
                                     block=block)
         return kcompute
 
+    def sfactory(scheme, venue, block):
+        kern = _split_syrk_kernel(scheme, venue, block)
+        alpha_ = _scalar(alpha, dt)
+        beta_ = _scalar(beta, dt)
+        if has_c:
+            def scompute(a_, c_):
+                return kern(a_, c_, alpha_, beta_, uplo=uplo,
+                            trans=trans, has_c=True)
+        else:
+            c0 = _scalar(0.0, dt)
+
+            def scompute(a_):
+                return kern(a_, c0, alpha_, beta_, uplo=uplo,
+                            trans=trans, has_c=False)
+        return scompute
+
     compute = _bound(bkey, factory)
     kernel_compute = _kernel_bound(base, dt, bkey, kfactory)
+    flat2d = a.ndim == 2 and (c is None or c.ndim == 2)
+    # no sampled-residual check for syrk: the rank-k update has no
+    # cancellation channel beyond gemm's and the masked triangle defeats
+    # the O(n^2) matvec probe; acceptance rests on the a-priori bound
+    split_compute = _split_bound(base, dt, bkey, sfactory, flat2d)
     ops = [("A", a, float(n), False)]
     if has_c:
         ops.append(("C", c, 1.0, True))
@@ -1084,7 +1291,8 @@ def _syrk_like(a, c, *, uplo, trans, alpha, beta, conj, base):
              if _shard_active(batch, a, c) else None)
     return _dispatch(routine_name(base, dt), n, n, k, ops, compute,
                      batch, key=_call_key(bkey, n, n, k, batch),
-                     shard=shard, kernel_compute=kernel_compute)
+                     shard=shard, kernel_compute=kernel_compute,
+                     split_compute=split_compute)
 
 
 def syr2k(a, b, c=None, *, uplo="L", trans="N", alpha=1.0, beta=0.0):
@@ -1175,8 +1383,31 @@ def _tri_like(a, b, *, side, uplo, trans, diag, alpha, base, kernel):
                                 trans=trans, diag=diag, block=block)
         return kcompute
 
+    def sfactory(scheme, venue, block):
+        kern = _split_trsm_kernel(scheme, venue, block)
+        alpha_ = _scalar(alpha, dt)
+
+        def scompute(a_, b_):
+            return kern(a_, b_, alpha_, side=side, uplo=uplo,
+                        trans=trans, diag=diag)
+        return scompute
+
     compute = _bound(bkey, factory)
     kernel_compute = _kernel_bound(base, dt, bkey, kfactory)
+    flat2d = a.ndim == 2 and b.ndim == 2
+    split_compute = (_split_bound(base, dt, bkey, sfactory, flat2d)
+                     if base == "trsm" else None)
+    split_check = None
+    if split_compute is not None:
+        from repro.core import precision as prc
+
+        def split_check(out, a_, b_):
+            tri = _tri_ref(a_, uplo, diag)
+            return prc.trsm_residual(out, tri, b_,
+                                     left_side=(side == "L"),
+                                     lower=(uplo == "L"),
+                                     trans_a=(trans != "N"),
+                                     alpha=alpha)
     tri_n = a.shape[-1]
     opn = n if side == "L" else m
     ops = [("A", a, float(opn), False),
@@ -1186,7 +1417,9 @@ def _tri_like(a, b, *, side, uplo, trans, diag, alpha, base, kernel):
              if _shard_active(batch, a, b) else None)
     return _dispatch(routine_name(base, dt), tri_n, opn, 0, ops, compute,
                      batch, key=_call_key(bkey, tri_n, opn, 0, batch),
-                     shard=shard, kernel_compute=kernel_compute)
+                     shard=shard, kernel_compute=kernel_compute,
+                     split_compute=split_compute,
+                     split_check=split_check)
 
 
 # dlsym mode with no runtime installed still honors the env-derived

@@ -99,8 +99,21 @@ class CallSiteProfile:
     # ``offloaded``) and their wall time
     pallas_calls: int = 0
     pallas_seconds: float = 0.0
+    # split-precision pseudo-venue (SCILIB_PRECISION): timed probes of
+    # the split-representation formulation, the scheme/venue they ran
+    # under, and whether any probe missed its error bound — a site that
+    # escalated during warmup never locks split.
+    split_timed: int = 0
+    split_seconds: float = 0.0
+    split_best: float = float("inf")
+    split_scheme: str = ""                 # scheme the probes ran
+    split_venue: str = ""                  # venue the probes ran on
+    split_bad: bool = False                # a probe escalated
+    # completed calls that executed split (subdivides ``offloaded``)
+    split_calls: int = 0
     locked: Optional[bool] = None          # the locked offload decision
     locked_venue: str = ""                 # "" until locked (see VENUES)
+    locked_precision: str = ""             # locked split scheme (or "")
     locked_why: str = ""
     last_offload: Optional[bool] = None    # decision of the latest call
     # several threads adopting one session can observe a shared site
@@ -110,7 +123,8 @@ class CallSiteProfile:
 
     # ------------------------------------------------------------------ #
     def observe(self, n_avg: float, flops: float, seconds: float,
-                offload: bool, venue: str = "") -> None:
+                offload: bool, venue: str = "",
+                precision: str = "") -> None:
         """Record one completed call at this site.  ``n_avg <= 0``
         means "not derived" (the locked adaptive fast path skips the
         derivation): the call still counts, the size distribution —
@@ -124,6 +138,8 @@ class CallSiteProfile:
                 if venue == "pallas":
                     self.pallas_calls += 1
                     self.pallas_seconds += seconds
+                if precision:
+                    self.split_calls += 1
             else:
                 self.on_host += 1
             self.last_offload = offload
@@ -147,12 +163,21 @@ class CallSiteProfile:
             self.hits += int(hit)
 
     def observe_probe(self, offload: bool, seconds: float,
-                      venue: str = "") -> None:
+                      venue: str = "", precision: str = "") -> None:
         """Record one timed adaptive-warmup probe on one venue.  With no
         ``venue`` given, ``offload`` picks between the two classic
-        paths; ``venue="pallas"`` routes to the kernel-venue counters."""
+        paths; ``venue="pallas"`` routes to the kernel-venue counters;
+        a non-empty ``precision`` routes to the split pseudo-venue
+        counters regardless of the venue the split passes ran on."""
         with self._lock:
-            if venue == "pallas":
+            if precision:
+                self.split_timed += 1
+                self.split_seconds += seconds
+                self.split_scheme = precision
+                self.split_venue = venue or "xla"
+                if seconds < self.split_best:
+                    self.split_best = seconds
+            elif venue == "pallas":
                 self.kernel_timed += 1
                 self.kernel_seconds += seconds
                 if seconds < self.kernel_best:
@@ -171,7 +196,8 @@ class CallSiteProfile:
     # ------------------------------------------------------------------ #
     @property
     def probes_done(self) -> int:
-        return self.host_timed + self.device_timed + self.kernel_timed
+        return (self.host_timed + self.device_timed + self.kernel_timed
+                + self.split_timed)
 
     def probe_path(self) -> bool:
         """Deterministic warmup schedule: even probes run the host path,
@@ -179,12 +205,15 @@ class CallSiteProfile:
         what the threshold rule would have said."""
         return self.probes_done % 2 == 1
 
-    def probe_venue(self, venues: int = 2) -> str:
+    def probe_venue(self, venues: int = 2, split: bool = False) -> str:
         """Round-robin warmup schedule over the first ``venues`` entries
         of :data:`VENUES`.  ``venues=2`` reproduces the classic
         host/offload alternation exactly; ``venues=3`` adds the kernel
-        venue to the rotation — every venue gets equal samples."""
-        return VENUES[self.probes_done % venues]
+        venue to the rotation — every venue gets equal samples.
+        ``split=True`` appends the split-precision pseudo-venue (the
+        "split" slot) so precision variants race like venues do."""
+        order = VENUES[:venues] + (("split",) if split else ())
+        return order[self.probes_done % len(order)]
 
     def lock(self, fallback: Optional[bool] = None) -> bool:
         """Lock the fastest venue (paper's warmup-then-patch step).
@@ -203,6 +232,19 @@ class CallSiteProfile:
                 self.locked = bool(fallback)
                 self.locked_venue = "xla" if self.locked else "host"
                 self.locked_why = "no probes; threshold fallback"
+                return self.locked
+            if (self.split_timed and not self.split_bad
+                    and self.split_best < self.device_best
+                    and self.split_best < self.host_best
+                    and self.split_best < self.kernel_best):
+                self.locked = True
+                self.locked_venue = self.split_venue or "xla"
+                self.locked_precision = self.split_scheme
+                self.locked_why = (
+                    f"{self.split_scheme} {self.split_best * 1e6:.0f}us vs "
+                    f"device {self.device_best * 1e6:.0f}us vs "
+                    f"host {self.host_best * 1e6:.0f}us "
+                    f"over {self.probes_done} probes")
                 return self.locked
             if (self.kernel_timed
                     and self.kernel_best < self.device_best
@@ -235,9 +277,10 @@ class CallSiteProfile:
     def decision_label(self) -> str:
         """Human label for the report table."""
         if self.locked is not None:
+            tag = f"~{self.locked_precision}" if self.locked_precision else ""
             if self.locked_venue == "pallas":
-                return "pallas*"
-            return ("offload*" if self.locked else "host*")
+                return "pallas*" + tag
+            return ("offload*" if self.locked else "host*") + tag
         if self.last_offload is None:
             return "-"
         return "offload" if self.last_offload else "host"

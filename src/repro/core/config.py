@@ -68,6 +68,8 @@ ENV_FIELDS: Dict[str, str] = {
     "pool_quota": "SCILIB_POOL_QUOTA",
     "kernel_path": "SCILIB_KERNELS",
     "kernel_block": "SCILIB_KERNEL_BLOCK",
+    "precision": "SCILIB_PRECISION",
+    "precision_rtol": "SCILIB_PRECISION_RTOL",
 }
 
 #: ``SCILIB_*`` vars that are legitimate but not config fields: kernel
@@ -204,6 +206,26 @@ def _parse_kernel_block(raw: str):
     return val if val >= 0 else _INVALID
 
 
+#: valid SCILIB_PRECISION spellings; "native" normalizes to "" (off) so
+#: an explicitly-native config stays byte-identical to the default.
+PRECISION_NAMES = ("native", "split2", "split3", "auto")
+
+
+def _parse_precision(raw: str):
+    low = raw.strip().lower()
+    if low not in PRECISION_NAMES:
+        return _INVALID
+    return "" if low == "native" else low
+
+
+def _parse_precision_rtol(raw: str):
+    try:
+        val = float(raw)
+    except ValueError:
+        return _INVALID
+    return val if 0 < val < 1 else _INVALID
+
+
 _PARSERS: Dict[str, Callable[[str], Any]] = {
     "policy": _parse_policy,
     "threshold": _parse_threshold,
@@ -228,6 +250,8 @@ _PARSERS: Dict[str, Callable[[str], Any]] = {
     "pool_quota": _parse_device_bytes,
     "kernel_path": _parse_adaptive,      # "1" enables, like adaptive
     "kernel_block": _parse_kernel_block,
+    "precision": _parse_precision,
+    "precision_rtol": _parse_precision_rtol,
 }
 
 #: unknown-var names already warned about (once per process per name)
@@ -293,6 +317,12 @@ class OffloadConfig:
     # kernels against the generic XLA offload per call site
     kernel_path: bool = False            # enable the third dispatch venue
     kernel_block: int = 0                # kernel block edge (0 = default)
+    # tunable-precision emulation (repro.core.precision): rewrite fp64
+    # BLAS onto fp32/bf16 split passes with error-bounded escalation.
+    # "" = native (off); "split2"/"split3" force a scheme; "auto" picks
+    # per call from the a-priori bound vs precision_rtol.
+    precision: str = ""                  # split scheme ("" = native)
+    precision_rtol: float = 1e-4         # max accepted relative error
 
     # ------------------------------------------------------------------ #
     def __post_init__(self):
@@ -348,6 +378,16 @@ class OffloadConfig:
         if self.kernel_block < 0:
             raise ValueError("kernel_block must be >= 0 "
                              f"(got {self.kernel_block})")
+        if self.precision == "native":   # explicit spelling of the default
+            object.__setattr__(self, "precision", "")
+        if self.precision not in ("", "split2", "split3", "auto"):
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"choose from {sorted(PRECISION_NAMES)}")
+        if not 0 < self.precision_rtol < 1:
+            raise ValueError("precision_rtol must be in (0, 1) "
+                             f"(got {self.precision_rtol})")
+        object.__setattr__(self, "precision_rtol",
+                           float(self.precision_rtol))
 
     # ------------------------------------------------------------------ #
     def replace(self, **kw) -> "OffloadConfig":

@@ -1,0 +1,271 @@
+"""Split-representation fp64 emulation (pilot study, arXiv 2503.22875).
+
+The interception point that moves data (the paper) is also the right
+place to rewrite precision: an fp64 operand is decomposed into 2-3
+lower-precision slices, the slice cross products run on the fast
+low-precision units, and the partial products are re-accumulated in
+fp64.  Accuracy degradation is opt-in and bounded, never silent: every
+scheme carries a computed a-priori error bound (:func:`error_bound`)
+and a cheap sampled-residual check (:func:`gemm_residual` /
+:func:`trsm_residual`) that the runtime compares against
+``precision_rtol`` — a result that misses the bound escalates back to
+native fp64.
+
+Schemes
+-------
+
+``split2``
+    ``x = hi + lo`` with two fp32 slices (Dekker-style hi/lo).  Three
+    cross passes (``hi*hi``, ``hi*lo``, ``lo*hi``; the ``lo*lo`` term is
+    below the accumulation floor and dropped), each a plain fp32 GEMM
+    with fp32 accumulation, summed in fp64.  The bound is dominated by
+    the fp32 accumulation over the contraction: ``~(k+12)*eps32``
+    relative to the ``|A|@|B|`` scale.  Fastest scheme — on hosts where
+    sgemm beats dgemm by more than 3x it wins outright.
+
+``split3``
+    Adds a third bf16 slice of the remaining residual (fp32+fp32+bf16,
+    56 mantissa bits of coverage) and three more cross passes, and
+    chunks the contraction at ``SPLIT3_CHUNK`` columns with fp64
+    inter-chunk accumulation, which caps the accumulation term at
+    ``~(256+24)*eps32`` independent of ``k``.  Tighter and
+    shape-stable, but six passes — it pays off where low-precision
+    matrix units are >6x faster than fp64 (MXU/tensor cores), not on
+    SIMD hosts.
+
+All pass primitives are injectable (``mm=``) so the same decomposition
+runs on the xla venue (``jnp.matmul``) and the pallas venue
+(:mod:`repro.kernels.split_gemm`), and on sharded tiles unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: Schemes orderable by pass count; "auto" resolves to the cheapest
+#: member whose a-priori bound meets the configured rtol.
+SCHEMES = ("split2", "split3")
+
+EPS32 = 2.0 ** -24
+EPS64 = 2.0 ** -53
+
+#: split3 contraction chunk: per-pass fp32 accumulation runs over at
+#: most this many columns before the partial product is widened to
+#: fp64, capping the accumulation error independently of k.
+SPLIT3_CHUNK = 256
+
+#: BLAS bases the split schemes implement.
+SPLIT_BASES = ("gemm", "syrk", "trsm")
+
+MatMul = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def supported(base: str, dtype) -> bool:
+    """True when ``base`` has a split formulation for ``dtype``.
+
+    Only real fp64 splits: fp32 inputs gain nothing, and complex
+    operands would need a 4M decomposition on top (future work).
+    """
+    return base in SPLIT_BASES and jnp.dtype(dtype) == jnp.float64
+
+
+def slices(x: jax.Array, scheme: str) -> Tuple[jax.Array, ...]:
+    """Decompose an fp64 array into the scheme's low-precision slices.
+
+    Every slice is returned as fp32 (the bf16 third slice of split3 is
+    rounded through bf16, then widened) so any fp32 GEMM primitive can
+    consume it directly.
+    """
+    hi = x.astype(jnp.float32)
+    rem = x - hi.astype(jnp.float64)
+    lo = rem.astype(jnp.float32)
+    if scheme == "split2":
+        return hi, lo
+    if scheme == "split3":
+        rem2 = rem - lo.astype(jnp.float64)
+        tail = rem2.astype(jnp.bfloat16).astype(jnp.float32)
+        return hi, lo, tail
+    raise ValueError(f"unknown split scheme: {scheme!r}")
+
+
+#: Cross passes per scheme as (slice_i, slice_j) index pairs.  split2
+#: drops lo*lo (below its accumulation floor); split3 keeps every term
+#: that can reach the fp64 accumulation level.
+_PASSES = {
+    "split2": ((0, 0), (0, 1), (1, 0)),
+    "split3": ((0, 0), (0, 1), (1, 0), (1, 1), (0, 2), (2, 0)),
+}
+
+
+def _plain_mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def _pass_mm(a: jax.Array, b: jax.Array, mm: MatMul, chunk: int) -> jax.Array:
+    """One slice cross product in fp64, fp32-accumulated per chunk."""
+    if not chunk or a.shape[-1] <= chunk:
+        return mm(a, b).astype(jnp.float64)
+    k = a.shape[-1]
+    out = None
+    for c0 in range(0, k, chunk):
+        p = mm(a[..., c0:c0 + chunk], b[c0:c0 + chunk, :])
+        out = p.astype(jnp.float64) if out is None else out + p
+    return out
+
+
+def matmul(a: jax.Array, b: jax.Array, scheme: str,
+           mm: Optional[MatMul] = None) -> jax.Array:
+    """``a @ b`` for fp64 2-D operands via split low-precision passes.
+
+    ``mm`` is the fp32 pass primitive — defaults to the XLA matmul;
+    the pallas venue injects its kernel-backed equivalent.
+    """
+    mm = mm or _plain_mm
+    chunk = SPLIT3_CHUNK if scheme == "split3" else 0
+    sa = slices(a, scheme)
+    sb = slices(b, scheme)
+    out = None
+    for i, j in _PASSES[scheme]:
+        p = _pass_mm(sa[i], sb[j], mm, chunk)
+        out = p if out is None else out + p
+    return out
+
+
+def syrk(a: jax.Array, scheme: str, trans: bool = False,
+         mm: Optional[MatMul] = None) -> jax.Array:
+    """``a @ a.T`` (or ``a.T @ a``) via the split matmul."""
+    at = a.T
+    return matmul(at, a, scheme, mm) if trans else matmul(a, at, scheme, mm)
+
+
+def trsm(a: jax.Array, b: jax.Array, scheme: str, *, left_side: bool = True,
+         lower: bool = True, trans_a: bool = False, unit_diag: bool = False,
+         mm: Optional[MatMul] = None) -> jax.Array:
+    """Triangular solve via fp32 solve + one split-residual refinement.
+
+    ``X0 = solve32(A, B)`` seeds the solution, the residual
+    ``R = B - A X0`` is formed with the split matmul (so no fp64 GEMM
+    sneaks in), and one fp32 correction solve is added back.  For
+    well-conditioned triangles the refined error is
+    ``O(cond(A) * eps32^2)``; ill-conditioned systems are exactly what
+    the sampled-residual check and escalation exist for.
+    """
+    solve = functools.partial(
+        jax.lax.linalg.triangular_solve, left_side=left_side, lower=lower,
+        transpose_a=trans_a, unit_diagonal=unit_diag)
+    a32 = a.astype(jnp.float32)
+
+    def apply_a(x):
+        # op(A) @ X (left) or X @ op(A) (right) with the split matmul.
+        am = a.T if trans_a else a
+        if left_side:
+            return matmul(am, x, scheme, mm)
+        return matmul(x, am, scheme, mm)
+
+    x = solve(a32, b.astype(jnp.float32)).astype(jnp.float64)
+    r = b - apply_a(x)
+    if unit_diag:
+        # Unit-diagonal residual solve stays exact for the diagonal.
+        pass
+    x = x + solve(a32, r.astype(jnp.float32)).astype(jnp.float64)
+    return x
+
+
+def error_bound(scheme: str, k: int, base: str = "gemm") -> float:
+    """A-priori relative error bound of an accepted split result.
+
+    Relative to the ``(|A| @ |B|)`` inner-product scale — the standard
+    backward-error scale, which the bound provably satisfies for any
+    input (hypothesis-tested in ``tests/test_precision.py``).  The
+    forward relative error matches it when no catastrophic cancellation
+    occurs; cancellation is caught at runtime by the sampled-residual
+    check instead.
+    """
+    k = max(1, int(k))
+    if scheme == "split2":
+        bound = (k + 12) * EPS32
+    elif scheme == "split3":
+        bound = (min(k, SPLIT3_CHUNK) + 24) * EPS32
+    else:
+        raise ValueError(f"unknown split scheme: {scheme!r}")
+    if base == "trsm":
+        # Refinement multiplies the GEMM-level bound by a modest
+        # conditioning allowance; anything worse must escalate via the
+        # residual check.
+        bound *= 4.0
+    return bound
+
+
+def choose(scheme: str, base: str, k: int, rtol: float) -> str:
+    """Resolve a configured scheme for one call.
+
+    ``auto`` picks the cheapest scheme whose a-priori bound fits
+    ``rtol`` (or native, empty string, when none does); explicit
+    schemes are refused up front when their own bound cannot fit.
+    """
+    if scheme == "auto":
+        for cand in SCHEMES:
+            if error_bound(cand, k, base) <= rtol:
+                return cand
+        return ""
+    if scheme in SCHEMES:
+        return scheme if error_bound(scheme, k, base) <= rtol else ""
+    return ""
+
+
+def probe_vector(n: int) -> jax.Array:
+    """Deterministic +-1 probe for the sampled-residual check."""
+    signs = jnp.where(jnp.arange(n) % 2 == 0, 1.0, -1.0)
+    return signs.astype(jnp.float64)
+
+
+def _rel(err_vec: jax.Array, ref_vec: jax.Array) -> jax.Array:
+    denom = jnp.max(jnp.abs(ref_vec)) + 1e-300
+    return jnp.max(jnp.abs(err_vec)) / denom
+
+
+def gemm_residual(out: jax.Array, a: jax.Array, b: jax.Array,
+                  c: Optional[jax.Array], alpha, beta) -> jax.Array:
+    """Sampled forward-error estimate of a split GEMM result.
+
+    One fp64 matvec chain (O(n^2), vs the O(n^3) call) compares
+    ``out @ x`` against ``(alpha op(A) op(B) + beta C) @ x``; the
+    returned scalar is relative to the reference's magnitude, so
+    catastrophic cancellation — where the scale-relative bound is
+    honest but the forward error is not — shows up as a large value and
+    triggers escalation.
+    """
+    x = probe_vector(out.shape[-1])
+    ref = alpha * (a @ (b @ x))
+    if c is not None:
+        ref = ref + beta * (c @ x)
+    return _rel(out @ x - ref, ref)
+
+
+def trsm_residual(x_out: jax.Array, a: jax.Array, b: jax.Array,
+                  *, left_side: bool = True, lower: bool = True,
+                  trans_a: bool = False, alpha=1.0) -> jax.Array:
+    """Sampled forward-error estimate of a split triangular solve
+    ``op(A) X = alpha B`` (left) or ``X op(A) = alpha B`` (right).
+
+    The probe residual is back-solved through ``op(A)`` (an O(n^2)
+    vector triangular solve), converting the backward residual into a
+    forward-error estimate on ``X`` itself — normalizing the raw
+    residual by ``|B|`` would scale with cond(A) and flag solves whose
+    forward error is actually fine.
+    """
+    am = a.T if trans_a else a
+    solve = functools.partial(jax.lax.linalg.triangular_solve, a,
+                              lower=lower, transpose_a=trans_a)
+    if left_side:
+        v = probe_vector(x_out.shape[-1])
+        r = am @ (x_out @ v) - alpha * (b @ v)
+        err = solve(r[:, None], left_side=True)[:, 0]
+        return _rel(err, x_out @ v)
+    v = probe_vector(x_out.shape[0])
+    r = (v @ x_out) @ am - alpha * (v @ b)
+    err = solve(r[None, :], left_side=False)[0]
+    return _rel(err, v @ x_out)

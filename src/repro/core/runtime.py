@@ -90,6 +90,7 @@ import jax
 from repro.core import callsite as cs
 from repro.core import faults as flt
 from repro.core import memspace
+from repro.core import precision as prec
 from repro.core import residency as res
 from repro.core import threshold as thr
 from repro.core.config import OffloadConfig
@@ -180,6 +181,17 @@ class CallContext:
     # ``compute``); None when the routine has no kernel — the venue
     # resolution then falls back to the generic XLA offload
     kernel_compute: Optional[Callable[..., jax.Array]] = None
+    # split-precision factory ``(scheme, venue) -> compute`` (same
+    # placed operand order); None when the call has no split
+    # formulation (non-f64 dtype, unsupported base).  Built lazily by
+    # core.blas only when SCILIB_PRECISION is configured, so the
+    # default pipeline never pays for it.
+    split_compute: Optional[Callable[[str, str],
+                                     Callable[..., jax.Array]]] = None
+    # sampled-residual estimator ``(out, *arrays) -> rel error`` for
+    # the escalation check (repro.core.precision.gemm_residual et al.,
+    # with the call's scalars/flags captured); None disables the check.
+    split_check: Optional[Callable[..., jax.Array]] = None
     site: Optional[cs.CallSiteProfile] = None
     site_id: str = ""
 
@@ -199,6 +211,10 @@ class DispatchDecision:
     # execution venue ("host"/"xla"/"pallas"); "" with kernel_path off,
     # so the default pipeline is byte-identical to the two-venue one
     venue: str = ""
+    # split-precision scheme ("split2"/"split3"); "" with
+    # SCILIB_PRECISION off, keeping the default pipeline bit-identical.
+    # An escalated call keeps the attempted scheme (why gains "+esc").
+    precision: str = ""
 
 
 @dataclasses.dataclass
@@ -230,6 +246,12 @@ class RoutineStats:
     # subset of ``offloaded``) and their wall time
     kernel_calls: int = 0
     kernel_seconds: float = 0.0
+    # split precision (SCILIB_PRECISION): offloaded calls executed via
+    # a split scheme (subset of ``offloaded``), their wall time, and
+    # calls whose residual check escalated back to native fp64
+    split_calls: int = 0
+    split_seconds: float = 0.0
+    escalations: int = 0
 
 
 @dataclasses.dataclass
@@ -326,6 +348,16 @@ class RuntimeStats:
                        for r in self.per_routine.values())
             lines.append(f"pallas venue: {kernel_calls} calls "
                          f"({ksec:.3f} s)")
+        split_calls = sum(r.split_calls
+                          for r in self.per_routine.values())
+        if split_calls:
+            # precision section appears only once a split scheme ran,
+            # so SCILIB_PRECISION-off reports are byte-identical
+            ssec = sum(r.split_seconds
+                       for r in self.per_routine.values())
+            esc = sum(r.escalations for r in self.per_routine.values())
+            lines.append(f"split precision: {split_calls} calls "
+                         f"({ssec:.3f} s, {esc} escalations)")
         fault_activity = (self.faults + self.retries + self.fallbacks
                           + self.quarantines + self.recoveries)
         if fault_activity:
@@ -429,6 +461,10 @@ class OffloadRuntime:
         # the two-venue pipeline below stays bit-identical
         self.kernel_path = bool(config.kernel_path)
         self.kernel_block = int(config.kernel_block)
+        # split-precision emulation (SCILIB_PRECISION): off by default,
+        # keeping the dispatch pipeline bit-identical to native fp64
+        self.precision = str(config.precision)
+        self.precision_rtol = float(config.precision_rtol)
         self.callsites = cs.CallSiteRegistry()
         self.stats.callsites = self.callsites
         # ordered decision stages: first stage to return a decision wins.
@@ -557,12 +593,16 @@ class OffloadRuntime:
         if policy_changed:
             self.policy = make_policy(new.policy)
         kernel_changed = new.kernel_path != old.kernel_path
+        precision_changed = (new.precision != old.precision
+                             or new.precision_rtol != old.precision_rtol)
         if (policy_changed or self.threshold != old_threshold
-                or new.adaptive != old.adaptive or kernel_changed):
+                or new.adaptive != old.adaptive or kernel_changed
+                or precision_changed):
             for prof in self.callsites:
                 prof.locked = None
                 prof.locked_why = ""
                 prof.locked_venue = ""
+                prof.locked_precision = ""
                 if policy_changed:     # old timings measured a dead path
                     prof.host_timed = prof.device_timed = 0
                     prof.host_seconds = prof.device_seconds = 0.0
@@ -573,8 +613,18 @@ class OffloadRuntime:
                     prof.kernel_timed = 0
                     prof.kernel_seconds = 0.0
                     prof.kernel_best = float("inf")
+                if policy_changed or precision_changed:
+                    # split samples timed one (scheme, rtol) regime
+                    prof.split_timed = 0
+                    prof.split_seconds = 0.0
+                    prof.split_best = float("inf")
+                    prof.split_scheme = ""
+                    prof.split_venue = ""
+                    prof.split_bad = False
         self.kernel_path = bool(new.kernel_path)
         self.kernel_block = int(new.kernel_block)
+        self.precision = str(new.precision)
+        self.precision_rtol = float(new.precision_rtol)
         self.device_bytes_cap = new.device_bytes
         self.evict_policy = new.evict
         pin_changed = new.pin != self.pin_all
@@ -759,6 +809,7 @@ class OffloadRuntime:
         decision.offload = False
         decision.plan = None
         decision.why = f"fallback:{exc.kind}"
+        decision.precision = ""        # the host rerun is native fp64
         self.stats.fallbacks += 1
         st.fallbacks += 1
         st.on_host += 1
@@ -975,6 +1026,8 @@ class OffloadRuntime:
                   key: Optional[Hashable] = None,
                   shard: Optional[Callable[[int], Optional[TilePlan]]] = None,
                   kernel_compute: Optional[Callable[..., jax.Array]] = None,
+                  split_compute: Optional[Callable] = None,
+                  split_check: Optional[Callable] = None,
                   ) -> jax.Array:
         """Run one level-3 BLAS call through the dispatch pipeline:
 
@@ -994,6 +1047,11 @@ class OffloadRuntime:
         operand order as ``compute``); consulted only under
         ``kernel_path`` — None means "no kernel for this routine" and
         the venue resolution falls back to the generic XLA offload.
+        ``split_compute``: split-precision factory ``(scheme, venue) ->
+        compute`` and ``split_check``: sampled-residual estimator
+        ``(out, *arrays) -> rel error``; both consulted only under
+        ``SCILIB_PRECISION`` — None means the call has no split
+        formulation and always runs native.
 
         Thread-safe: the whole pipeline runs under the runtime lock, so
         several threads adopting one session (``Session.scope``) issue
@@ -1004,10 +1062,13 @@ class OffloadRuntime:
         with self._lock:
             return self._blas_call_locked(routine, m, n, k, operands,
                                           compute, batch, key, shard,
-                                          kernel_compute)
+                                          kernel_compute, split_compute,
+                                          split_check)
 
     def _blas_call_locked(self, routine, m, n, k, operands, compute,
-                          batch, key, shard, kernel_compute) -> jax.Array:
+                          batch, key, shard, kernel_compute,
+                          split_compute=None,
+                          split_check=None) -> jax.Array:
         st = self.stats.routine(routine)
         st.calls += 1
         arrays = [op[1] for op in operands]
@@ -1019,11 +1080,16 @@ class OffloadRuntime:
 
         call = self._canonicalize(routine, m, n, k, operands, arrays,
                                   compute, batch, key, shard,
-                                  kernel_compute)
+                                  kernel_compute, split_compute,
+                                  split_check)
         decision = self._decide(call, st)
         t0 = time.perf_counter()
         self._stage_plan(call, decision)
         out, devices = self._execute(call, decision, st)
+        if decision.precision and decision.offload:
+            # sampled-residual check + escalation; inside the timed
+            # window so probe samples bill what the scheme really costs
+            out = self._verify_split(call, decision, st, out)
         if self.sync_mode or decision.timed:
             # adaptive probes always block: path timing needs wall time
             out.block_until_ready()
@@ -1042,11 +1108,14 @@ class OffloadRuntime:
     # stage 1 — canonicalize: bundle the call, fingerprint the site       #
     # ------------------------------------------------------------------ #
     def _canonicalize(self, routine, m, n, k, operands, arrays, compute,
-                      batch, key, shard, kernel_compute=None) -> CallContext:
+                      batch, key, shard, kernel_compute=None,
+                      split_compute=None, split_check=None) -> CallContext:
         call = CallContext(routine=routine, m=m, n=n, k=k, batch=batch,
                            operands=operands, arrays=arrays,
                            compute=compute, key=key, shard=shard,
-                           kernel_compute=kernel_compute)
+                           kernel_compute=kernel_compute,
+                           split_compute=split_compute,
+                           split_check=split_check)
         if self.callsite_enabled:
             call.site_id = cs.fingerprint(routine)
             call.site = self.callsites.profile(call.site_id)
@@ -1072,8 +1141,35 @@ class OffloadRuntime:
             self.stats.fallbacks += 1
             st.fallbacks += 1
             self._emit_event("fallback", "quarantined", 0)
+        self._resolve_precision(call, decision)
         self._resolve_venue(call, decision)
         return decision
+
+    def _resolve_precision(self, call: CallContext,
+                           decision: DispatchDecision) -> None:
+        """Stage 2a — precision: which numeric formulation runs the
+        decided path.  A no-op with ``SCILIB_PRECISION`` off
+        (``precision`` stays ``""``, keeping the classic pipeline
+        bit-identical).  Runs before the venue resolution because a
+        split call is pallas-eligible where a native fp64 call is not.
+        Adaptive decisions arrive with their precision already chosen
+        by the probe schedule / lock and are left alone (a site that
+        locked native must not be re-split here)."""
+        if not self.precision:
+            return
+        if not decision.offload or call.split_compute is None:
+            # host path (incl. policy/health vetoes of a split probe)
+            # always runs native fp64
+            decision.precision = ""
+            return
+        if decision.precision or decision.why.startswith("adaptive"):
+            return
+        scheme = prec.choose(self.precision,
+                             thr.base_routine(call.routine),
+                             call.k or call.m, self.precision_rtol)
+        if scheme:
+            decision.precision = scheme
+            decision.why += f"+{scheme}"
 
     def _resolve_venue(self, call: CallContext,
                        decision: DispatchDecision) -> None:
@@ -1090,7 +1186,11 @@ class OffloadRuntime:
             return
         if decision.venue:
             return                      # adaptive stage already chose
-        if call.kernel_compute is not None:
+        if (call.kernel_compute is not None
+                or (decision.precision
+                    and call.split_compute is not None)):
+            # a split fp64 call is pallas-eligible even though native
+            # fp64 has no kernel: its slice passes run the fp32 kernel
             decision.venue = "pallas"
             decision.why += "+kernel"
         else:
@@ -1114,7 +1214,8 @@ class OffloadRuntime:
             st.dispatch_hits += 1
             return DispatchDecision(
                 site.locked, n_avg=0.0, why="adaptive:locked",
-                venue=site.locked_venue if self.kernel_path else "")
+                venue=site.locked_venue if self.kernel_path else "",
+                precision=site.locked_precision)
         nav = (thr.n_avg(call.routine, call.m, call.n, call.k)
                * (max(1, call.batch) ** (1.0 / 3.0)))
         if site.probes_done >= self.adaptive_warmup:
@@ -1122,6 +1223,8 @@ class OffloadRuntime:
             if self.debug >= 1:
                 label = (site.locked_venue if self.kernel_path
                          else ("offload" if locked else "host"))
+                if site.locked_precision:
+                    label += f"~{site.locked_precision}"
                 print(f"[scilib] adaptive lock {site.site}: "
                       f"{label} ({site.locked_why})")
             if self.kernel_path:
@@ -1130,9 +1233,23 @@ class OffloadRuntime:
             st.dispatch_hits += 1
             return DispatchDecision(
                 locked, n_avg=nav, why="adaptive:locked",
-                venue=site.locked_venue if self.kernel_path else "")
+                venue=site.locked_venue if self.kernel_path else "",
+                precision=site.locked_precision)
         st.dispatch_misses += 1
-        venue = site.probe_venue(3 if racing else 2)
+        # with SCILIB_PRECISION set and a split formulation available,
+        # the warmup additionally races the split variant like a venue
+        split_scheme = ""
+        if self.precision and call.split_compute is not None:
+            split_scheme = prec.choose(
+                self.precision, thr.base_routine(call.routine),
+                call.k or call.m, self.precision_rtol)
+        venue = site.probe_venue(3 if racing else 2,
+                                 split=bool(split_scheme))
+        if venue == "split":
+            # venue stays "" here; _resolve_venue picks xla or pallas
+            return DispatchDecision(True, n_avg=nav,
+                                    why="adaptive:probe", timed=True,
+                                    precision=split_scheme)
         return DispatchDecision(venue != "host", n_avg=nav,
                                 why="adaptive:probe", timed=True,
                                 venue=venue if self.kernel_path else "")
@@ -1174,13 +1291,19 @@ class OffloadRuntime:
         n_avail = self.health.usable_count()
         if (decision.offload and call.shard is not None
                 and n_avail > 1 and self.policy.shardable):
+            kw = {}
             if self.kernel_path and decision.venue == "pallas":
                 # sharded tiles follow the venue selection too: the tile
                 # kernels run the pallas path, under the same _guarded
                 # fault units as any tile
-                decision.plan = call.shard(n_avail, venue="pallas")
-            else:
-                decision.plan = call.shard(n_avail)
+                kw["venue"] = "pallas"
+            if decision.precision and call.split_compute is not None:
+                # split tiles: the same tile geometry, the tile kernels
+                # run the split passes (precision-aware shard builders
+                # exist exactly when split_compute does)
+                kw["precision"] = decision.precision
+            decision.plan = (call.shard(n_avail, **kw) if kw
+                             else call.shard(n_avail))
         return decision
 
     # ------------------------------------------------------------------ #
@@ -1241,10 +1364,17 @@ class OffloadRuntime:
         args = self._harmonize(placed, st)
         # venue selection: the pallas-venue arithmetic replaces the
         # generic jitted compute inside the *same* guarded kernel unit,
-        # so injection, retries and breaker trips cover it identically
-        compute = (call.kernel_compute
-                   if decision.venue == "pallas"
-                   and call.kernel_compute is not None else call.compute)
+        # so injection, retries and breaker trips cover it identically.
+        # A split decision swaps in the split formulation the same way
+        # (bound to the decided scheme and venue).
+        if decision.precision and call.split_compute is not None:
+            compute = call.split_compute(decision.precision,
+                                         decision.venue)
+        elif (decision.venue == "pallas"
+                and call.kernel_compute is not None):
+            compute = call.kernel_compute
+        else:
+            compute = call.compute
         out = self._guarded("kernel", lambda: compute(*args),
                             device=dev, nbytes=0, st=st)
         out_p = self._guarded(
@@ -1253,6 +1383,38 @@ class OffloadRuntime:
         st.bytes_out += out_p.moved_bytes
         st.offloaded += 1
         return out_p.array
+
+    def _verify_split(self, call: CallContext,
+                      decision: DispatchDecision, st: RoutineStats,
+                      out: jax.Array) -> jax.Array:
+        """Post-execution escalation check of a split result.
+
+        The sampled residual (one O(n^2) fp64 matvec chain against the
+        O(n^3) call) estimates the *forward* relative error; a result
+        exceeding ``precision_rtol`` — catastrophic cancellation, an
+        ill-conditioned triangle — is discarded and the call reruns
+        native fp64, so accuracy degradation is bounded, never silent.
+        The check materializes the result (the split path trades the
+        async window for the guarantee).  Without ``split_check`` the
+        a-priori bound already fit ``rtol`` at resolve time and the
+        result stands."""
+        if call.split_check is None:
+            return out
+        rel = float(call.split_check(out, *call.arrays))
+        if rel <= self.precision_rtol:
+            return out
+        st.escalations += 1
+        decision.why += "+esc"
+        self._emit_event("escalate",
+                         f"{decision.precision}:{call.routine}", 0)
+        if call.site is not None:
+            # a site whose scheme misses its bound must never lock it
+            call.site.split_bad = True
+        if self.debug >= 1:
+            print(f"[scilib] {call.routine} {decision.precision} "
+                  f"residual {rel:.2e} > rtol {self.precision_rtol:.2e}"
+                  f" -> native fp64")
+        return call.compute(*self._harmonize(call.arrays, st))
 
     # ------------------------------------------------------------------ #
     # stage 5 — record: statistics, site profile, trace                   #
@@ -1264,19 +1426,25 @@ class OffloadRuntime:
         if decision.offload and decision.venue == "pallas":
             st.kernel_calls += 1
             st.kernel_seconds += dt
+        if decision.offload and decision.precision:
+            st.split_calls += 1
+            st.split_seconds += dt
         site = call.site
         if site is not None:
             if decision.timed:
                 site.observe_probe(decision.offload, dt,
-                                   venue=decision.venue)
+                                   venue=decision.venue,
+                                   precision=decision.precision)
             site.observe(decision.n_avg,
                          _flops_of(call.routine, call.m, call.n, call.k,
                                    call.batch),
-                         dt, decision.offload, venue=decision.venue)
+                         dt, decision.offload, venue=decision.venue,
+                         precision=decision.precision)
         self._record_trace(call.routine, call.m, call.n, call.k,
                            call.operands, out, call.batch, devices,
                            site_id=call.site_id, seconds=dt,
-                           venue=decision.venue)
+                           venue=decision.venue,
+                           precision=decision.precision)
         if self.debug >= 2:
             where = "host" if not decision.offload else (
                 f"shard[{len(devices)} tiles]" if devices else
@@ -1322,7 +1490,8 @@ class OffloadRuntime:
 
     def _record_trace(self, routine, m, n, k, operands, out, batch,
                       devices=(), site_id: str = "",
-                      seconds: float = 0.0, venue: str = "") -> None:
+                      seconds: float = 0.0, venue: str = "",
+                      precision: str = "") -> None:
         if self.trace is None:
             return
         ops = []
@@ -1346,7 +1515,8 @@ class OffloadRuntime:
             routine=routine, m=m, n=n, k=k, batch=batch,
             operands=tuple(ops), devices=tuple(devices),
             callsite_id=site_id, seconds=seconds,
-            out_buf=out_buf, out_nbytes=out_nbytes, venue=venue))
+            out_buf=out_buf, out_nbytes=out_nbytes, venue=venue,
+            precision=precision))
 
 
 # --------------------------------------------------------------------- #

@@ -65,16 +65,24 @@ class BlasCall:
     # kernel-path runs (OffloadConfig.kernel_path) so default-off trace
     # dumps stay byte-identical to pre-venue traces
     venue: str = ""
+    # split-precision scheme the call dispatched under ("split2"/
+    # "split3"); recorded only by SCILIB_PRECISION runs, same
+    # byte-stability rule as ``venue``.  Escalated calls keep the
+    # attempted scheme here — the ``escalate`` trace event carries the
+    # rest of the story.
+    precision: str = ""
 
     # ------------------------------------------------------------------ #
     @property
-    def precision(self) -> str:
+    def prec_prefix(self) -> str:
+        """The BLAS precision prefix of the routine (s/d/c/z) — distinct
+        from ``precision``, the split-emulation scheme."""
         return self.routine[0]
 
     @property
     def flops(self) -> float:
         """Real-FLOP count (paper's convention for speedup accounting)."""
-        mult = _COMPLEX[self.precision] * self.batch
+        mult = _COMPLEX[self.prec_prefix] * self.batch
         base = self.routine[1:]
         m, n, k = self.m, self.n, self.k
         if base == "gemm":
@@ -114,6 +122,8 @@ class BlasCall:
         d = dataclasses.asdict(self)
         if not self.venue:           # keep default-off dumps byte-stable
             del d["venue"]
+        if not self.precision:
+            del d["precision"]
         return d
 
 

@@ -146,15 +146,29 @@ def attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
 #: generic XLA offload path.
 KERNEL_BASES = ("gemm", "syrk", "trsm")
 
+#: Bases with a split-precision formulation (repro.kernels.split_gemm,
+#: SCILIB_PRECISION): fp64 decomposed onto fp32/bf16 slice passes.  This
+#: is the only fp64 gemm path the venue has — the MXU itself has no f64
+#: mode.
+SPLIT_KERNEL_BASES = ("gemm", "syrk", "trsm")
 
-def kernel_available(base: str, dtype) -> bool:
+
+def kernel_available(base: str, dtype, precision: str = "") -> bool:
     """Capability test for the `pallas` venue: does `base` at `dtype` have
     a kernel? Complex syrk/trsm need complex VPU ops the kernels lack;
-    complex gemm decomposes onto real MXU gemms (4M)."""
+    complex gemm decomposes onto real MXU gemms (4M).
+
+    fp64 gemm has no MXU path, so it is only available when a split
+    scheme is active (``precision``, via repro.kernels.split_gemm) —
+    never silently through the reference matmul: a True here must mean
+    the venue executes something other than the plain XLA formulation,
+    or the venue prober times the wrong path and can mis-lock."""
     if base not in KERNEL_BASES:
         return False
     if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
         return base == "gemm"
+    if jnp.dtype(dtype) == jnp.float64 and base == "gemm":
+        return bool(precision) and base in SPLIT_KERNEL_BASES
     return True
 
 
@@ -167,11 +181,25 @@ def _block_kw(block: int, names=("bm", "bk", "bn")):
     return {n: b for n in names} if b > 0 else {}
 
 
-def kernel_matmul(a: jax.Array, b: jax.Array, *, block: int = 0
-                  ) -> jax.Array:
+def _split_matmul(a: jax.Array, b: jax.Array, precision: str,
+                  block: int) -> jax.Array:
+    from repro.kernels import split_gemm   # lazy: split_gemm pulls in core
+    f = functools.partial(split_gemm.matmul, scheme=precision, block=block)
+    return _batched(f, a, b)
+
+
+def kernel_matmul(a: jax.Array, b: jax.Array, *, block: int = 0,
+                  precision: str = "") -> jax.Array:
     """C = A @ B on the `pallas` venue. A zero-length contraction (k = 0)
     skips the kernel outright — its K grid axis would launch nothing and
-    leave the accumulator unwritten."""
+    leave the accumulator unwritten.
+
+    fp64 runs only with a split ``precision`` scheme (slice passes on
+    the fp32 kernel); without one this venue has no f64 kernel — the
+    reference fallback below mirrors what ``kernel_available`` already
+    refuses, it is not a secret second path."""
+    if a.dtype == jnp.float64 and precision and a.shape[-1]:
+        return _split_matmul(a, b, precision, block)
     if a.shape[-1] == 0 or not _kernel_compiled():
         return ref.matmul(a, b)
     f = functools.partial(pallas_gemm, **_block_kw(block))
@@ -184,7 +212,7 @@ def kernel_matmul(a: jax.Array, b: jax.Array, *, block: int = 0
         ir = _batched(f, ai, br)
         return jax.lax.complex(rr - ii, ri + ir).astype(a.dtype)
     if a.dtype == jnp.float64:
-        return ref.matmul(a, b)      # no f64 MXU path
+        return ref.matmul(a, b)      # kernel_available(f64) is False
     return _batched(f, a, b)
 
 

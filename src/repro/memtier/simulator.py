@@ -105,6 +105,15 @@ class PolicyReport:
     # stay at their defaults replaying a venue-free (default-off) trace.
     kernel_calls: int = 0
     venue_ratio: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # precision replay (OffloadConfig.precision): offloaded calls the
+    # recording run executed under a split scheme, escalations its
+    # residual checks fired, and the per-routine split/native cost
+    # ratios calibrated from its own timings.  All stay at defaults
+    # replaying a precision-free (default-off) trace.
+    split_calls: int = 0
+    escalations: int = 0
+    precision_ratio: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
     total_s: float = 0.0
     blas_device_s: float = 0.0
     blas_host_s: float = 0.0
@@ -159,7 +168,8 @@ class MemTierSimulator:
                  device_bytes: Optional[int] = None,
                  evict: str = "lru",
                  session: str = "",
-                 kernel_path: bool = False):
+                 kernel_path: bool = False,
+                 precision: str = ""):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
         self.spec = spec
@@ -180,6 +190,14 @@ class MemTierSimulator:
         self.kernel_path = bool(kernel_path)
         self._kmult = 1.0
         self._venue_ratio: Dict[str, float] = {}
+        # precision replay: calls the live run tagged with a split
+        # scheme execute under a per-routine split/native cost ratio
+        # calibrated from the trace (_calibrate_precision).  Off by
+        # default — a precision-off replay multiplies nothing and stays
+        # float-identical to the pre-precision model.
+        self.precision = str(precision)
+        self._pmult = 1.0
+        self._precision_ratio: Dict[str, float] = {}
         self.report = PolicyReport(policy=policy, spec=spec.name,
                                    threshold=threshold,
                                    n_devices=self.n_devices,
@@ -218,7 +236,8 @@ class MemTierSimulator:
                    n_devices=config.resolved_devices(),
                    device_bytes=config.device_bytes,
                    evict=config.evict,
-                   kernel_path=config.kernel_path, **kw)
+                   kernel_path=config.kernel_path,
+                   precision=config.precision, **kw)
 
     def _evict_to_host(self, dev: int):
         """Cap pressure on one device store: bounce the victim's pages
@@ -303,6 +322,8 @@ class MemTierSimulator:
                 t_mem * mem_pen)
         if self._kmult != 1.0:          # pallas-venue calibrated ratio
             t *= self._kmult
+        if self._pmult != 1.0:          # split-scheme calibrated ratio
+            t *= self._pmult
         t += spec.kernel_launch_s
         self.report.blas_device_s += t
         self.report.offloaded_calls += 1
@@ -329,6 +350,8 @@ class MemTierSimulator:
         t_k = max(call.flops / (spec.gpu_flops * eff), t_mem)
         if self._kmult != 1.0:          # pallas-venue calibrated ratio
             t_k *= self._kmult
+        if self._pmult != 1.0:          # split-scheme calibrated ratio
+            t_k *= self._pmult
         t_k += spec.kernel_launch_s
         self.report.blas_device_s += t_k
         self.report.offloaded_calls += 1
@@ -413,6 +436,8 @@ class MemTierSimulator:
                        t_mem * mem_pen)
         if self._kmult != 1.0:          # pallas-venue calibrated ratio
             per_tile *= self._kmult
+        if self._pmult != 1.0:          # split-scheme calibrated ratio
+            per_tile *= self._pmult
         per_tile += spec.kernel_launch_s
         t_k = per_tile * (-(-tiles // n_dev))   # tile rounds per device
         self.report.blas_device_s += t_k
@@ -535,6 +560,31 @@ class MemTierSimulator:
         return ratios
 
     # ------------------------------------------------------------------ #
+    def _calibrate_precision(self, trace: Trace) -> Dict[str, float]:
+        """Per-routine split/native cost ratio from the trace's own
+        measured per-call wall times, exactly like
+        :meth:`_calibrate_venues` — best sample per side (robust to the
+        one-off jit cost of the first call), clamped to [0.1, 10].  A
+        routine seen only split (or only native) gets no ratio and the
+        generic model applies unchanged."""
+        best: Dict[tuple, float] = {}
+        for call in trace:
+            if call.seconds > 0 and call.venue != "host":
+                k = (call.routine,
+                     "split" if call.precision else "native")
+                if call.seconds < best.get(k, float("inf")):
+                    best[k] = call.seconds
+        ratios: Dict[str, float] = {}
+        for (routine, kind) in best:
+            if kind != "split":
+                continue
+            native = best.get((routine, "native"))
+            if native:
+                r = best[(routine, "split")] / native
+                ratios[routine] = min(10.0, max(0.1, r))
+        return ratios
+
+    # ------------------------------------------------------------------ #
     def run(self, trace: Trace) -> PolicyReport:
         # fault replay: a call the live run fell back to host (retry
         # exhaustion or total quarantine) is host-bound here too — the
@@ -546,6 +596,9 @@ class MemTierSimulator:
         if self.kernel_path:
             self._venue_ratio = self._calibrate_venues(trace)
             self.report.venue_ratio = dict(self._venue_ratio)
+        if self.precision:
+            self._precision_ratio = self._calibrate_precision(trace)
+            self.report.precision_ratio = dict(self._precision_ratio)
         for i, call in enumerate(trace):
             bufs = [self._buffer(trace, bid)
                     for _, bid, _, _, _ in call.operands]
@@ -564,6 +617,15 @@ class MemTierSimulator:
                 self.report.kernel_calls += 1
             else:
                 self._kmult = 1.0
+            # precision replay: a call the live run dispatched split
+            # runs under its routine's calibrated split/native ratio
+            # and counts — a precision run replays to the same
+            # split_calls the runtime report shows
+            if self.precision and offload and call.precision:
+                self._pmult = self._precision_ratio.get(call.routine, 1.0)
+                self.report.split_calls += 1
+            else:
+                self._pmult = 1.0
             if not offload:
                 t = self._host_call(call, bufs)
             elif self.policy == "memcopy":
@@ -604,6 +666,10 @@ class MemTierSimulator:
         self.report.quarantines = trace.event_count("quarantine",
                                                     session=ses)
         self.report.recoveries = trace.event_count("recover", session=ses)
+        # escalation counters come straight off the recorded events —
+        # the residual checks already ran live, so live == replay
+        self.report.escalations = trace.event_count("escalate",
+                                                    session=ses)
         return self.report
 
     # convenience: residency of a trace buffer after the run
@@ -625,7 +691,8 @@ def replay_trace(trace: Trace, *, spec: HardwareSpec = GH200,
                  n_devices: int = 1,
                  device_bytes: Optional[int] = None,
                  evict: str = "lru",
-                 kernel_path: bool = False) -> Dict[str, PolicyReport]:
+                 kernel_path: bool = False,
+                 precision: str = "") -> Dict[str, PolicyReport]:
     """Run one trace under several policies (the paper's Tables 3/5)."""
     out = {}
     for p in policies:
@@ -633,6 +700,7 @@ def replay_trace(trace: Trace, *, spec: HardwareSpec = GH200,
                                aligned_alloc=aligned_alloc,
                                evict_lru=evict_lru, n_devices=n_devices,
                                device_bytes=device_bytes, evict=evict,
-                               kernel_path=kernel_path)
+                               kernel_path=kernel_path,
+                               precision=precision)
         out[p] = sim.run(trace)
     return out

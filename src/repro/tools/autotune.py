@@ -53,8 +53,8 @@ DEFAULT_EVICTS = ("lru", "lfu", "refetch")
 
 #: the comparison point: the paper's conservative default configuration
 #: (policy, threshold, n_devices, device_bytes cap, eviction policy,
-#: kernel path).
-BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1, None, "lru", False)
+#: kernel path, precision scheme).
+BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1, None, "lru", False, "")
 
 
 def _fmt_threshold(t: float) -> str:
@@ -71,8 +71,8 @@ def _fmt_cap(cap: Optional[int]) -> str:
 
 @dataclasses.dataclass
 class GridPoint:
-    """One simulated (policy, threshold, n_devices, cap, evict, kernel)
-    config."""
+    """One simulated (policy, threshold, n_devices, cap, evict, kernel,
+    precision) config."""
 
     policy: str
     threshold: float
@@ -81,11 +81,13 @@ class GridPoint:
     device_bytes: Optional[int] = None
     evict: str = "lru"
     kernel: bool = False    # SCILIB_KERNELS: the pallas dispatch venue
+    precision: str = ""     # SCILIB_PRECISION: the split-emulation scheme
 
     @property
     def config(self) -> Tuple:
         return (self.policy, self.threshold, self.n_devices,
-                self.device_bytes, self.evict, self.kernel)
+                self.device_bytes, self.evict, self.kernel,
+                self.precision)
 
     @property
     def total_s(self) -> float:
@@ -107,6 +109,8 @@ class GridPoint:
             settings["SCILIB_EVICT"] = self.evict
         if self.kernel:
             settings["SCILIB_KERNELS"] = "1"
+        if self.precision:
+            settings["SCILIB_PRECISION"] = self.precision
         return settings
 
     def to_config(self):
@@ -120,7 +124,7 @@ class GridPoint:
             policy=self.policy, threshold=self.threshold,
             devices=self.n_devices,
             device_bytes=self.device_bytes, evict=self.evict,
-            kernel_path=self.kernel)
+            kernel_path=self.kernel, precision=self.precision)
 
 
 @dataclasses.dataclass
@@ -147,9 +151,11 @@ class AutotuneResult:
         when no capped point stays near (or none was swept)."""
         twin = [p for p in self.points
                 if p.device_bytes is not None
-                and (p.policy, p.threshold, p.n_devices, p.kernel) ==
+                and (p.policy, p.threshold, p.n_devices, p.kernel,
+                     p.precision) ==
                     (self.best.policy, self.best.threshold,
-                     self.best.n_devices, self.best.kernel)
+                     self.best.n_devices, self.best.kernel,
+                     self.best.precision)
                 and p.total_s <= self.best.total_s * 1.02]
         if not twin:
             return None
@@ -159,12 +165,14 @@ class AutotuneResult:
 def _simulate(trace: Trace, spec: HardwareSpec, policy: str,
               threshold: float, n_devices: int,
               device_bytes: Optional[int] = None,
-              evict: str = "lru", kernel: bool = False) -> GridPoint:
+              evict: str = "lru", kernel: bool = False,
+              precision: str = "") -> GridPoint:
     sim = MemTierSimulator(spec, policy=policy, threshold=threshold,
                            n_devices=n_devices, device_bytes=device_bytes,
-                           evict=evict, kernel_path=kernel)
+                           evict=evict, kernel_path=kernel,
+                           precision=precision)
     return GridPoint(policy, threshold, n_devices, sim.run(trace),
-                     device_bytes, evict, kernel)
+                     device_bytes, evict, kernel, precision)
 
 
 def _cap_grid(device_bytes, baseline: GridPoint) -> List[Optional[int]]:
@@ -191,6 +199,7 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
              device_bytes="auto",
              evicts: Sequence[str] = DEFAULT_EVICTS,
              kernels: Optional[Sequence[bool]] = None,
+             precisions: Optional[Sequence[str]] = None,
              ) -> AutotuneResult:
     """Sweep the grid and pick the fastest point (moved bytes break ties).
 
@@ -206,12 +215,29 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
     both kernel settings would replay identically and the sweep would
     only double the grid.  Kernel-off points precede their kernel-on
     twins, so an exact tie recommends the simpler configuration.
+
+    The precision dimension (``SCILIB_PRECISION``) is gated the same
+    way: swept only when the trace carries split-scheme tags to
+    calibrate the split/native cost ratio from, and — the recommendation
+    guard — only when the recorded run's escalation rate stayed under
+    10% of its split calls.  A workload whose residual checks keep
+    escalating pays for the split passes *and* the native reruns; its
+    trace is evidence the scheme does not fit, so the tuner refuses to
+    recommend it.
     """
     if thresholds is None:
         thresholds = thr.threshold_grid(c.n_avg for c in trace)
     if kernels is None:
         kernels = ((False, True) if any(c.venue for c in trace)
                    else (False,))
+    if precisions is None:
+        schemes = sorted({c.precision for c in trace if c.precision})
+        tagged = sum(1 for c in trace if c.precision)
+        esc = trace.event_count("escalate")
+        if schemes and esc <= 0.1 * tagged:
+            precisions = ("",) + tuple(schemes)
+        else:
+            precisions = ("",)
     baseline = _simulate(trace, spec, *BASELINE)
     caps = _cap_grid(device_bytes, baseline)
     points: List[GridPoint] = [baseline]
@@ -223,11 +249,13 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
                 for cap in (caps if policy == "dfu" else [None]):
                     for ev in (evicts if cap is not None else ["lru"]):
                         for kern in kernels:
-                            cfg = (policy, float(t), nd, cap, ev,
-                                   bool(kern))
-                            if cfg == BASELINE:
-                                continue    # already simulated
-                            points.append(_simulate(trace, spec, *cfg))
+                            for prc in precisions:
+                                cfg = (policy, float(t), nd, cap, ev,
+                                       bool(kern), str(prc))
+                                if cfg == BASELINE:
+                                    continue    # already simulated
+                                points.append(
+                                    _simulate(trace, spec, *cfg))
     # fastest first; among points within 2% of it, least movement wins —
     # a config that moves gigabytes for a sub-noise predicted gain is
     # not a recommendation.  Uncapped points precede capped twins in the
@@ -245,6 +273,7 @@ def _grid_row(p: GridPoint, mark: str = "") -> str:
     return (f"{p.policy:<9}{_fmt_threshold(p.threshold):>10}"
             f"{p.n_devices:>6}{_fmt_cap(p.device_bytes):>8}"
             f"{p.evict:>9}{('on' if p.kernel else '-'):>6}"
+            f"{(p.precision or '-'):>8}"
             f"{p.total_s:>10.4f}"
             f"{p.moved_bytes / 1e9:>10.3f}"
             f"{p.report.offloaded_calls:>9}"
@@ -253,7 +282,7 @@ def _grid_row(p: GridPoint, mark: str = "") -> str:
 
 def format_grid(result: AutotuneResult, top: int = 12) -> str:
     lines = [f"{'policy':<9}{'threshold':>10}{'ndev':>6}{'cap':>8}"
-             f"{'evict':>9}{'kern':>6}{'pred_s':>10}"
+             f"{'evict':>9}{'kern':>6}{'prec':>8}{'pred_s':>10}"
              f"{'moved_GB':>10}{'offload':>9}{'evict#':>7}"]
     ranked = sorted(result.points,
                     key=lambda p: (p.total_s, p.moved_bytes))[:top]
@@ -367,6 +396,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="sweep the SCILIB_KERNELS (pallas venue) "
                          "dimension; 'auto' sweeps it only when the "
                          "trace carries venue tags to calibrate from")
+    ap.add_argument("--precision", default="auto",
+                    help="sweep the SCILIB_PRECISION (split-emulation) "
+                         "dimension: 'auto' sweeps the schemes the "
+                         "trace was recorded under (refused when its "
+                         "escalation rate exceeded 10%%), 'off' pins "
+                         "native, or a comma list of schemes (e.g. "
+                         "split2,split3)")
     ap.add_argument("--top", type=int, default=12,
                     help="grid rows to print")
     ap.add_argument("--emit-config", metavar="PATH", default="",
@@ -382,13 +418,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     else _parse_ints(args.device_bytes))
     kernels = {"auto": None, "off": (False,), "on": (True,),
                "both": (False, True)}[args.kernels]
+    if args.precision == "auto":
+        precisions = None
+    elif args.precision == "off":
+        precisions = ("",)
+    else:
+        precisions = ("",) + tuple(
+            p for p in args.precision.split(",") if p and p != "native")
     result = autotune(trace, spec=SPECS[args.spec],
                       policies=tuple(args.policies.split(",")),
                       thresholds=thresholds,
                       device_counts=_parse_ints(args.devices),
                       device_bytes=device_bytes,
                       evicts=tuple(args.evict.split(",")),
-                      kernels=kernels)
+                      kernels=kernels, precisions=precisions)
     n_sites = len({c.callsite_id for c in trace if c.callsite_id})
     print(f"autotune: {len(result.points)}-point grid, spec={args.spec}, "
           f"{len(trace)} calls, {n_sites} sites, "

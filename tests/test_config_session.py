@@ -69,6 +69,8 @@ MATRIX = {
     "pool_quota": ("1048576", 1048576),
     "kernel_path": ("1", True),
     "kernel_block": ("256", 256),
+    "precision": ("split2", "split2"),
+    "precision_rtol": ("1e-5", 1e-5),
 }
 
 

@@ -141,12 +141,18 @@ def test_decode_attention_kernel(kvlen):
 def test_kernel_capability_matrix():
     """The venue capability registry: which (base, dtype) pairs the
     kernel path can execute.  Complex syrk/trsm need complex VPU ops
-    the kernels lack; complex gemm decomposes onto real gemms (4M)."""
+    the kernels lack; complex gemm decomposes onto real gemms (4M);
+    fp64 gemm has no MXU path, so it needs a split-precision scheme
+    (without one the venue would time the plain XLA formulation and
+    could mis-lock)."""
     from repro.kernels import ops
     assert ops.KERNEL_BASES == ("gemm", "syrk", "trsm")
     for base in ops.KERNEL_BASES:
         assert ops.kernel_available(base, jnp.float32)
-        assert ops.kernel_available(base, jnp.float64)
+    assert not ops.kernel_available("gemm", jnp.float64)
+    assert ops.kernel_available("gemm", jnp.float64, precision="split2")
+    assert ops.kernel_available("syrk", jnp.float64)
+    assert ops.kernel_available("trsm", jnp.float64)
     assert ops.kernel_available("gemm", jnp.complex64)
     assert not ops.kernel_available("syrk", jnp.complex64)
     assert not ops.kernel_available("trsm", jnp.complex64)
