@@ -31,6 +31,15 @@ cached) runtime, on the two workloads the tentpole targets.
   vs ``split3``, reporting calls/sec *and* the measured max relative
   error of each scheme — the speedup column is only meaningful next to
   the accuracy column it was bought with.
+* ``solver`` — the LAPACK solver tier (``SCILIB_LAPACK``): one
+  factorization per timing for gesv/potrf/syev in three modes — host
+  (the span-wrapped drivers under ``policy=cpu``), offload (the raw
+  blocked kernels under DFU, no spans), and offload+pin (the drivers
+  under DFU: spans pin the factor buffer for their lifetime).  gesv
+  and potrf run at n=512/1024; syev runs one size class down
+  (256/512) because its per-column tridiagonalization is python-
+  dispatch-bound at laptop scale and the rank-2k updates it feeds the
+  runtime are what the comparison is about.
 * ``faults`` — fault-tolerance overhead: the chained workload under
   the Mem-Copy policy (every call stages transfers, so every call is
   exposed to injection) at 5% transfer faults.  Three configs: clean
@@ -82,6 +91,10 @@ EVICT_CALLS = EVICT_PHASES * (3 * EVICT_HOT + EVICT_COLD)
 PREC_NS = (256,) if _QUICK else (256, 1024)
 PREC_CALLS = 4 if _QUICK else 10
 PREC_ROUNDS = 2 if _QUICK else 4
+SOLVER_NS = (192,) if _QUICK else (512, 1024)
+SOLVER_EIG_NS = (128,) if _QUICK else (256, 512)
+SOLVER_NRHS = 32
+SOLVER_NB = 128
 REPS = 1 if _QUICK else 3
 
 
@@ -322,6 +335,69 @@ def _bench_precision(n: int):
         rtm.uninstall()
 
 
+def _bench_solver(kind: str, n: int, mode: str) -> float:
+    """One LAPACK-tier factorization, three ways.  ``host`` runs the
+    span-wrapped drivers under ``policy=cpu`` (spans open but nothing
+    pins or offloads), ``offload`` runs the raw blocked kernels under
+    DFU (no spans, so the factor competes in the LRU like any buffer),
+    ``pin`` runs the drivers under DFU (the span pins the factor for
+    its lifetime).  Returns solves/sec, best rep."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.core import lapack
+    from repro.core import runtime as rtm
+    from repro.core.policy import host_array
+    from repro.solvers import drivers
+    from repro.solvers import eigen
+    rng = np.random.default_rng(9)
+    fields = ({"policy": "cpu"} if mode == "host"
+              else {"threshold": 100.0})
+    rt = rtm.install(config=_mode_config("fast", **fields),
+                     record_trace=False)
+    raw = mode == "offload"
+    try:
+        if kind == "gesv":
+            a = host_array(jnp.asarray(
+                rng.standard_normal((n, n)) / n + np.eye(n)))
+            b = host_array(jnp.asarray(
+                rng.standard_normal((n, SOLVER_NRHS))))
+            if raw:
+                def run():
+                    lu, piv = lapack.getrf(a, nb=SOLVER_NB)
+                    return lapack.getrs(lu, piv, b)
+            else:
+                def run():
+                    return drivers.gesv(a, b, nb=SOLVER_NB)
+        elif kind == "potrf":
+            g = rng.standard_normal((n, n)) / n
+            a = host_array(jnp.asarray(g @ g.T + np.eye(n)))
+            if raw:
+                def run():
+                    return lapack.potrf(a, SOLVER_NB)
+            else:
+                def run():
+                    return drivers.potrf(a, SOLVER_NB)
+        else:
+            g = rng.standard_normal((n, n))
+            a = host_array(jnp.asarray((g + g.T) / 2))
+            if raw:
+                def run():
+                    return eigen.syev(a, nb=SOLVER_NB)
+            else:
+                def run():
+                    return drivers.syev(a, SOLVER_NB)
+        best = 0.0
+        for _ in range(REPS):       # first rep warms the compile caches
+            t0 = time.perf_counter()
+            jax.block_until_ready(run())
+            rt.sync()
+            best = max(best, 1.0 / (time.perf_counter() - t0))
+        return best
+    finally:
+        rtm.uninstall()
+
+
 def _bench_faults(spec: str, retries: int) -> Tuple[float, float, int]:
     """Chained Mem-Copy gemms under an injected transfer-fault rate.
     Returns (calls/sec, fallback %, retries) over all reps."""
@@ -455,6 +531,23 @@ def bench() -> List[Row]:
         rows.append((f"dispatch.evict.mixed.{pol}_refetched_gb",
                      round(refetched / 1e9, 3),
                      "GB re-moved for evicted-then-reused buffers"))
+    for kind, ns in (("gesv", SOLVER_NS), ("potrf", SOLVER_NS),
+                     ("syev", SOLVER_EIG_NS)):
+        for n in ns:
+            sps = {m: _bench_solver(kind, n, m)
+                   for m in ("host", "offload", "pin")}
+            rows.append((f"dispatch.solver.{kind}{n}.host_sps",
+                         round(sps["host"], 3),
+                         "span-wrapped drivers, policy=cpu"))
+            rows.append((f"dispatch.solver.{kind}{n}.offload_sps",
+                         round(sps["offload"], 3),
+                         "raw blocked kernels under DFU (no spans)"))
+            rows.append((f"dispatch.solver.{kind}{n}.pin_sps",
+                         round(sps["pin"], 3),
+                         "drivers under DFU: span pins the factor"))
+            rows.append((f"dispatch.solver.{kind}{n}.pin_speedup",
+                         round(sps["pin"] / max(1e-9, sps["host"]), 3),
+                         ">1 means offload+pin beats the host path"))
     labels = {"clean": "no injection (guard fixed cost)",
               "retry": "5% transfer faults, retries=2 (absorbed)",
               "fallback": "5% transfer faults, retries=0 (host falls)"}

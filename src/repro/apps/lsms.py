@@ -6,9 +6,11 @@ KKR matrix ``M = I - t·G`` over the local interaction zone and solve
 ``M tau = t`` — in production via zgetrf/zgetrs, whose panel updates are
 the zgemm/ztrsm stream that is 80 %+ of runtime.
 
-``run_mini`` executes the real numerics at laptop scale through
-:mod:`repro.core.lapack` (so the interception layer sees a genuine
-LAPACK-shaped BLAS stream). ``production_trace`` emits the 50-node-scale
+``run_mini`` executes the real numerics at laptop scale through the
+public ``jax.scipy.linalg`` solve symbols — under ``SCILIB_LAPACK=1``
+these are the intercepted solver tier (:mod:`repro.solvers`), so the
+runtime sees a genuine LAPACK-shaped BLAS stream wrapped in solver
+spans; without it they are the native path. ``production_trace`` emits the 50-node-scale
 call structure of Table 3 — one resident KKR buffer per atom reused
 across all (energy x SCF) solves, which is precisely the reuse pattern
 (~780x) Device First-Use exploits.
@@ -88,11 +90,14 @@ def run_mini(atoms: int = 4, energies: int = 4, scf: int = 2,
 
     Returns the total energy proxy and residual so tests can assert the
     physics loop is numerically sound under every offload policy.
+    ``nb`` is kept for callers, but when the solver tier is patched the
+    blocked LU takes its block size from the session's ``lapack_nb``
+    (``SCILIB_LAPACK_NB``); the native path ignores it entirely.
     """
     import jax
     import jax.numpy as jnp
+    import jax.scipy.linalg as jsl
 
-    from repro.core import lapack
     from repro.core.policy import host_array
 
     rng = np.random.default_rng(seed)
@@ -114,9 +119,13 @@ def run_mini(atoms: int = 4, energies: int = 4, scf: int = 2,
                                   + 0.01 * rng.standard_normal((n, n))),
                     dtype)
                 tg = jnp.matmul(tm, gmats[a])    # intercepted zgemm
-                m = (jnp.eye(n, dtype=tg.dtype)
-                     - z * jnp.asarray(np.asarray(tg)))
-                tau = lapack.gesv(m, tm, nb=nb)
+                # the KKR build stays in the intercepted stream (no
+                # host round-trip), and the solve goes through the
+                # public scipy symbols: with SCILIB_LAPACK=1 these are
+                # the patched solver tier, without it the native path
+                m = jnp.eye(n, dtype=tg.dtype) - z * tg
+                lu_piv = jsl.lu_factor(m)
+                tau = jsl.lu_solve(lu_piv, tm)
                 # verification on the host side (numpy): not BLAS stream
                 resid = float(np.max(np.abs(
                     np.asarray(m) @ np.asarray(tau) - np.asarray(tm))))

@@ -28,11 +28,22 @@ import threading
 from typing import Dict, Iterator, List, Optional
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
-#: dispatch-machinery files whose frames never count as the call site
-_MACHINERY = frozenset(
+#: dispatch-machinery files whose frames never count as the call site.
+#: Mutable on purpose: other dispatch layers (repro.solvers' trampolines)
+#: register themselves via :func:`register_machinery`.
+_MACHINERY = set(
     os.path.join(_HERE, name)
     for name in ("callsite.py", "runtime.py", "blas.py", "intercept.py"))
 _MAX_WALK = 16
+
+
+def register_machinery(path: str) -> None:
+    """Mark a module file as dispatch machinery — its frames are skipped
+    when fingerprinting call sites.  Trampoline layers outside this
+    package (e.g. ``repro.solvers.intercept``) register themselves so a
+    patched ``jnp.linalg.solve`` call fingerprints to the *application*
+    line, not to the trampoline."""
+    _MACHINERY.add(os.path.abspath(path))
 
 UNKNOWN = "<unknown>"
 

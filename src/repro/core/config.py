@@ -70,6 +70,8 @@ ENV_FIELDS: Dict[str, str] = {
     "kernel_block": "SCILIB_KERNEL_BLOCK",
     "precision": "SCILIB_PRECISION",
     "precision_rtol": "SCILIB_PRECISION_RTOL",
+    "lapack": "SCILIB_LAPACK",
+    "lapack_nb": "SCILIB_LAPACK_NB",
 }
 
 #: ``SCILIB_*`` vars that are legitimate but not config fields: kernel
@@ -252,6 +254,8 @@ _PARSERS: Dict[str, Callable[[str], Any]] = {
     "kernel_block": _parse_kernel_block,
     "precision": _parse_precision,
     "precision_rtol": _parse_precision_rtol,
+    "lapack": _parse_adaptive,           # "1" enables, like adaptive
+    "lapack_nb": _parse_kernel_block,    # int >= 0 (0 = driver default)
 }
 
 #: unknown-var names already warned about (once per process per name)
@@ -323,6 +327,12 @@ class OffloadConfig:
     # per call from the a-priori bound vs precision_rtol.
     precision: str = ""                  # split scheme ("" = native)
     precision_rtol: float = 1e-4         # max accepted relative error
+    # the LAPACK solver tier (repro.solvers): patch jnp.linalg /
+    # jax.scipy.linalg factorizations onto the blocked drivers, wrap
+    # each in a solver span (pinned factor, tagged inner BLAS calls)
+    lapack: bool = False                 # intercept the solver tier
+    lapack_nb: int = 0                   # LU/Cholesky block size
+    #                                    # (0 = driver default)
 
     # ------------------------------------------------------------------ #
     def __post_init__(self):
@@ -378,6 +388,9 @@ class OffloadConfig:
         if self.kernel_block < 0:
             raise ValueError("kernel_block must be >= 0 "
                              f"(got {self.kernel_block})")
+        if self.lapack_nb < 0:
+            raise ValueError("lapack_nb must be >= 0 "
+                             f"(got {self.lapack_nb})")
         if self.precision == "native":   # explicit spelling of the default
             object.__setattr__(self, "precision", "")
         if self.precision not in ("", "split2", "split3", "auto"):

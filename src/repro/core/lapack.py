@@ -18,8 +18,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blas
+from repro.core import runtime as rtm
 
 DEFAULT_NB = 128
+
+_PREC = {"float32": "s", "float64": "d",
+         "complex64": "c", "complex128": "z"}
+
+
+def _prec(dtype) -> str:
+    return _PREC.get(jnp.dtype(dtype).name, "d")
+
+
+def _note_panel(prec: str, m: int, nb: int, panel: jax.Array) -> None:
+    """Report an unblocked panel factorization to the active runtime.
+
+    Panels are host-side getf2 work — they never offload, but inside a
+    solver span (repro.solvers) they count toward the span's panel
+    fraction and appear as ``getf2`` trace calls.  Outside a span this
+    is a no-op, keeping direct driver calls byte-identical to before."""
+    rt = rtm.active()
+    if rt is not None:
+        rt.note_panel(prec, m, nb, panel)
 
 
 def _pivot_panel(panel: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -63,22 +83,25 @@ def _pivot_panel(panel: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def getrf(a: jax.Array, nb: int = DEFAULT_NB
           ) -> Tuple[jax.Array, jax.Array]:
-    """Blocked right-looking LU with partial pivoting.
+    """Blocked right-looking LU with partial pivoting (general m x n).
 
-    Returns (LU, piv) in LAPACK convention: ``piv[j]`` is the row swapped
-    with row ``j`` (0-based, absolute). The trailing-matrix updates are
-    the trsm+gemm pairs that dominate MuST's runtime.
+    Returns (LU, piv): ``piv`` is the absolute row permutation (length
+    ``m``) such that ``A[piv] == L @ U`` — the composed form of LAPACK's
+    sequential ipiv swaps. The trailing-matrix updates are the trsm+gemm
+    pairs that dominate MuST's runtime.
     """
-    n = a.shape[0]
+    m, n = a.shape
+    prec = _prec(a.dtype)
+    k_max = min(m, n)
     lu = a
-    piv = jnp.arange(n, dtype=jnp.int32)
-    for j0 in range(0, n, nb):
-        jb = min(nb, n - j0)
+    piv = jnp.arange(m, dtype=jnp.int32)
+    for j0 in range(0, k_max, nb):
+        jb = min(nb, k_max - j0)
         panel = lu[j0:, j0:j0 + jb]
         fpanel, lpiv = _pivot_panel(panel)
+        _note_panel(prec, m - j0, jb, fpanel)
         # apply local pivots to the whole rows (left + right of panel)
-        rows = jnp.arange(n - j0)
-        perm = rows
+        perm = jnp.arange(m - j0)
         for jj in range(jb):           # compose swaps (host loop, nb small)
             r = lpiv[jj]
             perm = perm.at[jj].set(perm[r]).at[r].set(perm[jj])
@@ -93,11 +116,12 @@ def getrf(a: jax.Array, nb: int = DEFAULT_NB
             u12 = blas.trsm(l11, a12, side="L", uplo="L", trans="N",
                             diag="U")
             lu = lu.at[j0:j0 + jb, j0 + jb:].set(u12)
-            # A22 -= L21 U12               (gemm: the hot spot)
-            l21 = lu[j0 + jb:, j0:j0 + jb]
-            a22 = lu[j0 + jb:, j0 + jb:]
-            upd = blas.gemm(l21, u12, a22, alpha=-1.0, beta=1.0)
-            lu = lu.at[j0 + jb:, j0 + jb:].set(upd)
+            if j0 + jb < m:
+                # A22 -= L21 U12           (gemm: the hot spot)
+                l21 = lu[j0 + jb:, j0:j0 + jb]
+                a22 = lu[j0 + jb:, j0 + jb:]
+                upd = blas.gemm(l21, u12, a22, alpha=-1.0, beta=1.0)
+                lu = lu.at[j0 + jb:, j0 + jb:].set(upd)
     return lu, piv
 
 
@@ -124,8 +148,16 @@ def gesv(a: jax.Array, b: jax.Array, nb: int = DEFAULT_NB) -> jax.Array:
 
 def potrf(a: jax.Array, nb: int = DEFAULT_NB, *,
           uplo: str = "L") -> jax.Array:
-    """Blocked Cholesky (syrk + trsm + small unblocked factor)."""
-    assert uplo == "L", "upper Cholesky via potrf(a.T) conventions"
+    """Blocked Cholesky (syrk-shaped gemm + trsm + small unblocked factor).
+
+    Handles real-symmetric and complex-Hermitian inputs (the updates use
+    conjugate transposes, which reduce to plain transposes for real
+    dtypes).  ``uplo="U"`` factors the conjugate-transposed matrix and
+    returns ``U`` with ``A = U^H U``.
+    """
+    if uplo == "U":
+        l = potrf(jnp.conj(a.T), nb, uplo="L")
+        return jnp.conj(l.T)
     n = a.shape[0]
     l = jnp.zeros_like(a)
 
@@ -136,12 +168,12 @@ def potrf(a: jax.Array, nb: int = DEFAULT_NB, *,
 
     for j0 in range(0, n, nb):
         jb = min(nb, n - j0)
-        # diagonal block: A11 - L10 L10^T
+        # diagonal block: A11 - L10 L10^H
         l10 = l[j0:j0 + jb, :j0]
         a11 = a[j0:j0 + jb, j0:j0 + jb]
         if j0 > 0:
             a11 = blas.gemm(l10, l10, a11, alpha=-1.0, beta=1.0,
-                            trans_b="T")
+                            trans_b="C")
         l11 = chol_block(a11)
         l = l.at[j0:j0 + jb, j0:j0 + jb].set(l11)
         if j0 + jb < n:
@@ -149,9 +181,27 @@ def potrf(a: jax.Array, nb: int = DEFAULT_NB, *,
             a21 = a[j0 + jb:, j0:j0 + jb]
             if j0 > 0:
                 a21 = blas.gemm(l20, l10, a21, alpha=-1.0, beta=1.0,
-                                trans_b="T")
-            # L21 = A21 L11^{-T}    (right-side trsm)
-            l21 = blas.trsm(l11, a21, side="R", uplo="L", trans="T",
+                                trans_b="C")
+            # L21 = A21 L11^{-H}    (right-side trsm)
+            l21 = blas.trsm(l11, a21, side="R", uplo="L", trans="C",
                             diag="N")
             l = l.at[j0 + jb:, j0:j0 + jb].set(l21)
     return l
+
+
+def potrs(f: jax.Array, b: jax.Array, *, uplo: str = "L") -> jax.Array:
+    """Solve A X = B from potrf output (two triangular solves)."""
+    if b.ndim == 1:
+        b = b[:, None]
+        squeeze = True
+    else:
+        squeeze = False
+    if uplo == "L":
+        # A = L L^H: solve L y = b, then L^H x = y
+        y = blas.trsm(f, b, side="L", uplo="L", trans="N", diag="N")
+        x = blas.trsm(f, y, side="L", uplo="L", trans="C", diag="N")
+    else:
+        # A = U^H U: solve U^H y = b, then U x = y
+        y = blas.trsm(f, b, side="L", uplo="U", trans="C", diag="N")
+        x = blas.trsm(f, y, side="L", uplo="U", trans="N", diag="N")
+    return x[:, 0] if squeeze else x

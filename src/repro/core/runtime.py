@@ -266,10 +266,26 @@ class DeviceStats:
 
 
 @dataclasses.dataclass
+class SolverStats:
+    """Per-solver accounting of the LAPACK tier (:mod:`repro.solvers`):
+    one row per solver name, aggregated over that solver's spans."""
+
+    spans: int = 0               # solver_begin/solver_end pairs
+    calls: int = 0               # inner BLAS + panel calls in the spans
+    panel_calls: int = 0         # unblocked getf2 panels (host work)
+    moved_bytes: int = 0         # movement attributed to the spans
+    seconds: float = 0.0         # wall time inside the spans
+
+
+@dataclasses.dataclass
 class RuntimeStats:
     per_routine: Dict[str, RoutineStats] = dataclasses.field(
         default_factory=dict)
     per_device: Dict[int, DeviceStats] = dataclasses.field(
+        default_factory=dict)
+    # LAPACK-tier solver spans (getrf/potrf/syev...), keyed by solver
+    # name — empty (and invisible in the report) unless repro.solvers ran
+    solvers: Dict[str, SolverStats] = dataclasses.field(
         default_factory=dict)
     uninstrumented_calls: int = 0
     # placement-registry cap pressure (mirrors the residency store)
@@ -293,6 +309,9 @@ class RuntimeStats:
 
     def routine(self, name: str) -> RoutineStats:
         return self.per_routine.setdefault(name, RoutineStats())
+
+    def solver(self, name: str) -> SolverStats:
+        return self.solvers.setdefault(name, SolverStats())
 
     def device(self, index: int) -> DeviceStats:
         return self.per_device.setdefault(index, DeviceStats())
@@ -358,6 +377,17 @@ class RuntimeStats:
             esc = sum(r.escalations for r in self.per_routine.values())
             lines.append(f"split precision: {split_calls} calls "
                          f"({ssec:.3f} s, {esc} escalations)")
+        if self.solvers:
+            # the solver section appears only once a LAPACK-tier span
+            # ran, so solver-free reports are byte-identical to before
+            lines.append("solvers (LAPACK tier)")
+            lines.append(f"{'solver':<10}{'spans':>7}{'calls':>8}"
+                         f"{'panel%':>8}{'GB moved':>10}{'sec':>9}")
+            for name, s in sorted(self.solvers.items()):
+                pct = 100.0 * s.panel_calls / max(1, s.calls)
+                lines.append(f"{name:<10}{s.spans:>7}{s.calls:>8}"
+                             f"{pct:>8.0f}{s.moved_bytes / 1e9:>10.3f}"
+                             f"{s.seconds:>9.3f}")
         fault_activity = (self.faults + self.retries + self.fallbacks
                           + self.quarantines + self.recoveries)
         if fault_activity:
@@ -412,6 +442,30 @@ def _flops_of(routine: str, m: int, n: int, k: int, batch: int = 1) -> float:
         return 0.0
     mult = 4.0 if routine[:1] in ("c", "z") else 1.0
     return mult * batch * fn(m, n, k)
+
+
+class SolverSpan:
+    """A live LAPACK-tier solver span (``solver_begin`` ..
+    ``solver_end``).  While it is the innermost open span, every BLAS
+    call the runtime records is stamped with its ``span_id``
+    (``"<solver>#<seq>"``), and the factor buffer handed to
+    :meth:`OffloadRuntime.solver_begin` stays pinned on the device tier
+    for the span's lifetime — the ~780x-reuse pattern of the LSMS
+    workload (``apps/lsms.py``) made explicit."""
+
+    __slots__ = ("name", "span_id", "factor", "pinned", "t0", "moved0")
+
+    def __init__(self, name: str, span_id: str, factor, pinned: bool,
+                 t0: float, moved0: int):
+        self.name = name
+        self.span_id = span_id
+        self.factor = factor
+        self.pinned = pinned
+        self.t0 = t0
+        self.moved0 = moved0
+
+    def __repr__(self) -> str:
+        return f"SolverSpan({self.span_id})"
 
 
 class OffloadRuntime:
@@ -522,6 +576,10 @@ class OffloadRuntime:
         # async mode: recent in-flight outputs, drained by sync()
         self._pending: "collections.deque[jax.Array]" = collections.deque(
             maxlen=_PENDING_WINDOW)
+        # LAPACK-tier solver spans (repro.solvers): innermost-last stack
+        # of open spans; the top span stamps every recorded BLAS call
+        self._solver_stack: list = []
+        self._solver_seq = 0
         # trace-buffer ids: id(arr) -> trace buffer id (uncapped store:
         # entries live exactly as long as their anchor array)
         self._trace_ids = res.ResidencyStore("traceids")
@@ -849,6 +907,76 @@ class OffloadRuntime:
         canonicalize (thread-safe: trampolines fire on any thread)."""
         with self._stats_lock:
             self.stats.uninstrumented_calls += 1
+
+    # ------------------------------------------------------------------ #
+    # LAPACK-tier solver spans (repro.solvers drives these)               #
+    # ------------------------------------------------------------------ #
+    def solver_begin(self, name: str, factor=None) -> SolverSpan:
+        """Open a solver span: emit the ``solver_begin`` trace event,
+        pin the in-place factor buffer for the span's lifetime (the
+        factorization re-reads it once per inner BLAS call — the LSMS
+        ~780x-reuse pattern), and make the span the stamp for every
+        BLAS call recorded until :meth:`solver_end`."""
+        with self._lock:
+            span_id = f"{name}#{self._solver_seq}"
+            self._solver_seq += 1
+            nbytes = int(getattr(factor, "nbytes", 0) or 0)
+            pinned = False
+            if (factor is not None and self.config.policy != "cpu"
+                    and isinstance(factor, jax.Array)
+                    and not isinstance(factor, jax.core.Tracer)):
+                self.pin(factor)
+                pinned = True
+            self.stats.solver(name).spans += 1
+            span = SolverSpan(name, span_id, factor, pinned,
+                              time.perf_counter(),
+                              self.stats.total_moved_bytes)
+            self._solver_stack.append(span)
+            self._emit_event("solver_begin", span_id, nbytes)
+            return span
+
+    def solver_end(self, span: SolverSpan) -> None:
+        """Close a solver span: unpin the factor (it stays resident
+        until cap pressure selects it), fold the span's wall time and
+        movement delta into the per-solver statistics, and emit the
+        ``solver_end`` trace event."""
+        with self._lock:
+            try:
+                self._solver_stack.remove(span)
+            except ValueError:
+                return                    # already closed (idempotent)
+            if span.pinned and span.factor is not None:
+                self.unpin(span.factor)
+            st = self.stats.solver(span.name)
+            st.seconds += time.perf_counter() - span.t0
+            st.moved_bytes += max(
+                0, self.stats.total_moved_bytes - span.moved0)
+            self._emit_event("solver_end", span.span_id, 0)
+
+    def note_panel(self, prec: str, m: int, nb: int, a) -> None:
+        """Record one unblocked panel factorization (``getf2`` — the
+        host-side work inside a blocked driver).  Panels are recorded
+        only inside a solver span: outside the LAPACK tier the drivers
+        emit exactly the BLAS stream they always did, keeping
+        pre-solver traces and counters byte-identical."""
+        with self._lock:
+            if not self._solver_stack:
+                return
+            span = self._solver_stack[-1]
+            sst = self.stats.solver(span.name)
+            sst.calls += 1
+            sst.panel_calls += 1
+            rst = self.stats.routine(f"{prec}getf2")
+            rst.calls += 1
+            rst.on_host += 1
+            if self.trace is not None:
+                bid = self._trace_id(a, "P")
+                el = a.dtype.itemsize
+                from repro.core.trace import BlasCall
+                self.trace.calls.append(BlasCall(
+                    routine=f"{prec}getf2", m=m, n=nb, k=0,
+                    operands=(("P", bid, m * nb * el, float(nb), True),),
+                    solver_id=span.span_id))
 
     def resident_bytes(self) -> int:
         return self.placements.resident_bytes
@@ -1440,11 +1568,17 @@ class OffloadRuntime:
                                    call.batch),
                          dt, decision.offload, venue=decision.venue,
                          precision=decision.precision)
+        solver_id = ""
+        if self._solver_stack:
+            span = self._solver_stack[-1]
+            solver_id = span.span_id
+            self.stats.solver(span.name).calls += 1
         self._record_trace(call.routine, call.m, call.n, call.k,
                            call.operands, out, call.batch, devices,
                            site_id=call.site_id, seconds=dt,
                            venue=decision.venue,
-                           precision=decision.precision)
+                           precision=decision.precision,
+                           solver_id=solver_id)
         if self.debug >= 2:
             where = "host" if not decision.offload else (
                 f"shard[{len(devices)} tiles]" if devices else
@@ -1491,7 +1625,7 @@ class OffloadRuntime:
     def _record_trace(self, routine, m, n, k, operands, out, batch,
                       devices=(), site_id: str = "",
                       seconds: float = 0.0, venue: str = "",
-                      precision: str = "") -> None:
+                      precision: str = "", solver_id: str = "") -> None:
         if self.trace is None:
             return
         ops = []
@@ -1516,7 +1650,7 @@ class OffloadRuntime:
             operands=tuple(ops), devices=tuple(devices),
             callsite_id=site_id, seconds=seconds,
             out_buf=out_buf, out_nbytes=out_nbytes, venue=venue,
-            precision=precision))
+            precision=precision, solver_id=solver_id))
 
 
 # --------------------------------------------------------------------- #

@@ -120,6 +120,10 @@ class Session:
         self.pool = pool
         self.runtime = None      # type: Optional[object]
         self._traced_dumped = False
+        # whether this session holds a LAPACK-tier patch reference
+        # (config.lapack + intercept): jnp.linalg / jax.scipy.linalg
+        # factorizations routed onto the repro.solvers drivers
+        self._lapack_patched = False
 
     # ------------------------------------------------------------------ #
     # lifecycle                                                           #
@@ -148,6 +152,10 @@ class Session:
         rt.activate(self.runtime)
         if self.intercept:
             icp.patch_symbols()
+            if self.config.lapack:
+                from repro.solvers import intercept as slv
+                slv.patch_symbols()
+                self._lapack_patched = True
         _ensure_atexit()
         return self
 
@@ -170,6 +178,10 @@ class Session:
             if self in _OPEN:
                 _OPEN.remove(self)
         if self.intercept:
+            if self._lapack_patched:
+                from repro.solvers import intercept as slv
+                slv.unpatch_symbols()
+                self._lapack_patched = False
             icp.unpatch_symbols()
         # the innermost remaining session's runtime is the dispatch
         # target again; with none left, dispatch deactivates entirely.
@@ -279,9 +291,20 @@ class Session:
         config.
         """
         self._require_open()
+        was_lapack = self.config.lapack
         new = self.config.replace(**kw)
         self.runtime.apply_config(new)
         self.config = new
+        # the LAPACK-tier patch follows the flag: flipping it mid-run
+        # (re)patches or releases this session's reference
+        if self.intercept and new.lapack != was_lapack:
+            from repro.solvers import intercept as slv
+            if new.lapack and not self._lapack_patched:
+                slv.patch_symbols()
+                self._lapack_patched = True
+            elif not new.lapack and self._lapack_patched:
+                slv.unpatch_symbols()
+                self._lapack_patched = False
         return new
 
     # ------------------------------------------------------------------ #

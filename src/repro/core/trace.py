@@ -71,6 +71,10 @@ class BlasCall:
     # attempted scheme here — the ``escalate`` trace event carries the
     # rest of the story.
     precision: str = ""
+    # the solver span this call ran inside ("<solver>#<seq>", e.g.
+    # "getrf#0"); stamped only by runs driving the LAPACK solver tier
+    # (repro.solvers), same byte-stability rule as ``venue``
+    solver_id: str = ""
 
     # ------------------------------------------------------------------ #
     @property
@@ -124,7 +128,15 @@ class BlasCall:
             del d["venue"]
         if not self.precision:
             del d["precision"]
+        if not self.solver_id:
+            del d["solver_id"]
         return d
+
+    @property
+    def solver(self) -> str:
+        """The solver name of the span this call ran inside ("" when
+        the call was not part of a solver span)."""
+        return self.solver_id.split("#", 1)[0] if self.solver_id else ""
 
 
 class Trace:
@@ -184,7 +196,7 @@ class Trace:
 
     def gemm(self, prec: str, m: int, n: int, k: int,
              a: int, b: int, c: int, batch: int = 1,
-             site: str = "") -> None:
+             site: str = "", solver: str = "") -> None:
         el = _ELEM[prec]
         self.calls.append(BlasCall(
             routine=f"{prec}gemm", m=m, n=n, k=k, batch=batch,
@@ -192,17 +204,18 @@ class Trace:
                 ("A", a, m * k * el, float(n), False),
                 ("B", b, k * n * el, float(m), False),
                 ("C", c, m * n * el, 1.0, True),
-            ), callsite_id=site))
+            ), callsite_id=site, solver_id=solver))
 
     def trsm(self, prec: str, m: int, n: int,
-             a: int, b: int, batch: int = 1, site: str = "") -> None:
+             a: int, b: int, batch: int = 1, site: str = "",
+             solver: str = "") -> None:
         el = _ELEM[prec]
         self.calls.append(BlasCall(
             routine=f"{prec}trsm", m=m, n=n, k=0, batch=batch,
             operands=(
                 ("A", a, m * m * el, float(n), False),
                 ("B", b, m * n * el, float(m), True),
-            ), callsite_id=site))
+            ), callsite_id=site, solver_id=solver))
 
     def syrk(self, prec: str, n: int, k: int,
              a: int, c: int, batch: int = 1, site: str = "") -> None:
@@ -214,12 +227,14 @@ class Trace:
                 ("C", c, n * n * el, 1.0, True),
             ), callsite_id=site))
 
-    def panel(self, prec: str, m: int, nb: int, a: int) -> None:
+    def panel(self, prec: str, m: int, nb: int, a: int,
+              solver: str = "") -> None:
         """Unblocked LU panel factorization (getf2) — host-only work."""
         el = _ELEM[prec]
         self.calls.append(BlasCall(
             routine=f"{prec}getf2", m=m, n=nb, k=0,
-            operands=(("P", a, m * nb * el, float(nb), True),)))
+            operands=(("P", a, m * nb * el, float(nb), True),),
+            solver_id=solver))
 
     def symm(self, prec: str, m: int, n: int,
              a: int, b: int, c: int, batch: int = 1) -> None:

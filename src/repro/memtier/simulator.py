@@ -114,6 +114,14 @@ class PolicyReport:
     escalations: int = 0
     precision_ratio: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # solver-span replay (repro.solvers): spans tallied off the trace's
+    # ``solver_begin`` events, per-solver call/panel counters off each
+    # call's ``solver_id`` tag — a live LAPACK-tier run and its replay
+    # agree on these exactly.  Both stay at their defaults replaying a
+    # span-free (default-off) trace.
+    solver_spans: int = 0
+    per_solver: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
     total_s: float = 0.0
     blas_device_s: float = 0.0
     blas_host_s: float = 0.0
@@ -670,6 +678,25 @@ class MemTierSimulator:
         # the residual checks already ran live, so live == replay
         self.report.escalations = trace.event_count("escalate",
                                                     session=ses)
+        # solver spans come straight off the recorded events and the
+        # per-call solver_id tags — the drivers already ran live, so a
+        # LAPACK-tier run replays to its exact per-solver counters
+        for ev in trace.events:
+            if ev.kind == "solver_begin" and (
+                    not self.session or ev.session == self.session):
+                slot = self.report.per_solver.setdefault(
+                    ev.store.split("#", 1)[0],
+                    {"spans": 0, "calls": 0, "panel_calls": 0})
+                slot["spans"] += 1
+                self.report.solver_spans += 1
+        for call in trace:
+            if call.solver_id:
+                slot = self.report.per_solver.setdefault(
+                    call.solver,
+                    {"spans": 0, "calls": 0, "panel_calls": 0})
+                slot["calls"] += 1
+                if call.routine.endswith("getf2"):
+                    slot["panel_calls"] += 1
         return self.report
 
     # convenience: residency of a trace buffer after the run

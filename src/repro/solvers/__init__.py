@@ -1,0 +1,32 @@
+"""LAPACK-tier solver subsystem (paper §4.2's real workload shape).
+
+The paper's headline wins come from applications whose hot loops are
+*LAPACK* calls — MuST/LSMS's ``zgetrf``/``zgetrs``, Cholesky, dense
+eigensolves — whose panel updates are exactly the gemm/trsm/syr2k
+stream SCILIB-Accel offloads.  This package makes that tier a
+first-class citizen of the runtime:
+
+* :mod:`repro.solvers.drivers` — span-wrapped factorization/solve
+  drivers over :mod:`repro.core.lapack` (getrf/getrs/gesv/potrf/potrs)
+  and :mod:`repro.solvers.eigen` (syev).  Each driver opens a *solver
+  span* on the active runtime: the in-place factor buffer is pinned on
+  the device tier for the span's lifetime (the ~780x-reuse pattern),
+  every inner BLAS call is stamped with the span's ``solver_id``, and
+  per-solver statistics (calls, panel fraction, moved bytes, seconds)
+  accumulate in the runtime report.
+* :mod:`repro.solvers.eigen` — blocked one-stage Hermitian
+  tridiagonalization (sytrd: latrd panels + syr2k/her2k trailing
+  updates), a small host tridiagonal eigensolve, and a compact-WY
+  blocked back-transform.
+* :mod:`repro.solvers.intercept` — trampolines over
+  ``jnp.linalg.cholesky/solve`` (+ ``lu`` where present) and
+  ``jax.scipy.linalg.lu_factor/lu_solve/cho_factor/cho_solve/
+  solve_triangular/eigh``, gated exactly like the matmul interception
+  (eager super-threshold arrays under an active runtime).  Enabled per
+  session by ``OffloadConfig.lapack`` (``SCILIB_LAPACK=1``); block
+  size via ``lapack_nb`` (``SCILIB_LAPACK_NB``).
+"""
+from repro.solvers.drivers import (gesv, getrf, getrs, potrf, potrs,
+                                   syev)
+
+__all__ = ["getrf", "getrs", "gesv", "potrf", "potrs", "syev"]

@@ -53,8 +53,12 @@ DEFAULT_EVICTS = ("lru", "lfu", "refetch")
 
 #: the comparison point: the paper's conservative default configuration
 #: (policy, threshold, n_devices, device_bytes cap, eviction policy,
-#: kernel path, precision scheme).
-BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1, None, "lru", False, "")
+#: kernel path, precision scheme, LAPACK block size).
+BASELINE = ("dfu", thr.DEFAULT_THRESHOLD, 1, None, "lru", False, "", 0)
+
+#: LU block sizes swept when the trace carries solver spans (0 = as
+#: recorded, i.e. whatever ``nb`` the run factored with).
+DEFAULT_LAPACK_NBS = (0, 64, 128, 256)
 
 
 def _fmt_threshold(t: float) -> str:
@@ -72,7 +76,7 @@ def _fmt_cap(cap: Optional[int]) -> str:
 @dataclasses.dataclass
 class GridPoint:
     """One simulated (policy, threshold, n_devices, cap, evict, kernel,
-    precision) config."""
+    precision, lapack_nb) config."""
 
     policy: str
     threshold: float
@@ -82,12 +86,13 @@ class GridPoint:
     evict: str = "lru"
     kernel: bool = False    # SCILIB_KERNELS: the pallas dispatch venue
     precision: str = ""     # SCILIB_PRECISION: the split-emulation scheme
+    lapack_nb: int = 0      # SCILIB_LAPACK_NB: LU block size (0 = as run)
 
     @property
     def config(self) -> Tuple:
         return (self.policy, self.threshold, self.n_devices,
                 self.device_bytes, self.evict, self.kernel,
-                self.precision)
+                self.precision, self.lapack_nb)
 
     @property
     def total_s(self) -> float:
@@ -111,6 +116,9 @@ class GridPoint:
             settings["SCILIB_KERNELS"] = "1"
         if self.precision:
             settings["SCILIB_PRECISION"] = self.precision
+        if self.lapack_nb:
+            settings["SCILIB_LAPACK"] = "1"
+            settings["SCILIB_LAPACK_NB"] = str(self.lapack_nb)
         return settings
 
     def to_config(self):
@@ -124,7 +132,8 @@ class GridPoint:
             policy=self.policy, threshold=self.threshold,
             devices=self.n_devices,
             device_bytes=self.device_bytes, evict=self.evict,
-            kernel_path=self.kernel, precision=self.precision)
+            kernel_path=self.kernel, precision=self.precision,
+            lapack=bool(self.lapack_nb), lapack_nb=self.lapack_nb)
 
 
 @dataclasses.dataclass
@@ -152,10 +161,10 @@ class AutotuneResult:
         twin = [p for p in self.points
                 if p.device_bytes is not None
                 and (p.policy, p.threshold, p.n_devices, p.kernel,
-                     p.precision) ==
+                     p.precision, p.lapack_nb) ==
                     (self.best.policy, self.best.threshold,
                      self.best.n_devices, self.best.kernel,
-                     self.best.precision)
+                     self.best.precision, self.best.lapack_nb)
                 and p.total_s <= self.best.total_s * 1.02]
         if not twin:
             return None
@@ -166,13 +175,75 @@ def _simulate(trace: Trace, spec: HardwareSpec, policy: str,
               threshold: float, n_devices: int,
               device_bytes: Optional[int] = None,
               evict: str = "lru", kernel: bool = False,
-              precision: str = "") -> GridPoint:
+              precision: str = "", lapack_nb: int = 0) -> GridPoint:
+    # lapack_nb is a label only: the caller hands in the already-retiled
+    # trace (retile_lapack), the simulator itself is nb-oblivious.
     sim = MemTierSimulator(spec, policy=policy, threshold=threshold,
                            n_devices=n_devices, device_bytes=device_bytes,
                            evict=evict, kernel_path=kernel,
                            precision=precision)
     return GridPoint(policy, threshold, n_devices, sim.run(trace),
-                     device_bytes, evict, kernel, precision)
+                     device_bytes, evict, kernel, precision, lapack_nb)
+
+
+def _is_lu_span(call) -> bool:
+    return bool(call.solver_id) and call.solver in ("getrf", "gesv")
+
+
+def retile_lapack(trace: Trace, nb: int) -> Trace:
+    """Re-tile the trace's LU solver spans at block size ``nb``.
+
+    The blocked-LU call structure is fully determined by (n, nb): per
+    block a ``getf2`` panel, a ``trsm`` row-swap/solve of the panel's
+    U12, and the trailing ``gemm`` — so a recorded span can be
+    regenerated at any candidate ``nb`` without re-running the solver.
+    Factor-phase calls of each ``getrf``/``gesv`` span are replaced by
+    the re-tiled stream against the same factor buffer (preserving the
+    cross-span buffer reuse DFU feeds on); solve-phase trsms (their
+    ``m`` equals the matrix order — the factor trsms' ``m`` is the
+    block size) are nb-independent and copied through, as are
+    ``getrs``-only spans, non-solver calls, buffers and events.
+    ``nb == 0`` (or a span-free trace) returns the trace unchanged.
+    """
+    if not nb:
+        return trace
+    lu_spans: Dict[str, List] = {}
+    for c in trace:
+        if _is_lu_span(c):
+            lu_spans.setdefault(c.solver_id, []).append(c)
+    if not lu_spans:
+        return trace
+    out = Trace()
+    out.buffer_sizes = dict(trace.buffer_sizes)
+    out.buffer_names = dict(trace.buffer_names)
+    out._next_buf = trace._next_buf
+    out.events = list(trace.events)
+    emitted = set()
+    for c in trace:
+        sid = c.solver_id
+        if sid not in lu_spans:
+            out.calls.append(c)
+            continue
+        if sid in emitted:
+            continue
+        emitted.add(sid)
+        span = lu_spans[sid]
+        first = next(x for x in span if x.routine.endswith("getf2"))
+        prec = first.routine[0]
+        n = first.m                     # first panel spans all n rows
+        fbuf = first.operands[0][1]
+        for j0 in range(0, n, nb):
+            jb = min(nb, n - j0)
+            out.panel(prec, n - j0, jb, fbuf, solver=sid)
+            rem = n - j0 - jb
+            if rem > 0:
+                out.trsm(prec, jb, rem, fbuf, fbuf, solver=sid)
+                out.gemm(prec, rem, rem, jb, fbuf, fbuf, fbuf,
+                         solver=sid)
+        for x in span:
+            if x.routine.endswith("trsm") and x.m == n:
+                out.calls.append(x)     # getrs phase: nb-independent
+    return out
 
 
 def _cap_grid(device_bytes, baseline: GridPoint) -> List[Optional[int]]:
@@ -200,6 +271,7 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
              evicts: Sequence[str] = DEFAULT_EVICTS,
              kernels: Optional[Sequence[bool]] = None,
              precisions: Optional[Sequence[str]] = None,
+             lapack_nbs: Optional[Sequence[int]] = None,
              ) -> AutotuneResult:
     """Sweep the grid and pick the fastest point (moved bytes break ties).
 
@@ -224,6 +296,13 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
     escalating pays for the split passes *and* the native reruns; its
     trace is evidence the scheme does not fit, so the tuner refuses to
     recommend it.
+
+    The LAPACK block-size dimension (``SCILIB_LAPACK_NB``) is gated on
+    solver spans: only a trace whose LU factorizations were recorded
+    through the solver tier (``SCILIB_LAPACK=1``) can be re-tiled —
+    each candidate ``nb`` replays a :func:`retile_lapack` variant of
+    the trace, trading panel count against trailing-gemm size.
+    ``nb == 0`` (the baseline) replays the trace exactly as recorded.
     """
     if thresholds is None:
         thresholds = thr.threshold_grid(c.n_avg for c in trace)
@@ -238,6 +317,10 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
             precisions = ("",) + tuple(schemes)
         else:
             precisions = ("",)
+    if lapack_nbs is None:
+        lapack_nbs = (DEFAULT_LAPACK_NBS
+                      if any(_is_lu_span(c) for c in trace) else (0,))
+    retiled = {lnb: retile_lapack(trace, lnb) for lnb in set(lapack_nbs)}
     baseline = _simulate(trace, spec, *BASELINE)
     caps = _cap_grid(device_bytes, baseline)
     points: List[GridPoint] = [baseline]
@@ -250,12 +333,14 @@ def autotune(trace: Trace, *, spec: HardwareSpec = SPECS["gh200"],
                     for ev in (evicts if cap is not None else ["lru"]):
                         for kern in kernels:
                             for prc in precisions:
-                                cfg = (policy, float(t), nd, cap, ev,
-                                       bool(kern), str(prc))
-                                if cfg == BASELINE:
-                                    continue    # already simulated
-                                points.append(
-                                    _simulate(trace, spec, *cfg))
+                                for lnb in lapack_nbs:
+                                    cfg = (policy, float(t), nd, cap, ev,
+                                           bool(kern), str(prc),
+                                           int(lnb))
+                                    if cfg == BASELINE:
+                                        continue    # already simulated
+                                    points.append(_simulate(
+                                        retiled[lnb], spec, *cfg))
     # fastest first; among points within 2% of it, least movement wins —
     # a config that moves gigabytes for a sub-noise predicted gain is
     # not a recommendation.  Uncapped points precede capped twins in the
@@ -274,6 +359,7 @@ def _grid_row(p: GridPoint, mark: str = "") -> str:
             f"{p.n_devices:>6}{_fmt_cap(p.device_bytes):>8}"
             f"{p.evict:>9}{('on' if p.kernel else '-'):>6}"
             f"{(p.precision or '-'):>8}"
+            f"{(str(p.lapack_nb) if p.lapack_nb else '-'):>5}"
             f"{p.total_s:>10.4f}"
             f"{p.moved_bytes / 1e9:>10.3f}"
             f"{p.report.offloaded_calls:>9}"
@@ -282,7 +368,7 @@ def _grid_row(p: GridPoint, mark: str = "") -> str:
 
 def format_grid(result: AutotuneResult, top: int = 12) -> str:
     lines = [f"{'policy':<9}{'threshold':>10}{'ndev':>6}{'cap':>8}"
-             f"{'evict':>9}{'kern':>6}{'prec':>8}{'pred_s':>10}"
+             f"{'evict':>9}{'kern':>6}{'prec':>8}{'nb':>5}{'pred_s':>10}"
              f"{'moved_GB':>10}{'offload':>9}{'evict#':>7}"]
     ranked = sorted(result.points,
                     key=lambda p: (p.total_s, p.moved_bytes))[:top]
@@ -403,6 +489,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "escalation rate exceeded 10%%), 'off' pins "
                          "native, or a comma list of schemes (e.g. "
                          "split2,split3)")
+    ap.add_argument("--lapack-nb", default="auto",
+                    help="sweep the SCILIB_LAPACK_NB (LU block size) "
+                         "dimension: 'auto' sweeps "
+                         f"{','.join(str(v) for v in DEFAULT_LAPACK_NBS if v)} "
+                         "when the trace carries solver spans, 'off' "
+                         "pins the recorded tiling, or a comma list of "
+                         "block sizes (0 = as recorded)")
     ap.add_argument("--top", type=int, default=12,
                     help="grid rows to print")
     ap.add_argument("--emit-config", metavar="PATH", default="",
@@ -425,13 +518,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     else:
         precisions = ("",) + tuple(
             p for p in args.precision.split(",") if p and p != "native")
+    if args.lapack_nb == "auto":
+        lapack_nbs = None
+    elif args.lapack_nb == "off":
+        lapack_nbs = (0,)
+    else:
+        lapack_nbs = (0,) + tuple(
+            v for v in _parse_ints(args.lapack_nb) if v)
     result = autotune(trace, spec=SPECS[args.spec],
                       policies=tuple(args.policies.split(",")),
                       thresholds=thresholds,
                       device_counts=_parse_ints(args.devices),
                       device_bytes=device_bytes,
                       evicts=tuple(args.evict.split(",")),
-                      kernels=kernels, precisions=precisions)
+                      kernels=kernels, precisions=precisions,
+                      lapack_nbs=lapack_nbs)
     n_sites = len({c.callsite_id for c in trace if c.callsite_id})
     print(f"autotune: {len(result.points)}-point grid, spec={args.spec}, "
           f"{len(trace)} calls, {n_sites} sites, "

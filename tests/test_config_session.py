@@ -71,6 +71,8 @@ MATRIX = {
     "kernel_block": ("256", 256),
     "precision": ("split2", "split2"),
     "precision_rtol": ("1e-5", 1e-5),
+    "lapack": ("1", True),
+    "lapack_nb": ("96", 96),
 }
 
 
